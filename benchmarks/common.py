@@ -1,0 +1,39 @@
+"""Shared benchmark utilities + the benchmark graph suite.
+
+SNAP datasets aren't available offline; the suite mirrors the *roles* of
+the paper's three graphs (Figure 1) at CPU-tractable scale:
+  webBerk-like : dense web-ish RMAT (high clustering, heavy tail)
+  skitter-like : sparser RMAT
+  lj-like      : preferential-attachment (BA) graph
+Sizes are chosen so exact q5 is computable on one CPU core in seconds —
+the point is validating the *system*, not racing Hadoop.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.graphs import barabasi_albert, rmat
+
+
+def bench_suite():
+    return [
+        rmat(10, edge_factor=16, a=0.65, b=0.15, c=0.15, seed=7,
+             name="webBerk-like"),
+        rmat(11, edge_factor=8, seed=11, name="skitter-like"),
+        barabasi_albert(3000, 10, seed=13, name="lj-like"),
+    ]
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """CSV row: name,us_per_call,derived (per the harness contract)."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

@@ -1,0 +1,69 @@
+"""Paper Figure 6: the curse of the last reducer — and its cure.
+
+(a) cost-distribution tail: slowest unit vs the x-th slowest (Fig 6b of
+    the paper);
+(b) per-worker imbalance after LPT *without* the split round — at 64+
+    workers a single heavy G⁺(u) dominates and imbalance explodes,
+    which is precisely the paper's observation;
+(c) the §6 split round applied with a worker-count-aware threshold
+    (max unit cost ≤ total/W): imbalance returns to ~1, global work
+    unchanged — the paper's space-for-time trade, executed.
+"""
+import numpy as np
+
+from repro.core import build_oriented, build_plan
+from repro.core.plan import balance_report, unit_cost
+from repro.core.split import split_heavy
+
+from .common import bench_suite, emit
+
+
+def _split_imbalance(og, k: int, n_workers: int) -> tuple[float, int]:
+    plan = build_plan(og, k)
+    d = og.out_deg[og.out_deg >= k - 1].astype(np.float64)
+    costs = d ** (k - 1)
+    target = max(costs.sum() / n_workers, 1.0)
+    # threshold: largest degree whose unit cost stays under the target
+    thr = max(int(target ** (1.0 / (k - 1))), k - 1)
+    light_plan, splits = split_heavy(plan, og, k, thr)
+    # unit costs after split: light d^{k-1}; split units D_parent^{k-2}
+    unit_costs = []
+    for b in light_plan.buckets:
+        real = b.nodes[:b.n_real]
+        unit_costs.extend(unit_cost(og.out_deg[real], k).tolist())
+    n_split_units = 0
+    for sp in splits:
+        real = sp.nodes[:sp.n_real]
+        unit_costs.extend(
+            (og.out_deg[np.maximum(real, 0)].astype(np.float64)
+             ** (k - 2)).tolist())
+        n_split_units += sp.n_real
+    unit_costs = np.sort(np.array(unit_costs))[::-1]
+    loads = np.zeros(n_workers)
+    for c in unit_costs:                       # LPT
+        loads[np.argmin(loads)] += c
+    return float(loads.max() / max(loads.mean(), 1e-9)), n_split_units
+
+
+def main() -> None:
+    for g in bench_suite():
+        og = build_oriented(g)
+        k = 5
+        plan = build_plan(og, k)
+        costs = np.sort(unit_cost(og.out_deg[og.out_deg >= k - 1], k))
+        slowest = costs[-1]
+        ratios = {x: float(slowest / costs[-x])
+                  for x in (10, 100, 1000) if len(costs) >= x}
+        emit(f"fig6a/{g.name}", 0.0,
+             ";".join(f"slowest/x{x}={r:.1f}" for x, r in ratios.items()))
+        for w in (8, 64, 256):
+            rep = balance_report(plan, og, w)
+            post, n_units = _split_imbalance(og, k, w)
+            emit(f"fig6b/{g.name}/w{w}", 0.0,
+                 f"imbalance_no_split={rep['imbalance']:.2f};"
+                 f"imbalance_with_split={post:.2f};"
+                 f"split_units={n_units}")
+
+
+if __name__ == "__main__":
+    main()

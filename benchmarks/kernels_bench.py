@@ -1,0 +1,37 @@
+"""Kernel micro-benchmarks: jnp reference vs Pallas(interpret) counting
+path, plus analytic MXU utilization of the kernel's matmul shapes.
+
+On CPU the interpret-mode wall time is meaningless for TPU; the derived
+column therefore reports the *analytic* kernel FLOPs and the VMEM
+working set per tile — the numbers the §Roofline section uses.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.count import dag_count
+from repro.kernels.cliques import kernel_bytes, kernel_flops
+from repro.kernels.cliques.ops import pick_tile
+
+from .common import emit, timed
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for D in (128, 256, 512):
+        B = max(1, 1 << 22 >> (2 * int(np.log2(D))))
+        A = jnp.asarray(
+            np.triu((rng.random((B, D, D)) < 0.2), 1).astype(np.float32))
+        for r in (2, 3, 4):
+            out, dt = timed(lambda: dag_count(A, r).block_until_ready(),
+                            repeat=2)
+            fl = kernel_flops(B, D, r)
+            tb = pick_tile(D)
+            vmem = tb * D * D * 4 / 2 ** 20
+            emit(f"kernels/dag_count/D{D}/r{r}", dt,
+                 f"B={B};flops={fl:.2e};tile_b={tb};"
+                 f"vmem_tile_MiB={vmem:.1f};"
+                 f"intensity={fl / kernel_bytes(B, D):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+One row per (arch × shape × mesh): the three terms, the bottleneck, and
+the roofline fraction — the §Roofline source of truth.
+"""
+import glob
+import json
+import os
+
+from .common import emit
+
+
+def main() -> None:
+    root = os.path.join(os.path.dirname(__file__), "..",
+                        "experiments", "dryrun")
+    files = sorted(glob.glob(os.path.join(root, "*.json")))
+    if not files:
+        emit("roofline/none", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        d = json.load(open(f))
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if not d.get("runnable", True):
+            emit(f"roofline/{tag}", 0.0, "SKIP")
+            continue
+        if d.get("status") != "ok":
+            emit(f"roofline/{tag}", 0.0, f"ERROR {d.get('error','')[:60]}")
+            continue
+        r = d["roofline"]
+        dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{tag}", dom,
+             f"compute={r['compute_s']:.3f};memory={r['memory_s']:.3f};"
+             f"collective={r['collective_s']:.3f};"
+             f"bottleneck={r['bottleneck']};"
+             f"frac={r['roofline_fraction']:.3f};"
+             f"useful={r['useful_ratio']:.3f};"
+             f"peakGiB={d['memory']['peak_per_device_gib'] * d['roofline']['n_devices']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Select with --only substring;
+--fast skips the multi-process scalability sweep.
+"""
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.table1_stats",      # paper Figure 1
+    "benchmarks.fig2_time_accuracy",  # paper Figure 2
+    "benchmarks.fig3_rounds",       # paper Figure 3
+    "benchmarks.fig4_subgraph_sizes",  # paper Figure 4
+    "benchmarks.fig5_scalability",  # paper Figure 5
+    "benchmarks.fig6_stragglers",   # paper Figure 6
+    "benchmarks.table_mrc",         # Theorem 1 bounds
+    "benchmarks.kernels_bench",     # kernel layer
+    "benchmarks.roofline_report",   # §Roofline table
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for mod in MODULES:
+        if args.only and args.only not in mod:
+            continue
+        if args.fast and "fig5" in mod:
+            continue
+        t0 = time.time()
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:  # noqa: BLE001
+            print(f"{mod},0,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {mod} done in {time.time() - t0:.1f}s", file=sys.stderr,
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

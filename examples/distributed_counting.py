@@ -1,0 +1,45 @@
+"""Distributed clique counting across workers + fault-tolerant rounds.
+
+Run with several fake devices to exercise the real shard_map path:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/distributed_counting.py
+"""
+import jax
+
+from repro.core import clique_count_bruteforce
+from repro.core.distributed import count_cliques_distributed
+from repro.graphs import rmat
+from repro.runtime.faults import FaultDomain, RoundScheduler
+
+g = rmat(10, 12, seed=3)
+print(f"graph: n={g.n} m={g.m}; devices={jax.device_count()}")
+
+# --- exact, distributed over all local devices ---------------------------
+res = count_cliques_distributed(g, 4)
+print(f"q_4 = {res.count} on {res.n_workers} workers "
+      f"(LPT imbalance {res.balance['imbalance']:.3f})")
+
+# --- §6 split round: cap the heaviest reducer -----------------------------
+res_split = count_cliques_distributed(g, 4, split_threshold=64)
+assert res_split.count == res.count
+print(f"split round (threshold 64): same count, "
+      f"heavy subgraphs rerouted as (node, pivot) units")
+
+# --- sampled, bit-identical under any worker count ------------------------
+e = count_cliques_distributed(g, 5, method="color_smooth", colors=8,
+                              seed=5)
+print(f"SIC_5 estimate = {e.estimate:.0f} "
+      f"(per-round bytes: {e.per_round_bytes})")
+
+# --- fault-tolerant round execution ---------------------------------------
+faults = FaultDomain(fail_at=(1,), max_retries=2)   # unit 1 fails once
+sched = RoundScheduler(faults=faults)
+units = [(f"k{k}", (lambda kk: (lambda:
+          count_cliques_distributed(g, kk).count))(k)) for k in (3, 4)]
+out = sched.run_round(units)
+print("fault-injected round results:", out,
+      f"(calls incl. retries: {faults.calls})")
+bf = clique_count_bruteforce(g, 3)
+assert out["k3"] == bf
+print("verified against brute force:", bf)

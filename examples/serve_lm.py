@@ -1,0 +1,31 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import init_params
+from repro.serving.engine import Engine
+
+for arch in ("mamba2-370m", "mixtral-8x7b"):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params)
+    shape = ShapeConfig("serve", 32, 4, "train")
+    batch = next(make_pipeline(cfg, shape, seed=7))
+    batch = {k: v for k, v in batch.items()
+             if k not in ("targets", "mask")}
+    t0 = time.perf_counter()
+    out = eng.generate(batch, max_new_tokens=12)
+    dt = time.perf_counter() - t0
+    print(f"{arch}: generated {out.shape} in {dt:.2f}s; "
+          f"greedy tokens of seq 0: {out[0].tolist()}")
+    out2 = eng.generate(batch, max_new_tokens=12)
+    assert np.array_equal(out, out2), "greedy decode must be deterministic"
+print("serving OK")

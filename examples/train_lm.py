@@ -1,0 +1,54 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on the synthetic pipeline, with checkpoint/restart.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+(~100M params: d_model 512, 8 layers, vocab 32000 — a scaled tinyllama;
+on this 1-core CPU container expect ~1-2 steps/s at seq 256.)
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import make_pipeline
+from repro.models import init_params
+from repro.training.loop import Trainer
+from repro.training.optimizer import OptConfig, init_opt_state
+from repro.training.train_step import make_train_step
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--seq", type=int, default=256)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--workdir", default=None)
+args = ap.parse_args()
+
+cfg = dataclasses.replace(
+    get_smoke_config("tinyllama-1.1b"), name="llama-100m",
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+    d_ff=1536, vocab_size=32000)
+print(f"model: {cfg.name}, params ≈ {cfg.param_count() / 1e6:.0f}M")
+
+params = init_params(cfg, jax.random.PRNGKey(0))
+oc = OptConfig(lr=3e-4, warmup_steps=args.steps // 10,
+               total_steps=args.steps)
+step = jax.jit(make_train_step(cfg, oc, remat="none"))
+shape = ShapeConfig("ex", args.seq, args.batch, "train")
+workdir = args.workdir or tempfile.mkdtemp(prefix="repro_train_")
+tr = Trainer(cfg, step, make_pipeline(cfg, shape, seed=0), workdir,
+             ckpt_every=100)
+
+params2, opt2, start = tr.resume(params, init_opt_state(params))
+if start:
+    print(f"resuming from checkpoint at step {start}")
+params2, opt2, end = tr.fit(params2, opt2, args.steps, start_step=start)
+
+import json
+losses = [json.loads(l)["loss"] for l in open(tr.metrics_path)]
+print(f"steps {start}..{end}: loss {losses[0]:.3f} → {losses[-1]:.3f}")
+print(f"checkpoints + metrics under {workdir}")
+assert losses[-1] < losses[0], "loss should decrease"

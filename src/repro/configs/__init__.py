@@ -1,0 +1,10 @@
+from .base import (SHAPES, ModelConfig, ParallelConfig, ShapeConfig,
+                   cell_is_runnable, round_up)
+from .registry import (all_cells, get_config, get_shape, get_smoke_config,
+                       list_archs)
+
+__all__ = [
+    "SHAPES", "ModelConfig", "ParallelConfig", "ShapeConfig",
+    "cell_is_runnable", "round_up", "all_cells", "get_config", "get_shape",
+    "get_smoke_config", "list_archs",
+]

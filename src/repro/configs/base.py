@@ -1,0 +1,183 @@
+"""Config system: model configs, input-shape configs, parallelism configs.
+
+Every assigned architecture is a :class:`ModelConfig`; every benchmark
+shape is a :class:`ShapeConfig`; the mesh/parallelism choices live in
+:class:`ParallelConfig`. Configs are frozen dataclasses — hashable, so
+they key jit caches safely.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+def round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 → d_model // n_heads
+    # --- attention flavor ---
+    attn_bias: bool = False         # qwen-style QKV bias
+    rope_theta: float = 10000.0
+    sliding_window: int = 0         # 0 = full causal attention
+    parallel_block: bool = False    # command-r: x + attn(n(x)) + mlp(n(x))
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # --- MoE ---
+    n_experts: int = 0
+    n_experts_per_tok: int = 0
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 2.0
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    d_inner: int = 0                # 0 → 2 * d_model
+    conv_width: int = 4
+    ssd_chunk: int = 128
+    # --- hybrid (hymba): parallel attention + SSM heads per layer ---
+    hybrid: bool = False
+    # --- encoder-decoder (whisper) ---
+    encoder_layers: int = 0
+    cross_attention: bool = False
+    max_source_positions: int = 0   # whisper: 1500 frames
+    # --- VLM (internvl): precomputed patch-embedding prefix ---
+    n_vision_tokens: int = 0
+    vision_embed_dim: int = 0       # frontend stub emits this dim
+    # --- misc ---
+    tie_embeddings: bool = False
+    dtype: str = "bfloat16"
+    source: str = ""                # provenance tag from the assignment
+
+    # ---- derived ----
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 128 so TP sharding always divides."""
+        return round_up(self.vocab_size, 128)
+
+    @property
+    def dinner(self) -> int:
+        return self.d_inner or 2 * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.ssm_heads or max(1, self.dinner // self.ssm_head_dim)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k: SSM state and/or sliding window."""
+        return self.family in ("ssm", "hybrid") or self.sliding_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (drives MODEL_FLOPS in the roofline)."""
+        D, F, V, L = self.d_model, self.d_ff, self.padded_vocab, self.n_layers
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if not self.attention_free:
+            if self.use_mla:
+                qdim = self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+                per_layer += D * qdim                       # W_q
+                per_layer += D * (self.kv_lora_rank + self.qk_rope_dim)
+                per_layer += self.kv_lora_rank * self.n_heads * (
+                    self.qk_nope_dim + self.v_head_dim)     # W_uk, W_uv
+                per_layer += self.n_heads * self.v_head_dim * D
+            else:
+                qk = self.hd * (self.n_heads + 2 * self.n_kv_heads)
+                per_layer += D * qk + self.n_heads * self.hd * D
+        if self.family in ("ssm",) or self.hybrid:
+            di, N, H = self.dinner, self.ssm_state, self.n_ssm_heads
+            per_layer += D * (2 * di + 2 * N + H)           # in_proj
+            per_layer += self.conv_width * (di + 2 * N)     # conv
+            per_layer += di * D + 2 * H                     # out_proj, A, D
+        if self.n_experts:
+            per_layer += D * self.n_experts                 # router
+            per_layer += 3 * D * self.moe_d_ff * (
+                self.n_experts + self.n_shared_experts)
+        else:
+            per_layer += 3 * D * F                          # gated MLP
+        total = emb + L * per_layer + D
+        if self.encoder_layers:
+            enc = self.encoder_layers * (4 * D * D + 3 * D * F)
+            dec_cross = L * 4 * D * D
+            total += enc + dec_cross + self.max_source_positions * D
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed-to experts)."""
+        if not self.n_experts:
+            return self.param_count()
+        full = self.param_count()
+        all_experts = self.n_layers * 3 * self.d_model * self.moe_d_ff \
+            * self.n_experts
+        active = self.n_layers * 3 * self.d_model * self.moe_d_ff \
+            * self.n_experts_per_tok
+        return int(full - all_experts + active)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelConfig:
+    """How the mesh axes are used.
+
+    dp_axes: batch/FSDP axes; tp_axis: tensor-parallel axis. Sequence
+    parallelism shards the layer-scan carry over tp; the KV cache is
+    sequence-sharded over tp for decode (works for every kv-head count).
+    """
+    dp_axes: tuple[str, ...] = ("pod", "data")
+    tp_axis: str = "model"
+    fsdp_axis: str = "data"         # parameter/optimizer-state sharding
+    act_mode: str = "fsdp_seq"      # fsdp_seq | tp_sp | megatron
+    remat: str = "full"             # full | dots | none
+    moe_capacity_factor: float = 2.0
+    grad_accum: int = 1
+
+
+def cell_is_runnable(model: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """The brief's skip rule: long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not model.subquadratic:
+        return False, "SKIP: full quadratic attention at 512k context"
+    return True, ""

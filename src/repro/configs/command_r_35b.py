@@ -1,0 +1,24 @@
+"""command-r-35b — dense GQA, parallel block, no biases
+[hf:CohereForAI/c4ai-command-r-v01; unverified].
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000. Cohere's block
+is parallel-residual (x + attn(n(x)) + mlp(n(x))) with LayerNorm.
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-35b", family="dense", n_layers=40, d_model=8192,
+        n_heads=64, n_kv_heads=8, head_dim=128, d_ff=22528,
+        vocab_size=256000, parallel_block=True, norm="layernorm",
+        rope_theta=8_000_000.0, tie_embeddings=True,
+        source="hf:CohereForAI/c4ai-command-r-v01; unverified")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="command-r-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+        parallel_block=True, norm="layernorm", tie_embeddings=True,
+        source="smoke")

@@ -1,0 +1,30 @@
+"""deepseek-v2-lite-16b — MoE with MLA [arXiv:2405.04434; hf].
+
+27L d_model=2048 16H (MLA kv_lora=512) per-expert d_ff=1408, vocab=102400,
+64 routed experts top-6 + 2 shared. MLA: qk_nope=128 qk_rope=64 v=128;
+the KV cache stores only the 512-d latent + 64-d rope key per token.
+All layers are uniform MoE so the stack scans (the HF release's dense
+first layer is noted as a deviation in DESIGN.md).
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b", family="moe", n_layers=27,
+        d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128, d_ff=1408,
+        vocab_size=102400,
+        use_mla=True, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+        v_head_dim=128,
+        n_experts=64, n_experts_per_tok=6, n_shared_experts=2,
+        moe_d_ff=1408, source="arXiv:2405.04434; hf")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=32, vocab_size=512,
+        use_mla=True, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+        v_head_dim=16,
+        n_experts=8, n_experts_per_tok=2, n_shared_experts=1,
+        moe_d_ff=32, source="smoke")

@@ -1,0 +1,28 @@
+"""hymba-1.5b — hybrid parallel attention+SSM heads [arXiv:2411.13676; hf].
+
+32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001, ssm_state=16.
+Attention heads and Mamba heads run in parallel within each layer and
+their outputs are averaged (the paper's fused hybrid head). Most layers
+use sliding-window attention — we model the uniform-SWA variant (window
+1024) so the layer stack stays scan-able; meta-tokens are not modeled
+(noted in DESIGN.md).
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-1.5b", family="hybrid", n_layers=32, d_model=1600,
+        n_heads=25, n_kv_heads=5, head_dim=64, d_ff=5504, vocab_size=32001,
+        sliding_window=1024, hybrid=True,
+        ssm_state=16, d_inner=3200, ssm_heads=25, ssm_head_dim=128,
+        source="arXiv:2411.13676; hf")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="hymba-smoke", family="hybrid", n_layers=2, d_model=64,
+        n_heads=5, n_kv_heads=1, head_dim=16, d_ff=128, vocab_size=512,
+        sliding_window=16, hybrid=True,
+        ssm_state=8, d_inner=128, ssm_heads=4, ssm_head_dim=32,
+        source="smoke")

@@ -1,0 +1,25 @@
+"""internvl2-76b — VLM: InternViT frontend (stub) + 76B LM backbone
+[arXiv:2404.16821; unverified].
+
+80L d_model=8192 64H (GQA kv=8) d_ff=28672 vocab=128256. The vision
+frontend is a STUB per the brief: ``input_specs()`` provides precomputed
+patch embeddings (batch, 256, 3200); the model owns only the MLP
+projector (3200 → d_model) and prepends the projected patch tokens to
+the text sequence.
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b", family="vlm", n_layers=80, d_model=8192,
+        n_heads=64, n_kv_heads=8, head_dim=128, d_ff=28672,
+        vocab_size=128256, n_vision_tokens=256, vision_embed_dim=3200,
+        source="arXiv:2404.16821; unverified")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl-smoke", family="vlm", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+        n_vision_tokens=8, vision_embed_dim=48, source="smoke")

@@ -1,0 +1,23 @@
+"""mamba2-370m — attention-free SSD (state-space duality)
+[arXiv:2405.21060; unverified].
+
+48L d_model=1024 vocab=50280, ssm_state=128, d_inner=2048, head_dim=64
+(32 SSD heads). No attention, no MLP: each block is a Mamba-2 mixer.
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-370m", family="ssm", n_layers=48, d_model=1024,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=50280,
+        ssm_state=128, d_inner=2048, ssm_head_dim=64, tie_embeddings=True,
+        source="arXiv:2405.21060; unverified")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-smoke", family="ssm", n_layers=2, d_model=64,
+        n_heads=0, n_kv_heads=0, d_ff=0, vocab_size=512,
+        ssm_state=16, d_inner=128, ssm_head_dim=32, tie_embeddings=True,
+        ssd_chunk=16, source="smoke")

@@ -1,0 +1,23 @@
+"""mixtral-8x7b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088; hf].
+
+32L d_model=4096 32H (GQA kv=8) expert d_ff=14336 vocab=32000, window 4096.
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", family="moe", n_layers=32, d_model=4096,
+        n_heads=32, n_kv_heads=8, head_dim=128, d_ff=14336,
+        vocab_size=32000, sliding_window=4096,
+        n_experts=8, n_experts_per_tok=2, moe_d_ff=14336,
+        source="arXiv:2401.04088; hf")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke", family="moe", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=512,
+        sliding_window=16, n_experts=4, n_experts_per_tok=2, moe_d_ff=128,
+        source="smoke")

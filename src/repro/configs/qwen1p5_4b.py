@@ -1,0 +1,20 @@
+"""qwen1.5-4b — dense MHA with QKV bias [hf:Qwen/Qwen1.5-0.5B; hf].
+
+40L d_model=2560 20H (kv=20, i.e. full MHA) d_ff=6912 vocab=151936.
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen1.5-4b", family="dense", n_layers=40, d_model=2560,
+        n_heads=20, n_kv_heads=20, head_dim=128, d_ff=6912,
+        vocab_size=151936, attn_bias=True,
+        source="hf:Qwen/Qwen1.5-0.5B; hf")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen-smoke", family="dense", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512,
+        attn_bias=True, source="smoke")

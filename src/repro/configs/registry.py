@@ -1,0 +1,49 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+from __future__ import annotations
+
+from . import (command_r_35b, deepseek_v2_lite_16b, hymba_1p5b,
+               internvl2_76b, mamba2_370m, mixtral_8x7b, qwen1p5_4b,
+               tinyllama_1p1b, whisper_small, yi_6b)
+from .base import SHAPES, ModelConfig, ShapeConfig, cell_is_runnable
+
+_MODULES = {
+    "hymba-1.5b": hymba_1p5b,
+    "command-r-35b": command_r_35b,
+    "qwen1.5-4b": qwen1p5_4b,
+    "yi-6b": yi_6b,
+    "tinyllama-1.1b": tinyllama_1p1b,
+    "whisper-small": whisper_small,
+    "internvl2-76b": internvl2_76b,
+    "deepseek-v2-lite-16b": deepseek_v2_lite_16b,
+    "mixtral-8x7b": mixtral_8x7b,
+    "mamba2-370m": mamba2_370m,
+}
+
+
+def list_archs() -> list[str]:
+    return list(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {list_archs()}")
+    return _MODULES[arch].config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _MODULES[arch].smoke_config()
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """Every (arch, shape) cell with its runnability verdict."""
+    out = []
+    for a in list_archs():
+        cfg = get_config(a)
+        for s, shape in SHAPES.items():
+            ok, why = cell_is_runnable(cfg, shape)
+            out.append((a, s, ok, why))
+    return out

@@ -1,0 +1,28 @@
+"""whisper-small — encoder-decoder audio backbone [arXiv:2212.04356;
+unverified].
+
+12L (enc) + 12L (dec) d_model=768 12H d_ff=3072 vocab=51865. The conv
+frontend is a STUB per the brief: ``input_specs()`` provides precomputed
+frame embeddings (batch, 1500, d_model); the encoder is the transformer
+stack on top. RoPE replaces Whisper's learned absolute positions so the
+stack stays uniform (noted in DESIGN.md).
+"""
+from .base import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-small", family="encdec", n_layers=12, d_model=768,
+        n_heads=12, n_kv_heads=12, head_dim=64, d_ff=3072,
+        vocab_size=51865, attn_bias=True, norm="layernorm",
+        encoder_layers=12, cross_attention=True, max_source_positions=1500,
+        source="arXiv:2212.04356; unverified")
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="encdec", n_layers=2, d_model=64,
+        n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128, vocab_size=512,
+        attn_bias=True, norm="layernorm",
+        encoder_layers=2, cross_attention=True, max_source_positions=24,
+        source="smoke")

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: exact (SI_k) and sampled (SI_k^p,
+SIC_k) k-clique counting, decomposed into the three MapReduce rounds and
+re-expressed as TPU-native batched dense-linear-algebra stages.
+
+Public API:
+  count_cliques(graph, k, method=...)            — single host
+  distributed.count_cliques_distributed(...)     — shard_map engine
+"""
+from .count import CountResult, count_cliques, dag_count, dag_count_flops
+from .csr import OrientedGraph, build_oriented
+from .oracle import (clique_count_bruteforce, complete_graph_cliques,
+                     er_expected_cliques, triangle_count_matrix)
+from .order import check_lemma1, ranks
+from .plan import Plan, balance_report, build_plan, partition_for_workers
+
+__all__ = [
+    "CountResult", "count_cliques", "dag_count", "dag_count_flops",
+    "OrientedGraph", "build_oriented",
+    "clique_count_bruteforce", "complete_graph_cliques",
+    "er_expected_cliques", "triangle_count_matrix",
+    "check_lemma1", "ranks",
+    "Plan", "balance_report", "build_plan", "partition_for_workers",
+]

@@ -1,0 +1,232 @@
+"""Round 3 — (k−1)-clique counting in dense oriented adjacencies, plus the
+sampling estimators of Section 4.
+
+Counting identities (A is (B, D, D), strictly upper-triangular 0/1):
+
+  r=2:  q₂ = Σ A                      (edges)
+  r=3:  q₃ = Σ (AᵀA) ∘ A              (increasing triangles — one matmul)
+  r≥4:  pivot recursion: q_r(A) = Σ_v q_{r−1}(A ∘ (A[v] ⊗ A[v]))
+
+Each r-clique of the underlying graph appears exactly once as an
+increasing tuple, so no division by symmetry is needed. The same math is
+implemented as a Pallas TPU kernel in ``repro.kernels.cliques``; this
+module is the jnp reference path and the single-host estimator driver.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graphs.formats import Graph
+from .csr import OrientedGraph, build_oriented
+from .extract import DeviceCSR, extract_adjacency, to_device
+from .plan import Plan, build_plan
+from . import mrc as mrc_mod
+
+
+# --------------------------------------------------------------------------
+# counting identities
+# --------------------------------------------------------------------------
+
+def dag_count(A: jax.Array, r: int) -> jax.Array:
+    """Number of r-cliques in each DAG adjacency of the batch.
+
+    A: (B, D, D) float32, strictly upper-triangular. Returns (B,) float32.
+    """
+    assert r >= 2, "r=1 is a row popcount; handled by the split path"
+    if r == 2:
+        return jnp.sum(A, axis=(1, 2))
+    if r == 3:
+        return jnp.einsum("bji,bjk,bik->b", A, A, A, optimize=True)
+    D = A.shape[-1]
+
+    def body(v, acc):
+        row = jax.lax.dynamic_index_in_dim(A, v, axis=1, keepdims=False)
+        Bv = A * row[:, :, None] * row[:, None, :]
+        return acc + dag_count(Bv, r - 1)
+
+    # init carry derived from A so it inherits A's varying-manual-axes
+    # type under shard_map (a plain jnp.zeros would be "unvarying")
+    init = jnp.sum(A[:, 0, 0:1], axis=1) * 0.0
+    return jax.lax.fori_loop(0, D, body, init)
+
+
+def dag_count_flops(D: int, B: int, r: int) -> float:
+    """Analytic FLOPs of ``dag_count`` (roofline bookkeeping)."""
+    if r == 2:
+        return float(B) * D * D
+    if r == 3:
+        return 2.0 * B * D ** 3 + 2.0 * B * D * D
+    return D * (2.0 * B * D * D + dag_count_flops(D, B, r - 1))
+
+
+# --------------------------------------------------------------------------
+# sampling masks (Section 4)
+# --------------------------------------------------------------------------
+
+def _per_node_keys(key: jax.Array, nodes: jax.Array) -> jax.Array:
+    """Counter-based per-node keys: the same edge appearing in two
+    subgraphs G⁺(u), G⁺(u′) is (re)sampled independently — the property
+    the paper's Theorem 2 concentration proof relies on."""
+    return jax.vmap(lambda u: jax.random.fold_in(key, u))(
+        jnp.maximum(nodes, 0).astype(jnp.uint32))
+
+
+def edge_sample_mask(key: jax.Array, nodes: jax.Array, D: int,
+                     p: float) -> jax.Array:
+    """Bernoulli(p) mask over each node's candidate pairs (map 2 with
+    probability p)."""
+    ks = _per_node_keys(key, nodes)
+    return jax.vmap(
+        lambda k: jax.random.bernoulli(k, p, (D, D)))(ks).astype(jnp.float32)
+
+
+def color_mask(key: jax.Array, nodes: jax.Array, D: int,
+               n_colors: jax.Array) -> jax.Array:
+    """Monochromatic-pair mask: color Γ⁺(u) with c colors (per-u
+    independent coloring — unlike [27]'s single global coloring), keep
+    pairs with equal colors. ``n_colors`` is (B,) int32 to support the
+    smoothed variant (fewer colors for small neighborhoods)."""
+    ks = _per_node_keys(key, nodes)
+    unif = jax.vmap(lambda k: jax.random.uniform(k, (D,)))(ks)
+    colors = jnp.floor(unif * n_colors[:, None].astype(jnp.float32))
+    return (colors[:, :, None] == colors[:, None, :]).astype(jnp.float32)
+
+
+def smoothed_colors(out_deg: jax.Array, c: int, k: int) -> jax.Array:
+    """Smoothed color count (Section 5.1): "changes smoothly (up to the
+    given threshold c) according to the degree of the node, being smaller
+    for nodes with fewer neighbors".
+
+    We keep the expected number of *surviving pairs* at least on the
+    order of the pairs a (k−1)-clique needs: c_u = clip(d⁺(u)/(k−1), 1, c)
+    so low-degree nodes are sampled less aggressively. Unbiasedness is
+    preserved because the reducer rescales per-node by c_u^{k−2}.
+    """
+    cu = jnp.floor(out_deg.astype(jnp.float32) / float(max(k - 1, 1)))
+    return jnp.clip(cu, 1.0, float(c)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# the estimator driver (single host; the distributed engine wraps this)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CountResult:
+    k: int
+    method: str
+    estimate: float
+    per_node: Optional[np.ndarray]      # exact only: q_{u,k−1} per node
+    mrc: "mrc_mod.MRCStats"
+    plan_summary: dict
+    timings: dict
+    params: dict
+
+    @property
+    def count(self) -> int:
+        return int(round(self.estimate))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "n_iters", "r", "method",
+                                    "p", "c", "engine"))
+def _count_tile(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
+                capacity: int, n_iters: int, r: int, method: str,
+                p: float, c: int, engine: str) -> jax.Array:
+    """Extract + (optionally sample) + count one tile. Returns (B,) f32
+    per-node *rescaled* estimates."""
+    A, _ = extract_adjacency(csr, nodes, capacity=capacity, n_iters=n_iters)
+    scale = jnp.ones((nodes.shape[0],), jnp.float32)
+    if method == "edge":
+        mask = edge_sample_mask(key, nodes, capacity, p)
+        A = A * mask
+        scale = scale * np.float32(1.0 / p ** (r * (r - 1) / 2.0))
+    elif method in ("color", "color_smooth"):
+        deg = csr.out_deg[jnp.maximum(nodes, 0)]
+        if method == "color_smooth":
+            ncol = smoothed_colors(deg, c, r + 1)
+        else:
+            ncol = jnp.full(nodes.shape, c, jnp.int32)
+        A = A * color_mask(key, nodes, capacity, ncol)
+        scale = scale * ncol.astype(jnp.float32) ** np.float32(r - 1)
+    if engine == "pallas":
+        from ..kernels.cliques import ops as cliques_ops
+        counts = cliques_ops.dag_count_pallas(A, r)
+    else:
+        counts = dag_count(A, r)
+    return counts * scale
+
+
+def _tile_batches(nodes: np.ndarray, capacity: int,
+                  elem_budget: int = 1 << 23):
+    """Split a bucket's node list into tiles with B·D² ≤ budget."""
+    B = max(8, min(len(nodes), elem_budget // (capacity * capacity)))
+    B += (-B) % 8
+    for i in range(0, len(nodes), B):
+        tile = nodes[i:i + B]
+        if len(tile) < B:
+            tile = np.concatenate([tile, np.full(B - len(tile), -1,
+                                                 np.int32)])
+        yield tile
+
+
+def count_cliques(g: Graph, k: int, method: str = "exact",
+                  p: float = 0.1, colors: int = 10,
+                  seed: int = 0, engine: str = "jnp",
+                  return_per_node: bool = False,
+                  og: Optional[OrientedGraph] = None,
+                  plan: Optional[Plan] = None) -> CountResult:
+    """Count (exactly) or estimate the number of k-cliques of ``g``.
+
+    methods:
+      "exact"        — SI_k (Algorithm 1)
+      "edge"         — SI_k with Bernoulli(p) pair sampling (Section 4)
+      "color"        — SIC_k with c = ``colors`` (Section 4)
+      "color_smooth" — SIC_k with degree-smoothed color counts (Section 5)
+      "ni++"         — Node Iterator++ [34]; k must be 3 (2-round baseline)
+    engine: "jnp" reference path or "pallas" (interpret on CPU, MXU on TPU).
+    """
+    assert k >= 3
+    if method == "ni++":
+        assert k == 3, "NI++ is a triangle-counting baseline"
+    t0 = time.perf_counter()
+    og = og or build_oriented(g)
+    plan = plan or build_plan(og, k)
+    t_plan = time.perf_counter() - t0
+
+    csr = to_device(og)
+    key = jax.random.PRNGKey(seed)
+    r = k - 1
+    total = 0.0
+    per_node = np.zeros(g.n, np.float64) if return_per_node else None
+    t_count = 0.0
+    eff_method = "exact" if method == "ni++" else method
+    for b in plan.buckets:
+        for tile in _tile_batches(b.nodes, b.capacity):
+            t1 = time.perf_counter()
+            vals = _count_tile(csr, jnp.asarray(tile), key,
+                               capacity=b.capacity,
+                               n_iters=og.lookup_iters, r=r,
+                               method=eff_method, p=float(p),
+                               c=int(colors), engine=engine)
+            vals = np.asarray(jax.block_until_ready(vals), np.float64)
+            t_count += time.perf_counter() - t1
+            total += float(vals.sum())
+            if per_node is not None:
+                sel = tile >= 0
+                np.add.at(per_node, tile[sel], vals[sel])
+    stats = mrc_mod.compute_stats(og, plan, method=method, p=p,
+                                  colors=colors)
+    return CountResult(
+        k=k, method=method, estimate=total, per_node=per_node, mrc=stats,
+        plan_summary=plan.cost_summary(),
+        timings={"plan_s": t_plan, "count_s": t_count,
+                 "total_s": time.perf_counter() - t0},
+        params={"p": p, "colors": colors, "seed": seed, "engine": engine})

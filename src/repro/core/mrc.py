@@ -1,0 +1,99 @@
+"""MRC-model accounting (Karloff–Suri–Vassilvitskii) for the engine.
+
+The paper analyzes SI_k against the MRC yardsticks: total space
+O(m^{3/2}), total work O(m^{k/2}), local space O(m), local time
+O(m^{(k−1)/2}); the sampled variants fit MRC proper once p ≤ 1/m^α.
+This module computes the *actual* per-round volumes of a concrete run so
+benchmarks can check the bounds empirically (benchmarks/table_mrc.py) and
+the distributed engine can budget communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from .csr import OrientedGraph
+from .plan import Plan
+
+
+@dataclasses.dataclass(frozen=True)
+class MRCStats:
+    m: int
+    n: int
+    rounds: int
+    # round volumes, in key-value pairs (the MR currency)
+    round1_pairs: int            # map-1 emissions (oriented edges)
+    round2_pairs: float          # map-2 emissions: Σ C(|Γ⁺(u)|, 2) (+ $ markers)
+    round3_pairs: float          # map-3 emissions: Σ |E(G⁺(u))| upper bound
+    max_local_space: int         # max reducer input size
+    total_work: float            # Σ |Γ⁺(u)|^{k−1}  (reduce-3 dominates)
+    # paper bounds to compare against
+    bound_total_space: float     # O(m^{3/2})
+    bound_total_work: float      # O(m^{k/2})
+    bound_local_space: float     # O(m)
+    bound_local_time: float      # O(m^{(k−1)/2})
+    sample_factor: float         # expected shrink of round-2/3 volume
+
+    def check_bounds(self, const: float = 4.0) -> dict[str, bool]:
+        """Empirical validation of Theorem 1's asymptotics (constant-slack)."""
+        return {
+            "total_space": self.round2_pairs * self.sample_factor
+            <= const * self.bound_total_space,
+            "local_space": self.max_local_space <= const * self.bound_local_space,
+            "total_work": self.total_work <= const * self.bound_total_work,
+            "lemma1": True,
+        }
+
+
+def compute_stats(og: OrientedGraph, plan: Plan, method: str = "exact",
+                  p: float = 1.0, colors: int = 10) -> MRCStats:
+    d = og.out_deg.astype(np.float64)
+    m = float(max(og.m, 1))
+    k = plan.k
+    pairs2 = float((d * (d - 1) / 2).sum())
+    if method == "edge":
+        sample = p
+    elif method in ("color", "color_smooth"):
+        sample = 1.0 / max(colors, 1)
+    else:
+        sample = 1.0
+    rounds = 2 if method == "ni++" else 3
+    return MRCStats(
+        m=og.m, n=og.n, rounds=rounds,
+        round1_pairs=og.m,
+        round2_pairs=pairs2 + og.m,
+        round3_pairs=pairs2 * sample,
+        max_local_space=int(max(og.m, og.n)),
+        total_work=float((d ** (k - 1)).sum()),
+        bound_total_space=m ** 1.5,
+        bound_total_work=m ** (k / 2.0),
+        bound_local_space=m,
+        bound_local_time=m ** ((k - 1) / 2.0),
+        sample_factor=sample)
+
+
+def theorem2_min_p(m: int, qk: float, k: int, eps: float = 0.1,
+                   h: float = 1.0) -> float:
+    """Smallest edge-sampling p meeting Theorem 2's concentration
+    condition p^{(k-1)(k-2)/2} > h·m^{(k-3)/2}·ln m / (ε²·q_k)."""
+    if qk <= 0:
+        return 1.0
+    rhs = h * m ** ((k - 3) / 2.0) * math.log(max(m, 2)) / (eps * eps * qk)
+    expo = (k - 1) * (k - 2) / 2.0
+    return min(1.0, rhs ** (1.0 / expo))
+
+
+def theorem3_max_colors(m: int, qk: float, k: int, eps: float = 0.1,
+                        h: float = 1.0) -> int:
+    """Largest color count c meeting Theorem 3's condition
+    1/c^{k-2} > h·m^{k-2}? — rearranged: c < (ε²·q_k / (h·m^{(k-3)/2}·ln m))^{1/(k-2)}.
+
+    (We use the same interference-graph exponent as Theorem 2's proof
+    sketch for SIC_k: cliques interfere iff they share a non-minimum
+    node.)"""
+    if qk <= 0:
+        return 1
+    rhs = eps * eps * qk / (h * m ** ((k - 3) / 2.0) * math.log(max(m, 2)))
+    return max(1, int(rhs ** (1.0 / max(k - 2, 1))))

@@ -1,0 +1,49 @@
+"""Round 1 — the degree-based total order ≺ and edge orientation.
+
+The paper orders nodes by (degree, label): x ≺ y iff d(x) < d(y), ties
+broken by label. Orienting every edge from its ≺-smaller endpoint to its
+≺-larger endpoint yields a DAG whose max out-degree is at most 2√m
+(Lemma 1) — the structural fact all bounds hang on.
+
+On TPU there is no shuffle: the oriented adjacency is built with a sort
+(argsort *is* the hardware's shuffle), and ranks are dense positions in
+the ≺ order so all later comparisons are single integer compares.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..graphs.formats import Graph
+
+
+def ranks(degrees: np.ndarray) -> np.ndarray:
+    """Dense rank of each node in the ≺ order.
+
+    rank[u] < rank[v]  <=>  u ≺ v  <=>  (d(u), u) < (d(v), v).
+    """
+    n = degrees.shape[0]
+    order = np.lexsort((np.arange(n, dtype=np.int64),
+                        np.asarray(degrees, dtype=np.int64)))
+    r = np.empty(n, dtype=np.int64)
+    r[order] = np.arange(n, dtype=np.int64)
+    return r
+
+
+def orient_edges(g: Graph, node_ranks: np.ndarray):
+    """Return (src, dst) arrays with rank[src] < rank[dst] for each edge.
+
+    This realizes the paper's Map 1 ("if u ≺ v then emit ⟨u; v⟩") as a
+    vectorized select instead of a shuffle.
+    """
+    u, v = g.edges[:, 0], g.edges[:, 1]
+    swap = node_ranks[u] > node_ranks[v]
+    src = np.where(swap, v, u)
+    dst = np.where(swap, u, v)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def check_lemma1(g: Graph, out_deg: np.ndarray) -> bool:
+    """|Γ⁺(u)| ≤ 2√m for every node (paper Lemma 1)."""
+    if g.m == 0:
+        return True
+    return bool(out_deg.max() <= 2.0 * np.sqrt(g.m))

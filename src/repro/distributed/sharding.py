@@ -1,0 +1,148 @@
+"""Sharding rules: parameters (FSDP × TP), batches, caches, optimizer.
+
+The rules are *derived from the mesh at call time* — nothing is baked to
+a device count — which is what makes the framework elastic: the same
+checkpoint restores onto any mesh by re-running these rules and
+device_put-ing with the new shardings.
+
+Parameter rule (per 2-D+ leaf): the dimension matching a known
+tensor-parallel size goes to ``model``; the largest remaining dimension
+divisible by the fsdp axis goes to ``data`` (ZeRO-3-style parameter
+sharding; optimizer moments inherit it, giving ZeRO-1/2 for free).
+1-D leaves (norm scales, biases) stay replicated.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, ParallelConfig
+
+
+def _tp_dims(cfg: ModelConfig) -> set[int]:
+    """Sizes that identify a tensor-parallel dimension of a weight."""
+    dims = {cfg.d_ff, cfg.padded_vocab, cfg.moe_d_ff,
+            cfg.n_heads * cfg.hd, cfg.n_kv_heads * cfg.hd, cfg.dinner,
+            cfg.moe_d_ff * max(cfg.n_shared_experts, 1)}
+    if cfg.use_mla:
+        dims |= {cfg.n_heads * (cfg.qk_nope_dim + cfg.qk_rope_dim),
+                 cfg.n_heads * cfg.qk_nope_dim,
+                 cfg.n_heads * cfg.v_head_dim}
+    if cfg.family == "ssm" or cfg.hybrid:
+        dims |= {2 * cfg.dinner + 2 * cfg.ssm_state + cfg.n_ssm_heads,
+                 cfg.dinner + 2 * cfg.ssm_state}
+    dims.discard(0)
+    return dims
+
+
+def param_spec(path: str, shape: tuple[int, ...], cfg: ModelConfig,
+               mesh: Mesh, par: ParallelConfig) -> P:
+    """Choose a PartitionSpec for one parameter leaf."""
+    tp = par.tp_axis if par.tp_axis in mesh.axis_names else None
+    fsdp = par.fsdp_axis if par.fsdp_axis in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+    fsdp_size = mesh.shape[fsdp] if fsdp else 1
+    if len(shape) < 2:
+        return P()
+    # stacked layer leaves carry a leading L axis — never shard it
+    offset = 1 if path.startswith("layers") or ".layers" in path else 0
+    dims = list(shape[offset:])
+    spec: list = [None] * len(shape)
+    tp_dims = _tp_dims(cfg)
+    # MoE expert tensors: experts axis is the natural EP/TP axis
+    if cfg.n_experts and len(dims) >= 2 and dims[0] == cfg.n_experts:
+        if tp and cfg.n_experts % tp_size == 0:
+            spec[offset] = tp
+            # FSDP the largest remaining dim
+            rest = [(d, i) for i, d in enumerate(dims[1:], start=1)]
+            for d, i in sorted(rest, reverse=True):
+                if fsdp and d % fsdp_size == 0:
+                    spec[offset + i] = fsdp
+                    break
+            return P(*spec)
+    # Prefer a tp dim that is NOT d_model: llama-style archs have
+    # n_heads·head_dim == d_model, and matching the contraction dim
+    # would put tensor parallelism on the wrong side of the matmul.
+    tp_at: Optional[int] = None
+    candidates = [i for i, d in enumerate(dims)
+                  if tp and d in tp_dims and d % tp_size == 0
+                  and d != cfg.d_model]
+    if candidates:
+        tp_at = candidates[-1]
+    if tp_at is not None:
+        spec[offset + tp_at] = tp
+    for d, i in sorted(((d, i) for i, d in enumerate(dims)
+                        if i != tp_at), reverse=True):
+        if fsdp and d % fsdp_size == 0:
+            spec[offset + i] = fsdp
+            break
+    return P(*spec)
+
+
+def _paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        out = {}
+        for k, v in tree.items():
+            out[k] = _paths(v, f"{prefix}/{k}" if prefix else k)
+        return out
+    return prefix
+
+
+def param_shardings(abstract, cfg: ModelConfig, mesh: Mesh,
+                    par: ParallelConfig):
+    """NamedSharding pytree matching an abstract param pytree."""
+    paths = _paths(abstract)
+
+    def leaf(path, leaf_aval):
+        return NamedSharding(
+            mesh, param_spec(path, leaf_aval.shape, cfg, mesh, par))
+
+    return jax.tree.map(leaf, paths, abstract)
+
+
+def batch_sharding(mesh: Mesh, par: ParallelConfig, global_batch: int):
+    """Batch dim over dp axes (dropping axes that don't divide)."""
+    axes = [a for a in par.dp_axes if a in mesh.axis_names]
+    use: list[str] = []
+    prod = 1
+    for a in axes:
+        if global_batch % (prod * mesh.shape[a]) == 0:
+            use.append(a)
+            prod *= mesh.shape[a]
+    dp = tuple(use) if use else None
+
+    def leaf_spec(leaf_aval):
+        return NamedSharding(
+            mesh, P(dp, *([None] * (len(leaf_aval.shape) - 1))))
+
+    return leaf_spec
+
+
+def cache_shardings(abstract_cache, cfg: ModelConfig, mesh: Mesh,
+                    par: ParallelConfig, global_batch: int):
+    """Decode caches: (L, B, C, ...) — batch over dp, seq/capacity over tp
+    (works for every kv-head count, unlike head sharding)."""
+    dpfn = batch_sharding(mesh, par, global_batch)
+    dp = dpfn(jax.ShapeDtypeStruct((global_batch,), np.float32)).spec[0]
+    tp = par.tp_axis if par.tp_axis in mesh.axis_names else None
+    tpsz = mesh.shape[tp] if tp else 1
+
+    def leaf(x):
+        if x.ndim >= 4 and x.shape[2] % tpsz == 0 and x.shape[2] >= tpsz:
+            # (L, B, C, ...) KV/latent caches: shard capacity over tp
+            return NamedSharding(
+                mesh, P(None, dp, tp, *([None] * (x.ndim - 3))))
+        if x.ndim >= 3:
+            return NamedSharding(
+                mesh, P(None, dp, *([None] * (x.ndim - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(leaf, abstract_cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,112 @@
+"""Graph containers and canonicalization.
+
+The framework's graph substrate keeps graphs on the host as numpy arrays
+(construction, planning) and moves dense padded batches to the device at
+compute boundaries. A :class:`Graph` stores each undirected edge exactly
+once in canonical (min_label, max_label) form; parallel edges and self
+loops are removed at construction, matching the paper's preprocessing
+("we preprocessed all graphs so that they are undirected ... each edge
+endpoint is associated with its degree").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """An undirected graph as a canonical edge list.
+
+    Attributes:
+      n: number of nodes (labels are 0..n-1; isolated nodes allowed).
+      edges: (m, 2) int64, canonicalized u < v, lexicographically sorted,
+        deduplicated, no self loops.
+      degrees: (n,) int64 — degree of each node (precomputed, as the paper
+        assumes: "each edge contains the information relative to the
+        degrees of its endpoints").
+      name: optional human-readable name for benchmark tables.
+    """
+
+    n: int
+    edges: np.ndarray
+    degrees: np.ndarray
+    name: str = "graph"
+
+    @property
+    def m(self) -> int:
+        return int(self.edges.shape[0])
+
+    def __post_init__(self):
+        assert self.edges.ndim == 2 and self.edges.shape[1] == 2
+        assert self.degrees.shape == (self.n,)
+
+    def storage_mb(self) -> float:
+        """Uncompressed storage as the paper's Figure 1 reports (both
+        directions of each edge, as text is approximated by 2 int64)."""
+        return 2 * self.m * 2 * 8 / 1e6
+
+    def adjacency_sets(self):
+        """Host-side adjacency sets (for oracles / tiny graphs only)."""
+        adj = [set() for _ in range(self.n)]
+        for u, v in self.edges:
+            adj[int(u)].add(int(v))
+            adj[int(v)].add(int(u))
+        return adj
+
+
+def from_edges(edges, n: Optional[int] = None, name: str = "graph") -> Graph:
+    """Canonicalize an arbitrary (possibly directed / duplicated / self-loop)
+    edge array into a :class:`Graph`.
+    """
+    e = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    if e.size == 0:
+        n = int(n or 0)
+        return Graph(n=n, edges=np.zeros((0, 2), np.int64),
+                     degrees=np.zeros((n,), np.int64), name=name)
+    lo = np.minimum(e[:, 0], e[:, 1])
+    hi = np.maximum(e[:, 0], e[:, 1])
+    keep = lo != hi  # drop self loops
+    lo, hi = lo[keep], hi[keep]
+    if n is None:
+        n = int(hi.max()) + 1 if hi.size else 0
+    # dedup via sort over composite key
+    key = lo * np.int64(n) + hi
+    order = np.argsort(key, kind="stable")
+    key = key[order]
+    uniq = np.ones(key.shape[0], dtype=bool)
+    uniq[1:] = key[1:] != key[:-1]
+    lo, hi = lo[order][uniq], hi[order][uniq]
+    edges2 = np.stack([lo, hi], axis=1)
+    degrees = np.bincount(edges2.reshape(-1), minlength=n).astype(np.int64)
+    return Graph(n=int(n), edges=edges2, degrees=degrees, name=name)
+
+
+def relabel(g: Graph, perm: np.ndarray, name: Optional[str] = None) -> Graph:
+    """Apply a node permutation (new_label = perm[old_label]).
+
+    Clique counts are invariant under relabeling — used by property tests.
+    """
+    perm = np.asarray(perm, dtype=np.int64)
+    assert perm.shape == (g.n,)
+    e = perm[g.edges]
+    return from_edges(e, n=g.n, name=name or (g.name + "+relabel"))
+
+
+def subgraph(g: Graph, nodes: np.ndarray, name: Optional[str] = None) -> Graph:
+    """Node-induced subgraph, relabeled to 0..len(nodes)-1."""
+    nodes = np.asarray(nodes, dtype=np.int64)
+    inv = -np.ones(g.n, dtype=np.int64)
+    inv[nodes] = np.arange(len(nodes), dtype=np.int64)
+    src, dst = inv[g.edges[:, 0]], inv[g.edges[:, 1]]
+    keep = (src >= 0) & (dst >= 0)
+    return from_edges(np.stack([src[keep], dst[keep]], 1), n=len(nodes),
+                      name=name or (g.name + "+induced"))
+
+
+def union(a: Graph, b: Graph, name: str = "union") -> Graph:
+    """Disjoint union of two graphs (labels of b shifted by a.n)."""
+    eb = b.edges + a.n
+    return from_edges(np.concatenate([a.edges, eb], 0), n=a.n + b.n, name=name)

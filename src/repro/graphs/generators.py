@@ -1,0 +1,141 @@
+"""Synthetic graph generators.
+
+SNAP datasets are not available offline, so the benchmark suite generates
+synthetic families with the structural properties that matter for the
+paper's algorithms: heavy-tailed degree distributions (RMAT / Barabási–
+Albert) that stress the "curse of the last reducer", Erdős–Rényi controls,
+and planted-clique instances with known exact counts for validation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .formats import Graph, from_edges, union
+
+
+def complete_graph(n: int, name: Optional[str] = None) -> Graph:
+    """K_n: exactly C(n,k) k-cliques — closed-form oracle."""
+    idx = np.arange(n, dtype=np.int64)
+    u, v = np.meshgrid(idx, idx, indexing="ij")
+    mask = u < v
+    return from_edges(np.stack([u[mask], v[mask]], 1), n=n,
+                      name=name or f"K{n}")
+
+
+def empty_graph(n: int) -> Graph:
+    return from_edges(np.zeros((0, 2), np.int64), n=n, name=f"empty{n}")
+
+
+def erdos_renyi(n: int, p: float, seed: int = 0,
+                name: Optional[str] = None) -> Graph:
+    """G(n, p) via per-pair Bernoulli on the upper triangle."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n, dtype=np.int64)
+    u, v = np.meshgrid(idx, idx, indexing="ij")
+    mask = (u < v) & (rng.random((n, n)) < p)
+    return from_edges(np.stack([u[mask], v[mask]], 1), n=n,
+                      name=name or f"er_n{n}_p{p}")
+
+
+def erdos_renyi_m(n: int, m: int, seed: int = 0,
+                  name: Optional[str] = None) -> Graph:
+    """G(n, m): sample ~m distinct edges uniformly (for larger n)."""
+    rng = np.random.default_rng(seed)
+    # oversample to survive dedup
+    k = int(m * 1.3) + 16
+    u = rng.integers(0, n, size=k, dtype=np.int64)
+    v = rng.integers(0, n, size=k, dtype=np.int64)
+    g = from_edges(np.stack([u, v], 1), n=n, name=name or f"er_n{n}_m{m}")
+    if g.m > m:
+        g = from_edges(g.edges[:m], n=n, name=name or f"er_n{n}_m{m}")
+    return g
+
+
+def barabasi_albert(n: int, attach: int, seed: int = 0,
+                    name: Optional[str] = None) -> Graph:
+    """Preferential attachment: heavy-tailed degrees, many cliques."""
+    rng = np.random.default_rng(seed)
+    targets = list(range(attach))
+    repeated: list[int] = []
+    src_all, dst_all = [], []
+    for v in range(attach, n):
+        for t in targets:
+            src_all.append(v)
+            dst_all.append(t)
+        repeated.extend(targets)
+        repeated.extend([v] * attach)
+        # next targets: preferential sample from the degree-weighted list
+        targets = [repeated[i] for i in
+                   rng.integers(0, len(repeated), size=attach)]
+    e = np.stack([np.array(src_all, np.int64), np.array(dst_all, np.int64)], 1)
+    return from_edges(e, n=n, name=name or f"ba_n{n}_k{attach}")
+
+
+def rmat(scale: int, edge_factor: int = 8,
+         a: float = 0.57, b: float = 0.19, c: float = 0.19,
+         seed: int = 0, name: Optional[str] = None) -> Graph:
+    """R-MAT power-law generator (Graph500 parameters by default).
+
+    n = 2**scale nodes, ~edge_factor * n undirected edges after dedup.
+    Produces the skewed high-neighborhood distributions of web/social
+    graphs (webBerkStan / asSkitter analogues at reduced scale).
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = edge_factor * n
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab, abc = a + b, a + b + c
+    for bit in range(scale):
+        r = rng.random(m)
+        # quadrant choice: (0,0) w.p. a, (0,1) w.p. b, (1,0) w.p. c, (1,1) d
+        right = (r >= a) & (r < ab) | (r >= abc)
+        down = r >= ab
+        src = (src << 1) | down.astype(np.int64)
+        dst = (dst << 1) | right.astype(np.int64)
+    # scramble labels so locality doesn't correlate with degree
+    perm = rng.permutation(n).astype(np.int64)
+    return from_edges(np.stack([perm[src], perm[dst]], 1), n=n,
+                      name=name or f"rmat_s{scale}_e{edge_factor}")
+
+
+def planted_cliques(n_background: int, p_background: float,
+                    clique_sizes: list[int], seed: int = 0,
+                    name: Optional[str] = None) -> Graph:
+    """Sparse ER background with vertex-disjoint planted cliques appended
+    as fresh nodes. With a sufficiently sparse background the planted
+    cliques dominate counts for k >= 4; exact counts remain verifiable by
+    the brute-force oracle at test scale.
+    """
+    g = erdos_renyi(n_background, p_background, seed=seed)
+    for i, s in enumerate(clique_sizes):
+        g = union(g, complete_graph(s), name="planted")
+    return Graph(n=g.n, edges=g.edges, degrees=g.degrees,
+                 name=name or f"planted_{clique_sizes}")
+
+
+def random_graph_for_tests(seed: int, max_n: int = 48,
+                           density: Optional[float] = None) -> Graph:
+    """Small random graph for property tests (oracle-checkable)."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(4, max_n))
+    p = density if density is not None else float(rng.uniform(0.05, 0.6))
+    return erdos_renyi(n, p, seed=seed + 1, name=f"test_s{seed}")
+
+
+# --- the benchmark suite: scaled analogues of the paper's Figure 1 ----------
+
+def paper_suite(scale_shift: int = 0) -> list[Graph]:
+    """Three graphs echoing webBerkStan / asSkitter / liveJournal roles:
+    a dense-web-like RMAT (high clustering, heavy tail), a sparser
+    skitter-like RMAT, and a larger BA graph. scale_shift grows them.
+    """
+    return [
+        rmat(12 + scale_shift, edge_factor=16, a=0.65, b=0.15, c=0.15,
+             seed=7, name="webBerk-like"),
+        rmat(13 + scale_shift, edge_factor=8, seed=11, name="skitter-like"),
+        barabasi_albert(6000 * (1 << scale_shift), attach=12, seed=13,
+                        name="lj-like"),
+    ]

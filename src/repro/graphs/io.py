@@ -1,0 +1,36 @@
+"""Graph persistence (npz) + SNAP-format text ingestion.
+
+The SNAP library's text format (``# comment`` header lines, one
+``src\tdst`` pair per line) is supported so the framework can ingest the
+paper's real datasets when run outside this container.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .formats import Graph, from_edges
+
+
+def save_npz(g: Graph, path: str) -> None:
+    tmp = path + ".tmp"
+    np.savez_compressed(tmp, n=np.int64(g.n), edges=g.edges, name=g.name)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load_npz(path: str) -> Graph:
+    with np.load(path, allow_pickle=False) as z:
+        return from_edges(z["edges"], n=int(z["n"]), name=str(z["name"]))
+
+
+def load_snap_txt(path: str, name: str | None = None) -> Graph:
+    """Parse a SNAP edge-list text file (comments start with '#')."""
+    edges = np.loadtxt(path, dtype=np.int64, comments="#").reshape(-1, 2)
+    return from_edges(edges, name=name or os.path.basename(path))
+
+
+def save_snap_txt(g: Graph, path: str) -> None:
+    with open(path, "w") as f:
+        f.write(f"# {g.name}: n={g.n} m={g.m} (undirected, canonical)\n")
+        np.savetxt(f, g.edges, fmt="%d\t%d")

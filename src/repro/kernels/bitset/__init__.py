@@ -1,0 +1,4 @@
+from .ops import triangles_bitset
+from .ref import pack_rows, triangles_bitset_ref
+
+__all__ = ["triangles_bitset", "pack_rows", "triangles_bitset_ref"]

@@ -1,0 +1,28 @@
+"""Jitted wrapper for the bitset triangle kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import triangles_bitset_kernel
+from .ref import pack_rows
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def triangles_bitset(A: jax.Array) -> jax.Array:
+    """(B, D, D) 0/1 f32 adjacencies → (B,) f32 triangle counts."""
+    B, D, _ = A.shape
+    bits = pack_rows(A)
+    W = bits.shape[-1]
+    per_mat = D * W * 4
+    tb = max(1, min(256, VMEM_BUDGET_BYTES // max(per_mat, 1)))
+    t = 1
+    while t * 2 <= tb:
+        t *= 2
+    pad = (-B) % t
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((pad, D, W), bits.dtype)], axis=0)
+    interpret = jax.default_backend() != "tpu"
+    return triangles_bitset_kernel(bits, t, interpret=interpret)[:B]

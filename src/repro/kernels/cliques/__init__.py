@@ -1,0 +1,5 @@
+from .ops import dag_count_pallas, kernel_bytes, kernel_flops
+from .ref import dag_count_ref
+
+__all__ = ["dag_count_pallas", "dag_count_ref", "kernel_flops",
+           "kernel_bytes"]

@@ -1,0 +1,54 @@
+"""Jitted public wrapper for the clique-counting kernel.
+
+Chooses the batch tile so the VMEM working set fits, pads the batch, and
+falls back to interpret mode off-TPU. VMEM budget: input tile TB·D²·4B
+plus ~2 D×D f32 temps must fit in ~12 MB of the 16 MB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import dag_count_kernel
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+
+def pick_tile(D: int) -> int:
+    per_mat = D * D * 4
+    tb = max(1, (VMEM_BUDGET_BYTES - 2 * per_mat) // per_mat)
+    # power-of-two, capped: huge tiles don't help once the MXU is busy
+    t = 1
+    while t * 2 <= min(tb, 256):
+        t *= 2
+    return t
+
+
+def dag_count_pallas(A: jax.Array, r: int) -> jax.Array:
+    """(B, D, D) f32 strictly-upper-tri adjacencies → (B,) f32 counts."""
+    B, D, _ = A.shape
+    interpret = jax.default_backend() != "tpu"
+    tb = pick_tile(D)
+    pad = (-B) % tb
+    if pad:
+        A = jnp.concatenate(
+            [A, jnp.zeros((pad, D, D), A.dtype)], axis=0)
+    out = dag_count_kernel(A.astype(jnp.float32), r, tb,
+                           interpret=interpret)
+    return out[:B]
+
+
+def kernel_flops(B: int, D: int, r: int) -> float:
+    """Analytic FLOPs (for the roofline table)."""
+    if r == 2:
+        return float(B) * D * D
+    if r == 3:
+        return B * (2.0 * D ** 3 + 2.0 * D * D)
+    return D * (B * 4.0 * D * D + kernel_flops(B, D, r - 1))
+
+
+def kernel_bytes(B: int, D: int) -> float:
+    """HBM traffic: one pass over the adjacencies + the counts."""
+    return float(B) * D * D * 4 + B * 4

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the clique-counting kernel.
+
+Identical math to ``repro.core.count.dag_count`` but kept separate so the
+kernel test compares two independently-written implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dag_count_ref(A: jax.Array, r: int) -> jax.Array:
+    """r-clique counts per batch element; A (B, D, D) strictly upper-tri."""
+    if r == 2:
+        return jnp.sum(A, axis=(1, 2))
+    if r == 3:
+        M = jnp.matmul(jnp.swapaxes(A, 1, 2), A)  # (AᵀA)
+        return jnp.sum(M * A, axis=(1, 2))
+    B, D, _ = A.shape
+    out = jnp.zeros((B,), jnp.float32)
+    for v in range(D):  # unrolled on purpose: the oracle favors clarity
+        row = A[:, v, :]
+        Bv = A * row[:, :, None] * row[:, None, :]
+        out = out + dag_count_ref(Bv, r - 1)
+    return out

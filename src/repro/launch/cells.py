@@ -1,0 +1,180 @@
+"""Cell construction: (architecture × input shape × mesh) → a jittable
+entry point with fully-specified in_shardings and abstract inputs.
+
+``input_specs`` follows the brief: ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation. The
+same builder feeds the dry-run, the roofline extractor, and (at smoke
+scale, with real arrays) the integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs import get_config, get_shape
+from ..configs.base import (ModelConfig, ParallelConfig, ShapeConfig,
+                            cell_is_runnable)
+from ..distributed.sharding import (batch_sharding, cache_shardings,
+                                    param_shardings, replicated)
+from ..models import (abstract_params, decode_step, forward_train,
+                      init_cache, kv_capacity, prefill)
+from ..models.layers import ShardCtx
+from ..training.optimizer import OptConfig, OptState
+from ..training.train_step import make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: ModelConfig
+    shape_cfg: ShapeConfig
+    fn: Callable                 # jit-able entry point
+    args: tuple                  # abstract args (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    kind: str                    # train | prefill | decode
+    runnable: bool
+    skip_reason: str = ""
+    out_shardings: Any = None    # None → let XLA choose
+    # known loop trip counts for HLO analysis (outermost first)
+    trip_hints: dict = dataclasses.field(default_factory=dict)
+
+
+def _abstract_batch(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.max_source_positions, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_vision_tokens, cfg.vision_embed_dim), jnp.float32)
+    return batch
+
+
+def _abstract_opt(params_abs) -> OptState:
+    z = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_abs)
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=z,
+                    nu=jax.tree.map(lambda x: x, z),
+                    master=jax.tree.map(lambda x: x, z))
+
+
+def input_specs(arch: str, shape_name: str) -> dict:
+    """Public helper per the brief: abstract specs for every input of the
+    cell's entry point (no mesh needed)."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    batch = _abstract_batch(cfg, shape)
+    if shape.kind == "train":
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        return {"batch": {k: v for k, v in batch.items()
+                          if k != "targets"}}
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    return {"token": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32), "cache": cache}
+
+
+def default_parallel(kind: str) -> ParallelConfig:
+    """Measured per-kind defaults (EXPERIMENTS.md §Perf):
+    train_4k has few tokens/chip → pure ZeRO-3 DP over every mesh axis
+    beats seq-sharding (no activation collectives); prefill/decode have
+    batch < chips → fsdp_seq shards memory over the model axis."""
+    if kind == "train":
+        return ParallelConfig(dp_axes=("pod", "data", "model"),
+                              act_mode="zero3")
+    return ParallelConfig()
+
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               par: Optional[ParallelConfig] = None,
+               cfg: Optional[ModelConfig] = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    shape = get_shape(shape_name)
+    par = par or default_parallel(shape.kind)
+    ok, why = cell_is_runnable(cfg, shape)
+    ctx = ShardCtx(mesh=mesh, dp=par.dp_axes, tp=par.tp_axis,
+                   mode=par.act_mode)
+    params_abs = abstract_params(cfg)
+    pshard = param_shardings(params_abs, cfg, mesh, par)
+    bshard_fn = batch_sharding(mesh, par, shape.global_batch)
+    batch_abs = _abstract_batch(cfg, shape)
+    bshard = jax.tree.map(bshard_fn, batch_abs)
+    trip_hints = {"n_layers": cfg.n_layers,
+                  "enc_layers": cfg.encoder_layers}
+
+    if shape.kind == "train":
+        oc = OptConfig()
+        step = make_train_step(cfg, oc, ctx=ctx, remat=par.remat,
+                               grad_accum=par.grad_accum)
+        opt_abs = _abstract_opt(params_abs)
+        oshard = OptState(step=replicated(mesh),
+                          mu=jax.tree.map(lambda s: s, pshard),
+                          nu=jax.tree.map(lambda s: s, pshard),
+                          master=jax.tree.map(lambda s: s, pshard))
+        return Cell(arch=arch, shape=shape_name, cfg=cfg, shape_cfg=shape,
+                    fn=step, args=(params_abs, opt_abs, batch_abs),
+                    in_shardings=(pshard, oshard, bshard),
+                    kind="train", runnable=ok, skip_reason=why,
+                    trip_hints=trip_hints)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return prefill(cfg, params, batch, ctx=ctx,
+                           cache_len=shape.seq_len)
+        batch_p = {k: v for k, v in batch_abs.items() if k != "targets"}
+        bshard_p = {k: v for k, v in bshard.items() if k != "targets"}
+        # output cache must be sharded like the decode cache, or XLA
+        # replicates it (qwen prefill: 25 GiB/dev → fits after this)
+        cache_out_abs, _ = jax.eval_shape(fn, params_abs, batch_p)
+        cshard_out = cache_shardings(cache_out_abs, cfg, mesh, par,
+                                     shape.global_batch)
+        return Cell(arch=arch, shape=shape_name, cfg=cfg, shape_cfg=shape,
+                    fn=fn, args=(params_abs, batch_p),
+                    in_shardings=(pshard, bshard_p),
+                    out_shardings=(cshard_out, None),
+                    kind="prefill", runnable=ok, skip_reason=why,
+                    trip_hints=trip_hints)
+
+    # decode: one new token against a cache of seq_len
+    cache_abs = jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+    cshard = cache_shardings(cache_abs, cfg, mesh, par, shape.global_batch)
+    tok_shard = bshard_fn(
+        jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32))
+
+    def fn(params, cache, token, pos):
+        return decode_step(cfg, params, cache, token, pos, ctx=ctx)
+
+    return Cell(arch=arch, shape=shape_name, cfg=cfg, shape_cfg=shape,
+                fn=fn,
+                args=(params_abs, cache_abs,
+                      jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32),
+                      jax.ShapeDtypeStruct((), jnp.int32)),
+                in_shardings=(pshard, cshard, tok_shard, replicated(mesh)),
+                out_shardings=(None, jax.tree.map(lambda s: s, cshard)),
+                kind="decode", runnable=ok, skip_reason=why,
+                trip_hints=trip_hints)
+
+
+def lower_cell(cell: Cell):
+    """jit with production donation: train aliases params+opt through the
+    step; decode aliases the cache in place. Halves the apparent live
+    memory and matches how the real launchers run."""
+    donate = {"train": (0, 1), "decode": (1,), "prefill": ()}[cell.kind]
+    kw = {}
+    if cell.out_shardings is not None:
+        kw["out_shardings"] = cell.out_shardings
+    return jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                   donate_argnums=donate, **kw).lower(*cell.args)

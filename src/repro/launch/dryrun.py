@@ -1,0 +1,159 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import: jax locks the
+# device count at first initialization, and the production dry-run needs
+# 512 placeholder host devices to build the (2,16,16) multi-pod mesh.
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input shape × mesh) cell:
+  jax.jit(entry, in_shardings=…).lower(**input_specs).compile()
+then record memory_analysis(), cost_analysis(), and the trip-count-aware
+HLO roofline terms to one JSON per cell under --out. Failures (sharding
+mismatch, OOM at compile, unsupported collective) are bugs — the driver
+exits nonzero if any runnable cell fails.
+
+Resumable: cells with an existing JSON are skipped unless --force.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --mesh both --arch all \
+      --shape all --out experiments/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, force: bool = False,
+             par=None, tag_suffix: str = "") -> dict:
+    import jax
+
+    from ..configs import get_config, get_shape
+    from ..configs.base import ParallelConfig, cell_is_runnable
+    from .cells import build_cell, lower_cell
+    from .hlo_analysis import analyze_hlo
+    from .mesh import make_production_mesh
+    from .roofline import compute_roofline
+
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}{tag_suffix}".replace("/", "_")
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_is_runnable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "runnable": ok, "skip_reason": why}
+    if not ok:
+        _write(path, rec)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        # par=None → build_cell applies the measured per-kind default
+        # (zero3 for train, fsdp_seq for prefill/decode)
+        cell = build_cell(arch, shape_name, mesh, par)
+        lowered = lower_cell(cell)
+        rec["lower_s"] = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.time() - t1
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            # XLA's own peak estimate, per device, donation-aware —
+            # the number that must stay under the 16 GB v5e HBM
+            "peak_per_device_gib": ma.peak_memory_in_bytes / 2**30,
+            "fits_16g": bool(ma.peak_memory_in_bytes < 16 * 2**30),
+        }
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        rec["cost_analysis"] = {
+            "flops_body_once_per_dev": float(ca.get("flops", -1.0)),
+            "bytes_body_once_per_dev":
+                float(ca.get("bytes accessed", -1.0))}
+        hlo = analyze_hlo(compiled.as_text())
+        rec["hlo"] = hlo.to_dict()
+        rl = compute_roofline(arch, shape_name, mesh_name, cfg, shape,
+                              len(mesh.devices.flat), hlo)
+        rec["roofline"] = rl.to_dict()
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — recorded, driver fails at end
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    _write(path, rec)
+    return rec
+
+
+def _write(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path + ".tmp", "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    os.replace(path + ".tmp", path)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--act-mode", default=None,
+                    choices=[None, "fsdp_seq", "tp_sp", "megatron"])
+    ap.add_argument("--remat", default=None,
+                    choices=[None, "full", "dots", "none"])
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    from ..configs import SHAPES, list_archs
+    from ..configs.base import ParallelConfig
+    par = None
+    if args.act_mode or args.remat:
+        kw = {}
+        if args.act_mode:
+            kw["act_mode"] = args.act_mode
+        if args.remat:
+            kw["remat"] = args.remat
+        par = ParallelConfig(**kw)
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, mp, args.out,
+                               force=args.force, par=par,
+                               tag_suffix=args.tag)
+                status = rec.get("status", "skip")
+                mem = rec.get("memory", {}).get("peak_per_device_gib", 0)
+                print(f"[{status:5s}] {arch:22s} {shape:12s} "
+                      f"{'multi' if mp else 'single':6s} "
+                      f"peak/dev={mem:.2f}GiB "
+                      f"compile={rec.get('compile_s', 0):.1f}s "
+                      f"{rec.get('skip_reason', '')}"
+                      f"{rec.get('error', '')[:120]}",
+                      flush=True)
+                if status == "error":
+                    failures.append((arch, shape, mp))
+    if failures:
+        print(f"FAILED cells: {failures}")
+        return 1
+    print("dry-run complete: all runnable cells lowered + compiled.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

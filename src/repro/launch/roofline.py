@@ -1,0 +1,168 @@
+"""Roofline terms per (arch × shape × mesh) from compiled artifacts.
+
+  compute    = FLOPs_per_device / peak_bf16
+  memory     = HBM_bytes_per_device / hbm_bw
+  collective = wire_bytes_per_device / ici_bw
+
+FLOPs and collective bytes come from the trip-count-aware HLO analyzer
+(`hlo_analysis.py`); HBM traffic is analytic (formulas below — the
+compiled module's `bytes accessed` shares cost_analysis' body-once
+problem and is reported only as a diagnostic). MODEL_FLOPS = 6·N·T
+(train) / 2·N·T (forward) with N = active params, plus attention-score
+terms; the ratio MODEL_FLOPS / HLO_FLOPs exposes remat/redundant
+compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Optional
+
+from ..configs.base import ModelConfig, ShapeConfig
+from .hlo_analysis import HLOStats
+from .mesh import HW
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS for the whole step (all devices)."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    L, H, dh = cfg.n_layers, max(cfg.n_heads, 1), cfg.hd
+    if cfg.use_mla:
+        dh = cfg.qk_nope_dim + cfg.qk_rope_dim
+    win = cfg.sliding_window or S
+    eff = min(S, win)
+    if shape.kind == "train":
+        dense = 6.0 * N * B * S
+        attn = 0.0 if cfg.attention_free else \
+            6.0 * 2.0 * B * S * eff * 0.5 * H * dh * L
+        ssd = 0.0
+        if cfg.family == "ssm" or cfg.hybrid:
+            Hs, P, Nst = cfg.n_ssm_heads, \
+                cfg.dinner // max(cfg.n_ssm_heads, 1), cfg.ssm_state
+            Q = cfg.ssd_chunk
+            ssd = 3.0 * (2.0 * B * S * Q * Hs * P          # intra matmul
+                         + 4.0 * B * S * Hs * P * Nst) * L  # state in/out
+        return dense + attn + ssd
+    if shape.kind == "prefill":
+        dense = 2.0 * N * B * S
+        attn = 0.0 if cfg.attention_free else \
+            2.0 * 2.0 * B * S * eff * 0.5 * H * dh * L
+        return dense + attn
+    # decode: one token
+    C = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    dense = 2.0 * N * B
+    attn = 0.0
+    if not cfg.attention_free:
+        if cfg.use_mla:
+            r = cfg.kv_lora_rank + cfg.qk_rope_dim
+            attn = 4.0 * B * cfg.n_heads * r * C * L
+        else:
+            attn = 4.0 * B * cfg.n_kv_heads * \
+                (cfg.n_heads // max(cfg.n_kv_heads, 1)) * cfg.hd * C * L
+    ssd = 0.0
+    if cfg.family == "ssm" or cfg.hybrid:
+        Hs = cfg.n_ssm_heads
+        P = cfg.dinner // max(Hs, 1)
+        ssd = 6.0 * B * Hs * P * cfg.ssm_state * L
+    return dense + attn + ssd
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                         n_devices: int) -> float:
+    """Analytic minimum HBM traffic per device per step.
+
+    train  : optimizer sweep (p, μ, ν read+write in f32 = 24 B/param) +
+             weights touched fwd+bwd (3 passes × 4 B) + activation flow
+             (≈ 12 tensors of (tokens_local × d_model) bf16 per layer,
+             ×2 for remat recompute).
+    prefill: weights once (4 B) + activations (≈ 12/layer) + cache write.
+    decode : weights once + full cache read + activation trickle.
+    """
+    Np = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    D, L = cfg.d_model, cfg.n_layers
+    tok_local = B * S / n_devices
+    if shape.kind == "train":
+        opt = 24.0 * Np / n_devices
+        wts = 3.0 * 4.0 * Np / n_devices
+        act = 2.0 * 12.0 * L * tok_local * D * 2.0
+        return opt + wts + act
+    if shape.kind == "prefill":
+        wts = 4.0 * Np / n_devices
+        act = 12.0 * L * tok_local * D * 2.0
+        cache = _cache_bytes(cfg, shape) / n_devices
+        return wts + act + cache
+    wts = 4.0 * Np / n_devices
+    cache = _cache_bytes(cfg, shape) / n_devices
+    act = 12.0 * L * (B / n_devices) * D * 2.0
+    return wts + cache + act
+
+
+def _cache_bytes(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    B, S = shape.global_batch, shape.seq_len
+    C = min(S, cfg.sliding_window) if cfg.sliding_window else S
+    total = 0.0
+    if not cfg.attention_free:
+        if cfg.use_mla:
+            total += cfg.n_layers * B * C * \
+                (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2.0
+        else:
+            total += cfg.n_layers * B * C * 2 * cfg.n_kv_heads * cfg.hd * 2.0
+    if cfg.family == "ssm" or cfg.hybrid:
+        Hs = cfg.n_ssm_heads
+        P = cfg.dinner // max(Hs, 1)
+        total += cfg.n_layers * B * Hs * P * cfg.ssm_state * 4.0
+    return total
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_dev: float
+    model_flops_total: float
+    useful_ratio: float          # MODEL_FLOPS / (HLO_FLOPs × devices)
+    hbm_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    bottleneck: str
+    roofline_fraction: float     # best-possible-time / dominant-term
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(arch: str, shape_name: str, mesh_name: str,
+                     cfg: ModelConfig, shape: ShapeConfig,
+                     n_devices: int, hlo: HLOStats,
+                     note: str = "") -> Roofline:
+    mf = model_flops(cfg, shape)
+    hf = hlo.dot_flops
+    hbm = hbm_bytes_per_device(cfg, shape, n_devices)
+    wire = hlo.total_collective_bytes
+    compute_s = hf / HW["peak_bf16_flops"]
+    memory_s = hbm / HW["hbm_bw"]
+    coll_s = wire / HW["ici_bw"]
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    # "ideal" time = perfectly-useful FLOPs or the unavoidable HBM
+    # traffic, whichever binds — decode is legitimately bandwidth-bound,
+    # so its roofline target is the memory term, not the FLOP term
+    ideal = max((mf / n_devices) / HW["peak_bf16_flops"], memory_s)
+    dominant = max(terms.values())
+    frac = ideal / dominant if dominant > 0 else 0.0
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_devices=n_devices,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        hlo_flops_per_dev=hf, model_flops_total=mf,
+        useful_ratio=mf / (hf * n_devices) if hf else 0.0,
+        hbm_bytes_per_dev=hbm, wire_bytes_per_dev=wire,
+        bottleneck=bottleneck, roofline_fraction=min(frac, 1.0), note=note)

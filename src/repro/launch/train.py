@@ -1,0 +1,73 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 100 --workdir /tmp/run1 [--resume] [--devices 8]
+
+On this container ``--smoke`` (reduced config) is the runnable path; the
+full configs are exercised through the dry-run. ``--devices N`` forks the
+process env to N fake host devices (must be first, before jax init —
+handled below by re-exec).
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="re-exec with N fake host devices")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.devices and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.devices}"
+        os.execv(sys.executable, [sys.executable, "-m",
+                                  "repro.launch.train"] + sys.argv[1:])
+
+    import jax
+
+    from ..configs import get_config, get_smoke_config
+    from ..configs.base import ShapeConfig
+    from ..data.pipeline import make_pipeline
+    from ..models import init_params
+    from ..training.loop import Trainer
+    from ..training.optimizer import OptConfig, init_opt_state
+    from ..training.train_step import make_train_step
+
+    cfg = get_smoke_config(args.arch) if args.smoke \
+        else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    oc = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                   total_steps=args.steps)
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, oc, remat=args.remat,
+                                   grad_accum=args.grad_accum))
+    pipe = make_pipeline(cfg, shape, seed=args.seed)
+    tr = Trainer(cfg, step, pipe, args.workdir,
+                 ckpt_every=args.ckpt_every)
+    start = 0
+    if args.resume:
+        params, opt, start = tr.resume(params, opt)
+        print(f"resumed from step {start}")
+    params, opt, end = tr.fit(params, opt, args.steps, start_step=start)
+    print(f"trained to step {end}; metrics at {tr.metrics_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

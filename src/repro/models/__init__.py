@@ -1,0 +1,8 @@
+"""LM substrate: scan-based stacks for all assigned architecture families."""
+from .layers import NO_SHARD, ShardCtx
+from .transformer import (abstract_params, decode_step, forward_train,
+                          init_cache, init_params, kv_capacity, prefill)
+
+__all__ = ["NO_SHARD", "ShardCtx", "abstract_params", "decode_step",
+           "forward_train", "init_cache", "init_params", "kv_capacity",
+           "prefill"]

@@ -1,0 +1,270 @@
+"""Attention: GQA (opt. bias / sliding window), MLA, cross-attention.
+
+Long-context paths never materialize (S, S) score matrices: training and
+prefill use a flash-attention-style scan over KV chunks with an online
+softmax (running max + normalizer), so per-device memory is
+O(S·chunk) — this is what lets prefill_32k compile inside a 16 GB HBM
+budget. Decode uses a single-token path; sliding-window caches are ring
+buffers of size `window`, which is why long_500k costs O(window) not
+O(S) for SWA architectures.
+
+MLA (deepseek) caches only the 512-d latent + shared rope key. Decode
+uses the *absorbed* form (q projected into latent space) so the cache is
+never expanded; train/prefill expand K/V per KV-chunk inside the scan.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import flash
+from .layers import ShardCtx, dense, dot_f32, rope
+
+NEG_INF = -2.0e38
+
+
+# --------------------------------------------------------------------------
+# flash-style chunked attention (train / prefill)
+# --------------------------------------------------------------------------
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      *, causal: bool, window: int = 0,
+                      chunk: int = 1024,
+                      q_offset: int = 0) -> jax.Array:
+    """Online-softmax attention.
+
+    q: (B, Sq, H, dh); k, v: (B, Skv, Hkv, dh) with H % Hkv == 0.
+    Returns (B, Sq, H, dh). Mask: causal (kv ≤ q) and, if window > 0,
+    kv > q − window. q_offset shifts query positions (decode prefill
+    continuation).
+    """
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # may differ from dh (MLA)
+    g = H // Hkv
+    scale = dh ** -0.5
+    while Skv % chunk:
+        chunk //= 2
+    qg = (q.reshape(B, Sq, Hkv, g, dh) * scale).astype(q.dtype)
+    out = flash.flash_attention_grouped(qg, k, v, causal, window, chunk,
+                                        q_offset)
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def gqa_params(key, cfg: ModelConfig) -> dict:
+    D, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense(ks[0], (D, H * dh)),
+         "wk": dense(ks[1], (D, Hkv * dh)),
+         "wv": dense(ks[2], (D, Hkv * dh)),
+         "wo": dense(ks[3], (H * dh, D))}
+    if cfg.attn_bias:
+        p["bq"] = jnp.zeros((H * dh,), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv * dh,), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv * dh,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, ctx: ShardCtx):
+    B, S, _ = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.attn_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = ctx.batch_feature(q).reshape(B, S, H, dh)
+    k = ctx.batch_feature(k).reshape(B, S, Hkv, dh)
+    v = ctx.batch_feature(v).reshape(B, S, Hkv, dh)
+    return q, k, v
+
+
+def gqa_train(cfg: ModelConfig, p: dict, x: jax.Array,
+              positions: jax.Array, ctx: ShardCtx,
+              kv_override: Optional[tuple] = None,
+              causal: bool = True) -> jax.Array:
+    """Full-sequence attention (train / prefill). Returns (B, S, D)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, ctx)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    if kv_override is not None:
+        k, v = kv_override
+        causal = False
+    out = chunked_attention(q, k, v, causal=causal,
+                            window=cfg.sliding_window)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def gqa_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+               cache_k: jax.Array, cache_v: jax.Array,
+               ctx: ShardCtx) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, C, Hkv, dh) where
+    C = full seq capacity, or the window size for SWA (ring buffer).
+    Returns (out (B,1,D), new_cache_k, new_cache_v)."""
+    B = x.shape[0]
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    C = cache_k.shape[1]
+    q, k, v = _project_qkv(cfg, p, x, ctx)
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    q = rope(q, pos_b, cfg.rope_theta)
+    k = rope(k, pos_b, cfg.rope_theta)
+    slot = (pos % C) if cfg.sliding_window > 0 else jnp.minimum(pos, C - 1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    # position of each slot: ring for SWA, identity otherwise
+    idx = jnp.arange(C)
+    if cfg.sliding_window > 0:
+        kv_pos = pos - (pos % C - idx) % C
+    else:
+        kv_pos = idx
+    valid = (kv_pos >= 0) & (kv_pos <= pos)
+    g = H // Hkv
+    qg = (q.reshape(B, Hkv, g, dh) * dh ** -0.5).astype(cache_k.dtype)
+    s = dot_f32("bhgd,bchd->bhgc", qg, cache_k)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = dot_f32("bhgc,bchd->bhgd", w.astype(cache_v.dtype), cache_v)
+    o = o.reshape(B, 1, H * dh).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype)), \
+        cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# --------------------------------------------------------------------------
+
+def mla_params(key, cfg: ModelConfig) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    ks = jax.random.split(key, 5)
+    return {"wq": dense(ks[0], (D, H * (dn + dr))),
+            "wdkv": dense(ks[1], (D, r + dr)),
+            "wuk": dense(ks[2], (r, H * dn)),
+            "wuv": dense(ks[3], (r, H * dv)),
+            "wo": dense(ks[4], (H * dv, D))}
+
+
+def mla_train(cfg: ModelConfig, p: dict, x: jax.Array,
+              positions: jax.Array, ctx: ShardCtx) -> jax.Array:
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype))
+    q = ctx.batch_feature(q).reshape(B, S, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = rope(q_pe, positions, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(x.dtype))
+    c, k_pe = ckv[..., :r], ckv[..., r:]
+    k_pe = rope(k_pe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    # MLA's point: move the LATENT across shards, not the expansion.
+    # Under seq-sharded activations the attention path needs full-seq
+    # K/V; pinning c/k_pe to seq-replicated here makes the collective
+    # carry (r + dr) = 576 dims instead of H·(dn+dv) — ~5× less wire
+    # (§Perf cell B iteration 3).
+    if ctx.mesh is not None:
+        from jax.sharding import PartitionSpec as _P
+        c = ctx.constrain(c, _P(ctx._dp(), None, None))
+        k_pe = ctx.constrain(k_pe, _P(ctx._dp(), None, None))
+    k_nope = jnp.einsum("bsr,rh->bsh", c, p["wuk"].astype(x.dtype)) \
+        .reshape(B, S, H, dn)
+    v = jnp.einsum("bsr,rh->bsh", c, p["wuv"].astype(x.dtype)) \
+        .reshape(B, S, H, dv)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (B, S, H, dr))], -1)
+    qf = jnp.concatenate([q_nope, q_pe], -1)
+    out = chunked_attention(qf, k, v, causal=True,
+                            window=cfg.sliding_window)
+    out = out.reshape(B, S, H * dv)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+               cache_c: jax.Array, cache_pe: jax.Array,
+               ctx: ShardCtx) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed MLA decode. cache_c: (B, C, r) latents; cache_pe:
+    (B, C, dr) shared rope keys."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    dn, dr, dv, r = (cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim,
+                     cfg.kv_lora_rank)
+    C = cache_c.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype)) \
+        .reshape(B, 1, H, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    pos_b = jnp.broadcast_to(pos, (B, 1))
+    q_pe = rope(q_pe, pos_b, cfg.rope_theta)
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wdkv"].astype(x.dtype))
+    c, k_pe = ckv[..., :r], ckv[..., r:]
+    k_pe = rope(k_pe[:, :, None, :], pos_b, cfg.rope_theta)[:, :, 0]
+    slot = jnp.minimum(pos, C - 1)
+    cache_c = jax.lax.dynamic_update_slice_in_dim(
+        cache_c, c.astype(cache_c.dtype), slot, axis=1)
+    cache_pe = jax.lax.dynamic_update_slice_in_dim(
+        cache_pe, k_pe.astype(cache_pe.dtype), slot, axis=1)
+    # absorb: q ↦ latent space, score directly against the latent cache
+    wuk = p["wuk"].reshape(r, H, dn).astype(x.dtype)
+    qa = jnp.einsum("bqhd,rhd->bqhr", q_nope, wuk)
+    s = dot_f32("bqhr,bcr->bhqc", qa.astype(cache_c.dtype), cache_c)
+    s = s + dot_f32("bqhd,bcd->bhqc", q_pe.astype(cache_pe.dtype), cache_pe)
+    s = s * (dn + dr) ** -0.5
+    valid = jnp.arange(C) <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctxv = dot_f32("bhqc,bcr->bqhr", w.astype(cache_c.dtype), cache_c)
+    wuv = p["wuv"].reshape(r, H, dv).astype(x.dtype)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctxv.astype(x.dtype), wuv)
+    o = o.reshape(B, 1, H * dv)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(x.dtype)), \
+        cache_c, cache_pe
+
+
+# --------------------------------------------------------------------------
+# cross-attention (whisper decoder)
+# --------------------------------------------------------------------------
+
+def cross_params(key, cfg: ModelConfig) -> dict:
+    D, H, dh = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {"wq": dense(ks[0], (D, H * dh)),
+            "wk": dense(ks[1], (D, H * dh)),
+            "wv": dense(ks[2], (D, H * dh)),
+            "wo": dense(ks[3], (H * dh, D))}
+
+
+def cross_attend(cfg: ModelConfig, p: dict, x: jax.Array,
+                 enc_k: jax.Array, enc_v: jax.Array,
+                 ctx: ShardCtx) -> jax.Array:
+    """x: (B, S, D); enc_k/v: (B, T, H, dh) precomputed from encoder."""
+    B, S, _ = x.shape
+    H, dh = cfg.n_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(x.dtype)) \
+        .reshape(B, S, H, dh)
+    out = chunked_attention(q, enc_k, enc_v, causal=False, window=0)
+    out = out.reshape(B, S, H * dh)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def encoder_kv(cfg: ModelConfig, p: dict, enc_out: jax.Array) -> tuple:
+    """Precompute cross K/V from encoder output (B, T, D)."""
+    B, T, _ = enc_out.shape
+    H, dh = cfg.n_heads, cfg.hd
+    k = jnp.einsum("btd,dh->bth", enc_out, p["wk"].astype(enc_out.dtype)) \
+        .reshape(B, T, H, dh)
+    v = jnp.einsum("btd,dh->bth", enc_out, p["wv"].astype(enc_out.dtype)) \
+        .reshape(B, T, H, dh)
+    return k, v

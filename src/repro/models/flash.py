@@ -1,0 +1,122 @@
+"""Flash attention in pure JAX: chunked online-softmax forward + a
+custom_vjp backward that *recomputes* scores per KV chunk instead of
+letting `lax.scan` checkpoint O(S²/chunk) residuals.
+
+Memory: forward saves only (q, k, v, o, L) — O(B·S·H·dh); backward
+streams KV chunks twice (dq pass fused with dk/dv pass). FLOPs: +1
+recompute of QKᵀ in backward, the standard flash trade. This is the
+TPU-idiomatic answer to the same problem the paper's §6 split round
+solves for clique counting: bound the *local* working set, keep global
+work asymptotically unchanged.
+
+Handles GQA grouping (H = Hkv·g), MLA's dv ≠ dh, causal and
+sliding-window masks, and a query-position offset.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dot_f32, vzeros
+
+NEG_INF = -2.0e38
+
+
+def _mask(q_pos, kv_pos, causal: bool, window: int):
+    m = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window:
+        m &= kv_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def _fwd_scan(q, k, v, causal, window, chunk, q_offset):
+    B, Sq, Hkv, g, dh = q.shape
+    Skv = k.shape[1]
+    dv = v.shape[-1]
+    nc = Skv // chunk
+    kc = k.reshape(B, nc, chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kj, vj, j = xs
+        kv_pos = j * chunk + jnp.arange(chunk)
+        s = dot_f32("bqhgd,bkhd->bqhgk", q, kj)
+        msk = _mask(q_pos, kv_pos, causal, window)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(msk[None, :, None, None, :], p, 0.0)
+        corr = jnp.exp(m - m_new)
+        acc = acc * corr[..., None] + dot_f32(
+            "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj)
+        l = l * corr + jnp.sum(p, axis=-1)
+        return (acc, m_new, l), ()
+
+    acc0 = vzeros((B, Sq, Hkv, g, dv), q)
+    m0 = vzeros((B, Sq, Hkv, g), q) + NEG_INF / 2
+    l0 = vzeros((B, Sq, Hkv, g), q)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+                                  (kc, vc, jnp.arange(nc)))
+    l = jnp.maximum(l, 1e-30)
+    out = acc / l[..., None]
+    lse = m + jnp.log(l)            # logsumexp per (b, q, hkv, g)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_grouped(q, k, v, causal: bool, window: int,
+                            chunk: int, q_offset: int):
+    """q: (B,Sq,Hkv,g,dh) pre-scaled (any float dtype; dots accumulate
+    f32 via preferred_element_type); k: (B,Skv,Hkv,dh);
+    v: (B,Skv,Hkv,dv). Returns (B,Sq,Hkv,g,dv) f32."""
+    out, _ = _fwd_scan(q, k, v, causal, window, chunk, q_offset)
+    return out
+
+
+def _flash_fwd(q, k, v, causal, window, chunk, q_offset):
+    out, lse = _fwd_scan(q, k, v, causal, window, chunk, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, chunk, q_offset, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, Hkv, g, dh = q.shape
+    Skv = k.shape[1]
+    dv = v.shape[-1]
+    nc = Skv // chunk
+    dout = dout.astype(jnp.float32)
+    delta = jnp.sum(dout * out, axis=-1)          # (B,Sq,Hkv,g)
+    kc = k.reshape(B, nc, chunk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, Hkv, dv).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(dq_acc, xs):
+        kj, vj, j = xs
+        kv_pos = j * chunk + jnp.arange(chunk)
+        s = dot_f32("bqhgd,bkhd->bqhgk", q, kj)
+        msk = _mask(q_pos, kv_pos, causal, window)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])           # normalized probs
+        p = jnp.where(msk[None, :, None, None, :], p, 0.0)
+        dp = dot_f32("bqhgd,bkhd->bqhgk", dout.astype(vj.dtype), vj)
+        ds = p * (dp - delta[..., None])
+        dq_acc = dq_acc + dot_f32("bqhgk,bkhd->bqhgd", ds.astype(kj.dtype), kj)
+        dkj = dot_f32("bqhgk,bqhgd->bkhd", ds.astype(q.dtype), q)
+        dvj = dot_f32("bqhgk,bqhgd->bkhd", p.astype(q.dtype), dout.astype(q.dtype))
+        return dq_acc, (dkj, dvj)
+
+    dq0 = vzeros(q.shape, q)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0,
+                                  (kc, vc, jnp.arange(nc)))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, dh)
+    dvv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Skv, Hkv, dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dvv.astype(v.dtype)
+
+
+flash_attention_grouped.defvjp(_flash_fwd, _flash_bwd)

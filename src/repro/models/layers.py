@@ -1,0 +1,218 @@
+"""Shared layer primitives + the sharding context.
+
+Sharding philosophy: parameters get explicit NamedShardings from
+``repro.distributed.sharding``; inside the model we only pin a handful of
+*activation* constraints through a :class:`ShardCtx` (batch→dp axes,
+model-parallel dim→tp axis, optional sequence sharding of the layer-scan
+carry). Everything else is left to GSPMD propagation, and the roofline
+extractor reads back what XLA actually inserted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# sharding context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding hints. ``None`` mesh → no constraints (smoke
+    tests on one device).
+
+    mode selects the parallelism layout (measured head-to-head in
+    EXPERIMENTS.md §Perf):
+      "zero3"    — batch over dp (ideally every mesh axis), activations
+          unsharded per example; params/optimizer stay 2-D sharded and
+          are gathered per layer (ZeRO-3). Zero activation collectives —
+          measured best for train_4k where tokens/chip is small.
+      "fsdp_seq" — batch over dp, *sequence* over tp, features full:
+          weights gathered for compute; attention gathers KV per layer.
+          Needed when batch < chips (32k prefill) so memory still shards.
+      "tp_sp"    — batch over dp, sequence over tp between blocks AND
+          features over tp inside blocks (Megatron-SP-style mixture).
+      "megatron" — batch over dp, sequence full, features over tp
+          (classic tensor parallelism: per-layer activation all-reduce).
+    """
+    mesh: Optional[Mesh] = None
+    dp: tuple[str, ...] = ("pod", "data")
+    tp: str = "model"
+    mode: str = "fsdp_seq"
+
+    def axes(self) -> tuple:
+        return tuple(self.mesh.axis_names) if self.mesh else ()
+
+    def _dp(self, batch: Optional[int] = None):
+        """dp axes present in the mesh; with ``batch`` given, greedily
+        keep only a prefix whose extent divides the batch (zero3 uses
+        three axes on a 256-batch — the non-dividing tail is dropped)."""
+        present = [a for a in self.dp
+                   if self.mesh and a in self.mesh.axis_names]
+        if batch is not None:
+            keep, ext = [], 1
+            for a in present:
+                if batch % (ext * self.mesh.shape[a]) == 0:
+                    keep.append(a)
+                    ext *= self.mesh.shape[a]
+            present = keep
+        return tuple(present) if present else None
+
+    def _tp(self):
+        return self.tp if (self.mesh and self.tp in self.mesh.axis_names) \
+            else None
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def batch(self, x: jax.Array) -> jax.Array:
+        """(B, ...) — batch over dp axes."""
+        return self.constrain(
+            x, P(self._dp(x.shape[0]), *([None] * (x.ndim - 1))))
+
+    def batch_seq(self, x: jax.Array) -> jax.Array:
+        """(B, S, ...) — the layer-boundary residual stream."""
+        tp = self._tp() if self.mode in ("fsdp_seq", "tp_sp") else None
+        return self.constrain(
+            x, P(self._dp(x.shape[0]), tp, *([None] * (x.ndim - 2))))
+
+    def batch_feature(self, x: jax.Array) -> jax.Array:
+        """(B, S, F) — wide intermediates (ffn hidden, qkv concat)."""
+        if self.mode in ("fsdp_seq", "zero3"):
+            return self.batch_seq(x)
+        tp = self._tp()
+        return self.constrain(
+            x, P(self._dp(), *([None] * (x.ndim - 2)), tp))
+
+
+NO_SHARD = ShardCtx(mesh=None)
+
+
+# --------------------------------------------------------------------------
+# primitives
+# --------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * scale + bias).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    return rms_norm(x, p["scale"])
+
+
+def norm_params(cfg: ModelConfig, d: int) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def gated_mlp(p: dict, x: jax.Array, ctx: ShardCtx) -> jax.Array:
+    """SiLU-gated MLP (llama-style)."""
+    h = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+    h = ctx.batch_feature(jax.nn.silu(h) * g)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+
+
+def mlp_params(key, d: int, f: int, scale: float = 0.02) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": jax.random.normal(k1, (d, f), jnp.float32) * scale,
+            "w_up": jax.random.normal(k2, (d, f), jnp.float32) * scale,
+            "w_down": jax.random.normal(k3, (f, d), jnp.float32) * scale}
+
+
+def chunked_softmax_xent(h: jax.Array, w_vocab: jax.Array,
+                         labels: jax.Array, mask: jax.Array,
+                         n_chunks: int = 16) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks: per chunk compute logits, logsumexp, and
+    the label logit. Keeps the memory term at (B, S/chunks, V) — the
+    difference between fitting 256k-vocab training in HBM or not.
+    """
+    B, S, D = h.shape
+    while S % n_chunks:
+        n_chunks //= 2
+    hs = h.reshape(B, n_chunks, S // n_chunks, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+    ms = mask.reshape(B, n_chunks, S // n_chunks).transpose(1, 0, 2)
+
+    def chunk(acc, xs):
+        hc, lc, mc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc,
+                            w_vocab.astype(hc.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        lab = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = (lse - lab) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), ()
+
+    zero = (mask.reshape(-1)[0] * 0).astype(jnp.float32)
+    (tot, cnt), _ = jax.lax.scan(chunk, (zero, zero), (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def dense(key, shape, scale: float = 0.02):
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def vzeros(shape, like: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Zeros that inherit ``like``'s varying-manual-axes type.
+
+    Scan carries created with plain jnp.zeros are 'unvarying' under
+    shard_map and JAX ≥0.8 rejects the carry-type mismatch; deriving the
+    init from a data operand fixes the type at negligible cost."""
+    return jnp.zeros(shape, dtype) + \
+        (like.reshape(-1)[0] * 0).astype(dtype)
+
+
+def dot_f32(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Einsum with f32 accumulation.
+
+    TPU: bf16 operands + preferred_element_type=f32 (MXU-native, narrow
+    gathers). CPU (this container): explicit f32 casts — XLA:CPU's
+    DotThunk rejects some bf16×bf16→f32 shapes at runtime, and the HLO
+    analyzer's bf16 correction keeps the roofline faithful either way.
+    """
+    if jax.default_backend() == "cpu":
+        return jnp.einsum(spec, a.astype(jnp.float32),
+                          b.astype(jnp.float32))
+    return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)

@@ -1,0 +1,146 @@
+"""Mixture-of-Experts via shard_map: shard-local dispatch, tp-sharded
+expert FFNs, exactly one psum.
+
+Two generations of this module are recorded in EXPERIMENTS.md §Perf:
+  v0 (global cumsum + (E, cap, D) buffer + pjit propagation): the
+     position cumsum crossed dp shards and the dispatch scatter's global
+     indices defeated GSPMD — buffers replicated (34 GB/device on
+     mixtral), collectives 65 s.
+  v1 (per-chunk cumsum, 3-index scatter): still unpartitionable —
+     199 GiB on deepseek. General scatters do not shard.
+  v2 (this): `shard_map` takes manual control. Tokens are sharded over
+     dp only (identical across the tp group); each device dispatches its
+     *local* tokens into a *local* (E, cap_local, D) buffer — the
+     scatter never crosses a shard boundary by construction. Expert FFN
+     weights put their hidden dim on tp, every device computes partial
+     expert outputs for its F-slice, results combine back per token, and
+     a single psum(tp) finishes the block. The only other collective is
+     the input gather out of the seq-sharded residual stream.
+
+This mirrors the clique engine's planner philosophy (§Arch-applicability
+in DESIGN.md): make the ragged thing (tokens→experts, nodes→buckets)
+static and LOCAL, then let the dense math shard.
+
+Semantics: renormalized top-k gates, static capacity (drop fraction
+reported), switch-style aux loss, optional shared experts (deepseek).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, round_up
+from .layers import ShardCtx, dense
+
+
+def moe_params(key, cfg: ModelConfig) -> dict:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {"router": dense(ks[0], (D, E)),
+         "w_gate": dense(ks[1], (E, D, F)),
+         "w_up": dense(ks[2], (E, D, F)),
+         "w_down": dense(ks[3], (E, F, D))}
+    if cfg.n_shared_experts:
+        Fs = F * cfg.n_shared_experts
+        k1, k2, k3 = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense(k1, (D, Fs)),
+                       "w_up": dense(k2, (D, Fs)),
+                       "w_down": dense(k3, (Fs, D))}
+    return p
+
+
+def _moe_local(cfg: ModelConfig, p: dict, x: jax.Array,
+               psum_axes=(), pmean_axes=()) -> tuple[jax.Array, dict]:
+    """Dense local dispatch on this shard's tokens. Weights may carry an
+    F-dim slice (1/tp of the hidden dim); partial outputs are psum'd."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_per_tok
+    T = B * S
+    xf = x.reshape(T, D)
+    # router in f32: numerically standard, and avoids the XLA:CPU
+    # bf16-dot→f32-convert fusion that DotThunk cannot execute
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    cap = round_up(int(T * K / E * cfg.capacity_factor) + 1, 8)
+
+    flat_e = idx.reshape(T * K)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - 1) * onehot, axis=1)
+    keep = (pos < cap).astype(x.dtype)
+    slot = jnp.clip(pos, 0, cap - 1)
+    t_idx = jnp.repeat(jnp.arange(T), K)
+
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    buf = buf.at[flat_e, slot].add(xf[t_idx] * keep[:, None])
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    eo = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                    p["w_down"].astype(x.dtype))
+    gathered = eo[flat_e, slot] * keep[:, None] \
+        * gate_vals.reshape(T * K)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, D), x.dtype).at[t_idx].add(gathered)
+
+    if cfg.n_shared_experts:
+        sp = p["shared"]
+        hs = jax.nn.silu(xf @ sp["w_gate"].astype(x.dtype)) \
+            * (xf @ sp["w_up"].astype(x.dtype))
+        y = y + hs @ sp["w_down"].astype(x.dtype)
+
+    if psum_axes:
+        y = jax.lax.psum(y, psum_axes)       # combine F-slice partials
+
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32),
+                    axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    mets = {"moe_aux": aux, "moe_drop_frac": dropped}
+    if pmean_axes:
+        mets = {k: jax.lax.pmean(v, pmean_axes) for k, v in mets.items()}
+    return y.reshape(B, S, D), mets
+
+
+def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
+              ctx: ShardCtx) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) → (y, metrics)."""
+    if ctx.mesh is None:
+        return _moe_local(cfg, p, x)
+    dp = ctx._dp()
+    # zero3: every axis carries batch; expert weights replicate inside
+    # the shard_map (the outer ZeRO gather pays for them once per layer)
+    tp = None if ctx.mode == "zero3" else ctx._tp()
+    mesh_axes = tuple(ctx.mesh.axis_names)
+    B = x.shape[0]
+    dp_used = tuple(a for a in (dp or ())) if dp else ()
+    # batch must divide the dp extent for the local view; else drop axes
+    ext = 1
+    use = []
+    for a in dp_used:
+        if B % (ext * ctx.mesh.shape[a]) == 0:
+            use.append(a)
+            ext *= ctx.mesh.shape[a]
+    dp_used = tuple(use)
+
+    wspecs = {"router": P(), "w_gate": P(None, None, tp),
+              "w_up": P(None, None, tp), "w_down": P(None, tp, None)}
+    if "shared" in p:
+        wspecs["shared"] = {"w_gate": P(None, tp), "w_up": P(None, tp),
+                            "w_down": P(tp, None)}
+    psum_axes = (tp,) if tp else ()
+    # metrics are invarying over tp (same tokens across the tp group);
+    # only the dp axes carry different tokens → only they get pmean'd
+    pmean_axes = dp_used
+    body = functools.partial(_moe_local, cfg, psum_axes=psum_axes,
+                             pmean_axes=pmean_axes)
+    y, mets = jax.shard_map(
+        lambda pl, xl: body(pl, xl),
+        mesh=ctx.mesh,
+        in_specs=(wspecs, P(dp_used if dp_used else None, None, None)),
+        out_specs=(P(dp_used if dp_used else None, None, None), P()),
+    )(p, x)
+    return y, mets

@@ -1,0 +1,172 @@
+"""Mamba-2 SSD (state-space duality) mixer.
+
+Training uses the chunked SSD algorithm: the sequence is split into
+chunks of length Q; within a chunk the recurrence is materialized as a
+masked decay-weighted (Q, Q) matmul (MXU work), and a `lax.scan` carries
+the (H, P, N) state across chunks. This is the matmul-rich form the SSD
+paper derives — O(S·Q) instead of O(S²) attention, and O(S·N·P) state
+math. Decode is the pure recurrence: one state update per token,
+independent of context length — the reason long_500k is cheap for SSM
+architectures.
+
+Conventions (ngroups = 1):
+  in_proj  : D → [z(di) | x(di) | B(N) | C(N) | dt(H)]
+  conv1d   : causal depthwise width-w over [x|B|C]
+  per head : h_t = exp(A·dt_t)·h_{t−1} + dt_t·B_t ⊗ x_t ;  y_t = C_t·h_t + D·x_t
+  gate     : y ← rmsnorm(y) * silu(z), then out_proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import ShardCtx, dense, rms_norm, vzeros
+
+
+def ssm_params(key, cfg: ModelConfig) -> dict:
+    D = cfg.d_model
+    di, N, H = cfg.dinner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.conv_width
+    conv_ch = di + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense(ks[0], (D, 2 * di + 2 * N + H)),
+        "conv_w": dense(ks[1], (w, conv_ch), scale=0.1),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.zeros((H,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "w_out": dense(ks[3], (di, D)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, N, H = cfg.dinner, cfg.ssm_state, cfg.n_ssm_heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + di + 2 * N]
+    dt = proj[..., di + di + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC: jax.Array, conv_w: jax.Array,
+                 conv_b: jax.Array) -> jax.Array:
+    """(B, S, C) causal depthwise conv, width w (stacked shifts)."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    out = sum(pad[:, i:i + S, :] * conv_w[i].astype(xBC.dtype)
+              for i in range(w))
+    return jax.nn.silu(out + conv_b.astype(xBC.dtype))
+
+
+def ssd_train(cfg: ModelConfig, p: dict, x: jax.Array,
+              ctx: ShardCtx) -> jax.Array:
+    """Chunked SSD over the full sequence. x: (B, S, D) → (B, S, D)."""
+    y, _, _ = _ssd_full(cfg, p, x, ctx)
+    return y
+
+
+def ssd_prefill(cfg: ModelConfig, p: dict, x: jax.Array, ctx: ShardCtx):
+    """Full-sequence SSD that also returns (final_state, conv_cache) so
+    decode can continue the recurrence."""
+    return _ssd_full(cfg, p, x, ctx)
+
+
+def _ssd_full(cfg: ModelConfig, p: dict, x: jax.Array,
+              ctx: ShardCtx):
+    B, S, D = x.shape
+    di, N, H = cfg.dinner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    Q = cfg.ssd_chunk
+    while S % Q:
+        Q //= 2
+    nc = S // Q
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xBC_raw, dt_raw = _split_proj(cfg, proj)
+    # conv cache for decode continuation: last w−1 *pre-conv* channels
+    w = cfg.conv_width
+    conv_cache = jnp.pad(xBC_raw, ((0, 0), (w - 1, 0), (0, 0)))[:, S:, :] \
+        if S < w - 1 else xBC_raw[:, S - (w - 1):, :]
+    xBC = _causal_conv(xBC_raw, p["conv_w"], p["conv_b"])
+    xs = xBC[..., :di].reshape(B, S, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])               # (B, S, H)
+    A = -jnp.exp(p["A_log"])                           # (H,)
+    a = dt * A[None, None, :]                          # log-decay ≤ 0
+    # chunk views
+    xs_c = xs.reshape(B, nc, Q, H, P).astype(jnp.float32)
+    B_c = Bm.reshape(B, nc, Q, N).astype(jnp.float32)
+    C_c = Cm.reshape(B, nc, Q, N).astype(jnp.float32)
+    dt_c = dt.reshape(B, nc, Q, H)
+    a_c = a.reshape(B, nc, Q, H)
+    L = jnp.cumsum(a_c, axis=2)                        # (B, nc, Q, H)
+    # intra-chunk kernel: M[b,h,q,s] = (C_q·B_s)·exp(L_q−L_s)·dt_s, s ≤ q
+    G = jnp.einsum("bnqk,bnsk->bnqs", C_c, B_c)        # (B, nc, Q, Q)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Wd = jnp.exp(L[:, :, :, None, :] - L[:, :, None, :, :]) \
+        * dt_c[:, :, None, :, :]                       # (B,nc,Q,Q,H)
+    Wd = jnp.where(mask[None, None, :, :, None], Wd, 0.0)
+    M = G[..., None] * Wd                              # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", M, xs_c)
+    # inter-chunk state scan
+    decay_out = jnp.exp(L)                                  # exp(L_q)
+    decay_in = jnp.exp(L[:, :, -1:, :] - L) * dt_c          # (B,nc,Q,H)
+
+    def chunk_step(state, xs_chunk):
+        xc, bc, cc, dout, din, lend = xs_chunk
+        # y_state[q] = C_q · (exp(L_q) * state)
+        y_state = jnp.einsum("bqk,bqh,bhpk->bqhp", cc, dout, state)
+        new_state = state * jnp.exp(lend)[:, :, None, None] + \
+            jnp.einsum("bqh,bqhp,bqk->bhpk", din, xc, bc)
+        return new_state, y_state
+
+    state0 = vzeros((B, H, P, N), x)
+    xs_scan = (xs_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+               C_c.transpose(1, 0, 2, 3), decay_out.transpose(1, 0, 2, 3),
+               decay_in.transpose(1, 0, 2, 3),
+               L[:, :, -1, :].transpose(1, 0, 2))
+    final_state, y_state = jax.lax.scan(chunk_step, state0, xs_scan)
+    y = y_intra + y_state.transpose(1, 0, 2, 3, 4)     # (B, nc, Q, H, P)
+    y = y + xs_c * p["D"][None, None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z.astype(jnp.float32))
+    y = ctx.batch_feature(y.astype(x.dtype))
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    return out, final_state, conv_cache
+
+
+def ssd_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+               state: jax.Array, conv_cache: jax.Array,
+               ctx: ShardCtx):
+    """One-token recurrence. x: (B, 1, D); state: (B, H, P, N) f32;
+    conv_cache: (B, w−1, di+2N). Returns (y, state, conv_cache)."""
+    B = x.shape[0]
+    di, N, H = cfg.dinner, cfg.ssm_state, cfg.n_ssm_heads
+    P = di // H
+    w = cfg.conv_width
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype))
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_cache, xBC.astype(conv_cache.dtype)], 1)
+    conv_cache = window[:, 1:, :]
+    conv = sum(window[:, i, :] * p["conv_w"][i].astype(x.dtype)
+               for i in range(w))
+    xBC1 = jax.nn.silu(conv + p["conv_b"].astype(x.dtype))   # (B, C)
+    xt = xBC1[:, :di].reshape(B, H, P).astype(jnp.float32)
+    Bt = xBC1[:, di:di + N].astype(jnp.float32)
+    Ct = xBC1[:, di + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    alpha = jnp.exp(dt * A[None, :])                         # (B, H)
+    state = state * alpha[:, :, None, None] + \
+        jnp.einsum("bh,bhp,bk->bhpk", dt, xt, Bt)
+    y = jnp.einsum("bk,bhpk->bhp", Ct, state) + \
+        xt * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = rms_norm(y, p["norm_scale"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype),
+                     p["w_out"].astype(x.dtype))
+    return out, state, conv_cache

@@ -1,0 +1,423 @@
+"""Model assembly: one scan-based stack covering all assigned families.
+
+Layers are stored *stacked* (every leaf has a leading L axis) and folded
+with `lax.scan`, so the compiled HLO contains one layer body regardless
+of depth — this is what keeps 80-layer × 512-device dry-runs compilable
+in seconds, and what the roofline extractor multiplies back by the trip
+count.
+
+Entry points:
+  init_params(cfg, key)                       — real weights (smoke scale)
+  abstract_params(cfg)                        — ShapeDtypeStructs (dry-run)
+  forward_train(cfg, params, batch, ctx)      — loss + metrics
+  init_cache(cfg, batch, cache_len)           — decode-cache pytree
+  prefill(cfg, params, batch, ctx)            — cache fill + last logits
+  decode_step(cfg, params, cache, token, pos, ctx) — one-token serve step
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (NO_SHARD, ShardCtx, apply_norm, chunked_softmax_xent,
+                     dense, gated_mlp, mlp_params, norm_params)
+
+
+# --------------------------------------------------------------------------
+# parameter construction
+# --------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, cross: bool = False,
+                self_causal: bool = True) -> dict:
+    ks = jax.random.split(key, 8)
+    p: dict = {"ln1": norm_params(cfg, cfg.d_model)}
+    if not cfg.attention_free:
+        p["attn"] = attn.mla_params(ks[0], cfg) if cfg.use_mla \
+            else attn.gqa_params(ks[0], cfg)
+    if cfg.family == "ssm" or cfg.hybrid:
+        p["ssm"] = ssm_mod.ssm_params(ks[1], cfg)
+    if cross:
+        p["cross_ln"] = norm_params(cfg, cfg.d_model)
+        p["cross"] = attn.cross_params(ks[2], cfg)
+    if cfg.n_experts:
+        p["ln2"] = norm_params(cfg, cfg.d_model)
+        p["moe"] = moe_mod.moe_params(ks[3], cfg)
+    elif cfg.d_ff > 0 and not cfg.parallel_block:
+        p["ln2"] = norm_params(cfg, cfg.d_model)
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff)
+    elif cfg.parallel_block:
+        p["mlp"] = mlp_params(ks[3], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _enc_layer_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Encoder layers: dense self-attention, MHA, no experts/ssm."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, family="dense", hybrid=False, n_experts=0, use_mla=False,
+        sliding_window=0, parallel_block=False,
+        n_kv_heads=cfg.n_heads)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kemb, klyr, kenc, khead, kproj = jax.random.split(key, 5)
+    V, D = cfg.padded_vocab, cfg.d_model
+    params: dict = {"embed": dense(kemb, (V, D), scale=0.01),
+                    "final_ln": norm_params(cfg, D)}
+    lkeys = jax.random.split(klyr, cfg.n_layers)
+    params["layers"] = jax.vmap(
+        lambda k: _init_layer(cfg, k, cross=cfg.cross_attention))(lkeys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense(khead, (D, V), scale=0.01)
+    if cfg.encoder_layers:
+        ecfg = _enc_layer_cfg(cfg)
+        ekeys = jax.random.split(kenc, cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_layer(ecfg, k))(ekeys),
+            "final_ln": norm_params(cfg, D)}
+    if cfg.family == "vlm":
+        k1, k2 = jax.random.split(kproj)
+        params["projector"] = {
+            "w1": dense(k1, (cfg.vision_embed_dim, D)),
+            "b1": jnp.zeros((D,), jnp.float32),
+            "w2": dense(k2, (D, D)),
+            "b2": jnp.zeros((D,), jnp.float32)}
+    # ≥2-D weights live in the compute dtype (bf16); the optimizer holds
+    # f32 masters. FSDP gathers and grad reductions move half the bytes.
+    return compute_cast(cfg, params)
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    """ShapeDtypeStruct pytree — no allocation (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, p: dict, h: jax.Array,
+                 positions: jax.Array, ctx: ShardCtx,
+                 enc_out: Optional[jax.Array] = None,
+                 causal: bool = True) -> tuple[jax.Array, dict]:
+    metrics: dict = {}
+    hn = apply_norm(cfg, p["ln1"], h)
+    mix = None
+    if not cfg.attention_free:
+        if cfg.use_mla:
+            mix = attn.mla_train(cfg, p["attn"], hn, positions, ctx)
+        else:
+            mix = attn.gqa_train(cfg, p["attn"], hn, positions, ctx,
+                                 causal=causal)
+    if cfg.family == "ssm" or cfg.hybrid:
+        s = ssm_mod.ssd_train(cfg, p["ssm"], hn, ctx)
+        mix = s if mix is None else 0.5 * (mix + s)
+    if cfg.parallel_block:
+        ff = gated_mlp(p["mlp"], hn, ctx)
+        return h + mix + ff, metrics
+    h = h + mix
+    if "cross" in p and enc_out is not None:
+        cn = apply_norm(cfg, p["cross_ln"], h)
+        ek, ev = attn.encoder_kv(cfg, p["cross"], enc_out)
+        h = h + attn.cross_attend(cfg, p["cross"], cn, ek, ev, ctx)
+    if cfg.n_experts:
+        ff, metrics = moe_mod.moe_apply(
+            cfg, p["moe"], apply_norm(cfg, p["ln2"], h), ctx)
+        h = h + ff
+    elif cfg.d_ff > 0:
+        h = h + gated_mlp(p["mlp"], apply_norm(cfg, p["ln2"], h), ctx)
+    return h, metrics
+
+
+def compute_cast(cfg: ModelConfig, layers: dict) -> dict:
+    """Cast ≥2-D float32 weights to the compute dtype *outside* the layer
+    scan, while still sharded — so FSDP all-gathers inside the loop move
+    bf16, not f32 (halves weight-gather wire bytes; §Perf iteration 3).
+    Norm scales / biases (1-D) stay f32 for stability."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def leaf(x):
+        if hasattr(x, "dtype") and x.dtype == jnp.float32 and x.ndim >= 2:
+            return x.astype(dt)
+        return x
+
+    return jax.tree.map(leaf, layers)
+
+
+def _stack_scan(cfg: ModelConfig, layers: dict, h: jax.Array,
+                positions: jax.Array, ctx: ShardCtx,
+                enc_out: Optional[jax.Array] = None,
+                causal: bool = True, remat: str = "full") -> tuple:
+    def layer_fn(carry, lp):
+        out, met = _block_train(cfg, lp, carry, positions, ctx,
+                                enc_out=enc_out, causal=causal)
+        return ctx.batch_seq(out), met
+
+    if remat == "full":
+        layer_fn = jax.checkpoint(layer_fn)
+    elif remat == "dots":
+        layer_fn = jax.checkpoint(
+            layer_fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    h, mets = jax.lax.scan(layer_fn, h, compute_cast(cfg, layers))
+    return h, mets
+
+
+# --------------------------------------------------------------------------
+# training forward
+# --------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params: dict, tokens: jax.Array,
+           ctx: ShardCtx) -> jax.Array:
+    h = jnp.take(params["embed"], tokens, axis=0)
+    return ctx.batch_seq(h.astype(jnp.dtype(cfg.dtype)))
+
+
+def _vocab_matrix(cfg: ModelConfig, params: dict) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+def _run_encoder(cfg: ModelConfig, params: dict, frames: jax.Array,
+                 ctx: ShardCtx, remat: str) -> jax.Array:
+    ecfg = _enc_layer_cfg(cfg)
+    B, T, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    h = ctx.batch_seq(frames.astype(jnp.dtype(cfg.dtype)))
+    h, _ = _stack_scan(ecfg, params["encoder"]["layers"], h, pos, ctx,
+                       causal=False, remat=remat)
+    return apply_norm(cfg, params["encoder"]["final_ln"], h)
+
+
+def _project_patches(cfg: ModelConfig, params: dict,
+                     patches: jax.Array) -> jax.Array:
+    pj = params["projector"]
+    dt = jnp.dtype(cfg.dtype)
+    h = patches.astype(dt) @ pj["w1"].astype(dt) + pj["b1"].astype(dt)
+    return jax.nn.gelu(h) @ pj["w2"].astype(dt) + pj["b2"].astype(dt)
+
+
+def forward_train(cfg: ModelConfig, params: dict, batch: dict,
+                  ctx: ShardCtx = NO_SHARD, remat: str = "full",
+                  aux_coef: float = 0.01) -> tuple[jax.Array, dict]:
+    """batch: tokens (B,S) targets (B,S) mask (B,S) [+frames|+patches]."""
+    tokens, targets = batch["tokens"], batch["targets"]
+    mask = batch["mask"].astype(jnp.float32)
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens, ctx)
+    enc_out = None
+    n_prefix = 0
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["frames"], ctx, remat)
+    if cfg.family == "vlm":
+        vis = _project_patches(cfg, params, batch["patches"])
+        h = jnp.concatenate([ctx.batch_seq(vis), h], axis=1)
+        n_prefix = vis.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(n_prefix + S), (B, n_prefix + S))
+    h, mets = _stack_scan(cfg, params["layers"], h, positions, ctx,
+                          enc_out=enc_out, remat=remat)
+    h = apply_norm(cfg, params["final_ln"], h)
+    if n_prefix:
+        h = h[:, n_prefix:, :]
+    loss = chunked_softmax_xent(h, _vocab_matrix(cfg, params).astype(h.dtype),
+                                targets, mask)
+    metrics = {"loss": loss}
+    if cfg.n_experts:
+        aux = jnp.mean(mets["moe_aux"])
+        metrics["moe_aux"] = aux
+        metrics["moe_drop_frac"] = jnp.mean(mets["moe_drop_frac"])
+        loss = loss + aux_coef * aux
+    metrics["total_loss"] = loss
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# serving: cache, prefill, decode
+# --------------------------------------------------------------------------
+
+def kv_capacity(cfg: ModelConfig, cache_len: int) -> int:
+    return min(cache_len, cfg.sliding_window) if cfg.sliding_window \
+        else cache_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    L, B = cfg.n_layers, batch
+    cache: dict = {}
+    if not cfg.attention_free:
+        C = kv_capacity(cfg, cache_len)
+        if cfg.use_mla:
+            cache["c"] = jnp.zeros((L, B, C, cfg.kv_lora_rank), dtype)
+            cache["pe"] = jnp.zeros((L, B, C, cfg.qk_rope_dim), dtype)
+        else:
+            cache["k"] = jnp.zeros((L, B, C, cfg.n_kv_heads, cfg.hd), dtype)
+            cache["v"] = jnp.zeros((L, B, C, cfg.n_kv_heads, cfg.hd), dtype)
+    if cfg.family == "ssm" or cfg.hybrid:
+        H, P, N = cfg.n_ssm_heads, cfg.dinner // cfg.n_ssm_heads, \
+            cfg.ssm_state
+        cache["state"] = jnp.zeros((L, B, H, P, N), jnp.float32)
+        cache["conv"] = jnp.zeros(
+            (L, B, cfg.conv_width - 1, cfg.dinner + 2 * cfg.ssm_state),
+            dtype)
+    if cfg.cross_attention:
+        T = cfg.max_source_positions
+        cache["cross_k"] = jnp.zeros((L, B, T, cfg.n_heads, cfg.hd), dtype)
+        cache["cross_v"] = jnp.zeros((L, B, T, cfg.n_heads, cfg.hd), dtype)
+    return cache
+
+
+def _block_decode(cfg: ModelConfig, p: dict, h: jax.Array,
+                  pos: jax.Array, cache_l: dict, ctx: ShardCtx) -> tuple:
+    new_cache = dict(cache_l)
+    hn = apply_norm(cfg, p["ln1"], h)
+    mix = None
+    if not cfg.attention_free:
+        if cfg.use_mla:
+            mix, new_cache["c"], new_cache["pe"] = attn.mla_decode(
+                cfg, p["attn"], hn, pos, cache_l["c"], cache_l["pe"], ctx)
+        else:
+            mix, new_cache["k"], new_cache["v"] = attn.gqa_decode(
+                cfg, p["attn"], hn, pos, cache_l["k"], cache_l["v"], ctx)
+    if cfg.family == "ssm" or cfg.hybrid:
+        s, new_cache["state"], new_cache["conv"] = ssm_mod.ssd_decode(
+            cfg, p["ssm"], hn, cache_l["state"], cache_l["conv"], ctx)
+        mix = s if mix is None else 0.5 * (mix + s)
+    if cfg.parallel_block:
+        return h + mix + gated_mlp(p["mlp"], hn, ctx), new_cache
+    h = h + mix
+    if "cross" in p:
+        cn = apply_norm(cfg, p["cross_ln"], h)
+        h = h + attn.cross_attend(cfg, p["cross"], cn,
+                                  cache_l["cross_k"], cache_l["cross_v"],
+                                  ctx)
+    if cfg.n_experts:
+        ff, _ = moe_mod.moe_apply(cfg, p["moe"],
+                                  apply_norm(cfg, p["ln2"], h), ctx)
+        h = h + ff
+    elif cfg.d_ff > 0:
+        h = h + gated_mlp(p["mlp"], apply_norm(cfg, p["ln2"], h), ctx)
+    return h, new_cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                token: jax.Array, pos: jax.Array,
+                ctx: ShardCtx = NO_SHARD) -> tuple[jax.Array, dict]:
+    """One serve step: token (B,) int32, pos scalar int32 (current index).
+    Returns (logits (B, V), new cache)."""
+    h = _embed(cfg, params, token[:, None], ctx)
+
+    def layer_fn(carry, xs):
+        lp, cache_l = xs
+        out, new_cache_l = _block_decode(cfg, lp, carry, pos, cache_l, ctx)
+        return out, new_cache_l
+
+    h, new_cache = jax.lax.scan(layer_fn, h,
+                                (compute_cast(cfg, params["layers"]), cache))
+    h = apply_norm(cfg, params["final_ln"], h)
+    logits = (h[:, 0, :] @ _vocab_matrix(cfg, params).astype(h.dtype)) \
+        .astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict,
+            ctx: ShardCtx = NO_SHARD, remat: str = "none",
+            cache_len: int = 0) -> tuple:
+    """Fill the cache from a full prompt; returns (cache, last_logits).
+
+    ``cache_len`` sets the cache capacity (≥ prompt length incl. any
+    vision prefix; default exactly prompt length). Sliding-window caches
+    keep only the last `window` entries, ring-indexed by position % C so
+    decode can continue seamlessly.
+
+    The per-layer K/V (or SSD states) produced by the train-path forward
+    are re-derived here layer-by-layer so everything stays inside one
+    scan (compiled once, like training)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    h = _embed(cfg, params, tokens, ctx)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _run_encoder(cfg, params, batch["frames"], ctx, remat)
+    n_prefix = 0
+    if cfg.family == "vlm":
+        vis = _project_patches(cfg, params, batch["patches"])
+        h = jnp.concatenate([ctx.batch_seq(vis), h], axis=1)
+        n_prefix = vis.shape[1]
+    St = n_prefix + S
+    C = kv_capacity(cfg, max(cache_len, St))
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+    start = max(0, St - C)
+    ring = jnp.arange(start, St) % C
+
+    def layer_fn(carry, lp):
+        hh = carry
+        hn = apply_norm(cfg, lp["ln1"], hh)
+        saved: dict = {}
+        mix = None
+        if not cfg.attention_free:
+            if cfg.use_mla:
+                mix = attn.mla_train(cfg, lp["attn"], hn, positions, ctx)
+                ckv = jnp.einsum("bsd,dr->bsr", hn,
+                                 lp["attn"]["wdkv"].astype(hn.dtype))
+                c, k_pe = ckv[..., :cfg.kv_lora_rank], \
+                    ckv[..., cfg.kv_lora_rank:]
+                from .layers import rope as _rope
+                k_pe = _rope(k_pe[:, :, None, :], positions,
+                             cfg.rope_theta)[:, :, 0]
+                cc = jnp.zeros((B, C, cfg.kv_lora_rank), jnp.bfloat16)
+                pc = jnp.zeros((B, C, cfg.qk_rope_dim), jnp.bfloat16)
+                saved["c"] = cc.at[:, ring].set(
+                    c[:, start:].astype(jnp.bfloat16))
+                saved["pe"] = pc.at[:, ring].set(
+                    k_pe[:, start:].astype(jnp.bfloat16))
+            else:
+                q, k, v = attn._project_qkv(cfg, lp["attn"], hn, ctx)
+                from .layers import rope as _rope
+                q = _rope(q, positions, cfg.rope_theta)
+                k = _rope(k, positions, cfg.rope_theta)
+                o = attn.chunked_attention(q, k, v, causal=True,
+                                           window=cfg.sliding_window)
+                o = o.reshape(B, St, cfg.n_heads * cfg.hd)
+                mix = jnp.einsum("bsh,hd->bsd", o,
+                                 lp["attn"]["wo"].astype(hh.dtype))
+                kc = jnp.zeros((B, C) + k.shape[2:], jnp.bfloat16)
+                vc = jnp.zeros((B, C) + v.shape[2:], jnp.bfloat16)
+                saved["k"] = kc.at[:, ring].set(
+                    k[:, start:].astype(jnp.bfloat16))
+                saved["v"] = vc.at[:, ring].set(
+                    v[:, start:].astype(jnp.bfloat16))
+        if cfg.family == "ssm" or cfg.hybrid:
+            s, fstate, fconv = ssm_mod.ssd_prefill(cfg, lp["ssm"], hn, ctx)
+            saved["state"], saved["conv"] = fstate, fconv
+            mix = s if mix is None else 0.5 * (mix + s)
+        if cfg.parallel_block:
+            hh = hh + mix + gated_mlp(lp["mlp"], hn, ctx)
+            return ctx.batch_seq(hh), saved
+        hh = hh + mix
+        if "cross" in lp and enc_out is not None:
+            cn = apply_norm(cfg, lp["cross_ln"], hh)
+            ek, ev = attn.encoder_kv(cfg, lp["cross"], enc_out)
+            saved["cross_k"] = ek.astype(jnp.bfloat16)
+            saved["cross_v"] = ev.astype(jnp.bfloat16)
+            hh = hh + attn.cross_attend(cfg, lp["cross"], cn, ek, ev, ctx)
+        if cfg.n_experts:
+            ff, _ = moe_mod.moe_apply(cfg, lp["moe"],
+                                      apply_norm(cfg, lp["ln2"], hh), ctx)
+            hh = hh + ff
+        elif cfg.d_ff > 0:
+            hh = hh + gated_mlp(lp["mlp"],
+                                apply_norm(cfg, lp["ln2"], hh), ctx)
+        return ctx.batch_seq(hh), saved
+
+    h, cache = jax.lax.scan(layer_fn, h,
+                            compute_cast(cfg, params["layers"]))
+    h = apply_norm(cfg, params["final_ln"], h)
+    logits = (h[:, -1, :] @ _vocab_matrix(cfg, params).astype(h.dtype)) \
+        .astype(jnp.float32)
+    return cache, logits

@@ -1,0 +1,62 @@
+"""Fault injection + retry orchestration.
+
+Real pods lose nodes; the orchestration answer is (a) checkpoint/restart
+for the training loop and (b) idempotent, retryable work units for the
+clique engine's rounds. Both are driven through :class:`FaultDomain` so
+tests can inject deterministic failures and assert bit-identical
+recovery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+
+class SimulatedFault(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FaultDomain:
+    """Deterministic failure injector: fails the Nth..(N+k)th calls."""
+    fail_at: tuple[int, ...] = ()
+    calls: int = 0
+    max_retries: int = 3
+    backoff_s: float = 0.0
+
+    def run(self, fn: Callable, *args, **kwargs):
+        attempts = 0
+        while True:
+            self.calls += 1
+            if self.calls - 1 in self.fail_at:
+                attempts += 1
+                if attempts > self.max_retries:
+                    raise SimulatedFault(
+                        f"work unit failed {attempts} times")
+                if self.backoff_s:
+                    time.sleep(self.backoff_s)
+                continue
+            return fn(*args, **kwargs)
+
+
+@dataclasses.dataclass
+class RoundScheduler:
+    """Executes a list of idempotent work units with retry + progress
+    journal — the clique engine's "speculative execution" stand-in.
+
+    Each unit is (name, thunk); results are kept so a re-run after a
+    mid-round crash (journal says which units completed) only re-executes
+    the missing ones. The engine's units are pure functions of
+    (graph, plan, seed), so re-execution is deterministic.
+    """
+    faults: Optional[FaultDomain] = None
+    journal: dict = dataclasses.field(default_factory=dict)
+
+    def run_round(self, units: list[tuple[str, Callable]]) -> dict:
+        for name, thunk in units:
+            if name in self.journal:
+                continue  # already done before the crash
+            runner = self.faults.run if self.faults else (lambda f: f())
+            self.journal[name] = runner(thunk)
+        return dict(self.journal)

@@ -1,0 +1,57 @@
+"""Serving engine: batched prefill + decode with greedy/temperature
+sampling. One compiled prefill graph + one compiled decode graph,
+re-used across requests of the same (batch, prompt-capacity) class —
+the serving analogue of the clique planner's capacity buckets.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import decode_step, prefill
+from ..models.layers import NO_SHARD, ShardCtx
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ctx: ShardCtx = NO_SHARD):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx
+        self._prefill = jax.jit(
+            lambda p, b, cl: prefill(cfg, p, b, ctx=ctx, cache_len=cl),
+            static_argnums=(2,))
+        self._step = jax.jit(
+            lambda p, c, t, q: decode_step(cfg, p, c, t, q, ctx=ctx))
+
+    def generate(self, batch: dict, max_new_tokens: int,
+                 temperature: float = 0.0, seed: int = 0) -> np.ndarray:
+        """batch: {"tokens": (B, S)} (+frames/patches). Greedy when
+        temperature == 0. Returns (B, max_new_tokens) int32."""
+        B, S = batch["tokens"].shape
+        n_prefix = self.cfg.n_vision_tokens \
+            if self.cfg.family == "vlm" else 0
+        cap = n_prefix + S + max_new_tokens
+        cache, logits = self._prefill(self.params, batch, cap)
+        key = jax.random.PRNGKey(seed)
+        out = []
+        tok = self._sample(logits, temperature, key)
+        pos = n_prefix + S
+        for i in range(max_new_tokens):
+            out.append(np.asarray(tok))
+            logits, cache = self._step(self.params, cache, tok,
+                                       jnp.int32(pos + i))
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+        return np.stack(out, axis=1)
+
+    def _sample(self, logits, temperature, key):
+        logits = logits[..., :self.cfg.vocab_size]
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature, axis=-1).astype(jnp.int32)

@@ -1,0 +1,97 @@
+"""AdamW with global-norm clipping and cosine schedule (self-contained —
+no optax in this container).
+
+Moments inherit parameter shardings, so with the ZeRO-style rules in
+``distributed.sharding`` the optimizer state is automatically sharded
+over (fsdp × tp); there is no separate optimizer-partitioning machinery
+to keep consistent.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class OptState(NamedTuple):
+    """step + first/second moments + f32 master weights.
+
+    Model params live in bf16 (so FSDP gathers and grad reductions move
+    half the bytes — §Perf iteration 3); the optimizer owns the f32
+    master copy and re-casts after each update (standard mixed
+    precision)."""
+    step: jax.Array
+    mu: dict
+    nu: dict
+    master: dict
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32),
+                         params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    return oc.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(oc: OptConfig, params, grads,
+                 state: OptState) -> tuple[dict, OptState, dict]:
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = schedule(oc, step)
+    b1c = 1.0 - oc.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - oc.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if w.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + oc.weight_decay * w
+        w = w - lr * delta
+        return w.astype(p.dtype), m, v, w
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state.mu)
+    flat_v = tdef.flatten_up_to(state.nu)
+    flat_w = tdef.flatten_up_to(state.master)
+    new = [upd(p, g, m, v, w) for p, g, m, v, w in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_w)]
+    params2 = tdef.unflatten([t[0] for t in new])
+    mu2 = tdef.unflatten([t[1] for t in new])
+    nu2 = tdef.unflatten([t[2] for t in new])
+    master2 = tdef.unflatten([t[3] for t in new])
+    return params2, OptState(step=step, mu=mu2, nu=nu2, master=master2), \
+        {"grad_norm": gnorm, "lr": lr}

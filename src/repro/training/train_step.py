@@ -1,0 +1,64 @@
+"""The jitted train step: loss → grads → AdamW, with optional gradient
+accumulation (scan over microbatches) so huge global batches fit.
+
+Overlap note: gradients are produced per-layer inside the backward scan;
+with FSDP shardings XLA's latency-hiding scheduler overlaps the
+reduce-scatter/all-gather pairs with the next layer's compute — we keep
+the structure collective-friendly (one scan body, uniform shapes) rather
+than hand-scheduling. The int8-compressed DP variant lives in
+``training/compression.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ParallelConfig
+from ..models import forward_train
+from ..models.layers import NO_SHARD, ShardCtx
+from .optimizer import OptConfig, OptState, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig,
+                    ctx: ShardCtx = NO_SHARD, remat: str = "full",
+                    grad_accum: int = 1):
+    """Returns train_step(params, opt_state, batch) → (params, opt_state,
+    metrics). Batch leaves have leading dim global_batch; with
+    grad_accum > 1 they are reshaped to (A, B/A, ...) and scanned."""
+
+    def loss_fn(params, microbatch):
+        return forward_train(cfg, params, microbatch, ctx=ctx, remat=remat)
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        if grad_accum == 1:
+            (loss, mets), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            resh = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                acc = carry
+                (l, m), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, m)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metss) = jax.lax.scan(micro, zero, resh)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = jnp.mean(losses)
+            mets = jax.tree.map(jnp.mean, metss)
+        params, opt_state, onorm = adamw_update(oc, params, grads,
+                                                opt_state)
+        mets = dict(mets)
+        mets.update(onorm)
+        mets["loss"] = loss
+        return params, opt_state, mets
+
+    return train_step

@@ -1,0 +1,35 @@
+"""Shared test utilities.
+
+IMPORTANT: no XLA_FLAGS here — smoke tests and benchmarks must see the
+single real CPU device. Multi-device tests spawn subprocesses that set
+``xla_force_host_platform_device_count`` themselves.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8,
+                     timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with N fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{out.stdout}\n"
+            f"STDERR:\n{out.stderr[-4000:]}")
+    return out.stdout
+
+
+@pytest.fixture
+def tmp_workdir(tmp_path):
+    return str(tmp_path)

@@ -1,0 +1,77 @@
+"""Checkpointing: atomicity, GC, resume parity, elastic restore."""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5)},
+            "d": (jnp.ones((2,)), jnp.zeros((3,), jnp.int32))}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree(2.5)
+    m.save(7, t)
+    got, manifest = m.restore(t)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_and_gc(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        m.save(s, _tree(float(s)))
+    assert m.latest_step() == 4
+    assert m.all_steps() == [3, 4]  # GC kept only 2
+    got, _ = m.restore(_tree())
+    assert float(np.asarray(got["a"][0, 0])) == 4.0
+
+
+def test_async_save_then_wait(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=True)
+    m.save(1, _tree(1.0))
+    m.wait()
+    assert m.latest_step() == 1
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """tmp dirs must never be listed as checkpoints."""
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    os.makedirs(os.path.join(str(tmp_path), ".tmp_step_00000009"))
+    assert m.all_steps() == []
+
+
+def test_restore_with_shardings_moves_to_current_mesh(tmp_path):
+    """Elastic path: restore with explicit (trivial) shardings."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    t = _tree(3.0)
+    m.save(1, t)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), t)
+    got, _ = m.restore(t, shardings=sh)
+    assert got["a"].sharding == NamedSharding(mesh, P())
+
+
+def test_manifest_contents(tmp_path):
+    m = CheckpointManager(str(tmp_path), async_save=False)
+    m.save(3, _tree(), extra={"arch": "yi-6b"})
+    with open(os.path.join(str(tmp_path), "step_00000003",
+                           "manifest.json")) as f:
+        man = json.load(f)
+    assert man["extra"]["arch"] == "yi-6b"
+    assert man["n_arrays"] == len(jax.tree.leaves(_tree()))
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        m.restore(_tree())

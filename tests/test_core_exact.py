@@ -1,0 +1,90 @@
+"""Exact SI_k vs independent oracles."""
+import numpy as np
+import pytest
+
+from repro.core import (check_lemma1, clique_count_bruteforce,
+                        complete_graph_cliques, count_cliques,
+                        build_oriented, triangle_count_matrix)
+from repro.graphs import (barabasi_albert, complete_graph, empty_graph,
+                          erdos_renyi, planted_cliques, relabel,
+                          random_graph_for_tests)
+
+
+@pytest.mark.parametrize("k", [3, 4, 5])
+@pytest.mark.parametrize("n", [5, 9, 16])
+def test_complete_graphs(n, k):
+    res = count_cliques(complete_graph(n), k)
+    assert res.count == complete_graph_cliques(n, k)
+
+
+@pytest.mark.parametrize("k", [3, 4, 5, 6])
+def test_er_vs_bruteforce(k):
+    g = erdos_renyi(36, 0.35, seed=k)
+    assert count_cliques(g, k).count == clique_count_bruteforce(g, k)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_random_graphs_all_k(seed):
+    g = random_graph_for_tests(seed)
+    for k in (3, 4, 5):
+        assert count_cliques(g, k).count == clique_count_bruteforce(g, k)
+
+
+def test_triangles_match_matrix_oracle():
+    g = barabasi_albert(250, 7, seed=3)
+    assert count_cliques(g, 3).count == triangle_count_matrix(g)
+
+
+def test_per_node_attribution_matches_bruteforce():
+    g = erdos_renyi(40, 0.4, seed=11)
+    for k in (3, 4, 5):
+        res = count_cliques(g, k, return_per_node=True)
+        _, pn = clique_count_bruteforce(g, k, return_per_node=True)
+        np.testing.assert_array_equal(
+            np.round(res.per_node).astype(np.int64), pn)
+
+
+def test_empty_and_tiny():
+    assert count_cliques(empty_graph(10), 3).count == 0
+    g = erdos_renyi(4, 0.0, seed=0)
+    assert count_cliques(g, 3).count == 0
+
+
+def test_planted_cliques_dominate():
+    g = planted_cliques(100, 0.02, [10, 8], seed=5)
+    # background too sparse for 6-cliques: counts come from plants only
+    assert count_cliques(g, 6).count == clique_count_bruteforce(g, 6)
+    from math import comb
+    assert count_cliques(g, 8).count >= comb(10, 8)
+
+
+def test_relabel_invariance():
+    g = erdos_renyi(30, 0.4, seed=2)
+    rng = np.random.default_rng(0)
+    g2 = relabel(g, rng.permutation(g.n))
+    for k in (3, 4, 5):
+        assert count_cliques(g, k).count == count_cliques(g2, k).count
+
+
+def test_lemma1_bound_holds():
+    for seed in range(4):
+        g = barabasi_albert(300, 9, seed=seed)
+        og = build_oriented(g)
+        assert check_lemma1(g, og.out_deg)
+        assert og.out_deg.max() <= 2 * np.sqrt(g.m)
+
+
+def test_ni_plus_plus_matches_exact():
+    g = barabasi_albert(200, 6, seed=1)
+    exact = count_cliques(g, 3)
+    nipp = count_cliques(g, 3, method="ni++")
+    assert nipp.count == exact.count
+    assert nipp.mrc.rounds == 2 and exact.mrc.rounds == 3
+
+
+def test_pallas_engine_matches_jnp_engine():
+    g = erdos_renyi(50, 0.3, seed=9)
+    for k in (3, 4):
+        a = count_cliques(g, k, engine="jnp").count
+        b = count_cliques(g, k, engine="pallas").count
+        assert a == b

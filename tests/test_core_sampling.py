@@ -1,0 +1,84 @@
+"""Sampling estimators: unbiasedness, determinism, accuracy trends."""
+import numpy as np
+import pytest
+
+from repro.core import count_cliques
+from repro.core.mrc import theorem2_min_p, theorem3_max_colors
+from repro.graphs import barabasi_albert, complete_graph, erdos_renyi
+
+
+@pytest.fixture(scope="module")
+def ba_graph():
+    return barabasi_albert(400, 10, seed=5)
+
+
+@pytest.fixture(scope="module")
+def exact_counts(ba_graph):
+    return {k: count_cliques(ba_graph, k).count for k in (3, 4)}
+
+
+@pytest.mark.parametrize("method,kw", [
+    ("edge", {"p": 0.5}), ("color", {"colors": 2}),
+    ("color_smooth", {"colors": 2})])
+def test_estimator_unbiased_k3(ba_graph, exact_counts, method, kw):
+    ests = [count_cliques(ba_graph, 3, method=method, seed=s, **kw).estimate
+            for s in range(12)]
+    mean = float(np.mean(ests))
+    exact = exact_counts[3]
+    # CV at p=0.5 here is ~2%; 12 seeds → ±3σ ≈ 2%
+    assert abs(mean - exact) / exact < 0.05, (mean, exact)
+
+
+def test_estimator_deterministic_per_seed(ba_graph):
+    a = count_cliques(ba_graph, 4, method="color", colors=3, seed=7)
+    b = count_cliques(ba_graph, 4, method="color", colors=3, seed=7)
+    assert a.estimate == b.estimate
+    c = count_cliques(ba_graph, 4, method="color", colors=3, seed=8)
+    assert a.estimate != c.estimate  # different seed, different sample
+
+
+def test_sampling_probability_one_is_exact(ba_graph, exact_counts):
+    res = count_cliques(ba_graph, 3, method="edge", p=1.0)
+    assert res.count == exact_counts[3]
+    res = count_cliques(ba_graph, 4, method="color", colors=1)
+    assert res.count == exact_counts[4]
+
+
+def test_color_beats_edge_at_equal_rate():
+    """Paper §4 Discussion: at equal pair-sampling rate (p = 1/c), color
+    sampling keeps far more cliques for k ≥ 4, hence lower variance."""
+    g = barabasi_albert(500, 12, seed=3)
+    exact = count_cliques(g, 4).count
+    edge = [count_cliques(g, 4, method="edge", p=1 / 3, seed=s).estimate
+            for s in range(10)]
+    col = [count_cliques(g, 4, method="color", colors=3, seed=s).estimate
+           for s in range(10)]
+    rmse_e = np.sqrt(np.mean((np.array(edge) - exact) ** 2)) / exact
+    rmse_c = np.sqrt(np.mean((np.array(col) - exact) ** 2)) / exact
+    assert rmse_c < rmse_e, (rmse_c, rmse_e)
+
+
+def test_complete_graph_estimates():
+    g = complete_graph(24)
+    exact = count_cliques(g, 5).count
+    ests = [count_cliques(g, 5, method="color", colors=2, seed=s).estimate
+            for s in range(20)]
+    assert abs(np.mean(ests) - exact) / exact < 0.3
+
+
+def test_theorem_parameter_helpers():
+    p = theorem2_min_p(m=10000, qk=1e6, k=4, eps=0.1)
+    assert 0 < p <= 1.0
+    c = theorem3_max_colors(m=10000, qk=1e6, k=4, eps=0.1)
+    assert c >= 1
+    # more cliques → can sample more aggressively
+    assert theorem2_min_p(10000, 1e8, 4) <= theorem2_min_p(10000, 1e5, 4)
+    assert theorem3_max_colors(10000, 1e8, 4) >= \
+        theorem3_max_colors(10000, 1e5, 4)
+
+
+def test_mrc_volume_reduction_under_sampling(ba_graph):
+    ex = count_cliques(ba_graph, 4).mrc
+    sm = count_cliques(ba_graph, 4, method="color", colors=10).mrc
+    assert sm.round3_pairs < ex.round3_pairs
+    assert sm.sample_factor == pytest.approx(0.1)

@@ -1,0 +1,108 @@
+"""Distributed clique engine: multi-worker equality, split round,
+balance, elastic worker counts. Multi-device cases run in subprocesses
+with fake host devices (the main process must keep 1 device)."""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.core import clique_count_bruteforce, count_cliques
+from repro.core.distributed import count_cliques_distributed
+from repro.core.plan import balance_report, build_plan, partition_for_workers
+from repro.core.split import split_cost_model, split_heavy
+from repro.core import build_oriented
+from repro.graphs import barabasi_albert, erdos_renyi
+
+
+def test_single_device_distributed_matches_exact():
+    g = erdos_renyi(70, 0.25, seed=1)
+    for k in (3, 4, 5):
+        assert count_cliques_distributed(g, k).count == \
+            clique_count_bruteforce(g, k)
+
+
+def test_split_round_exactness_and_cost_model():
+    g = barabasi_albert(250, 9, seed=2)
+    bf = clique_count_bruteforce(g, 4)
+    og = build_oriented(g)
+    # pick a threshold that provably splits something (p90 of out-degs)
+    thr = int(np.percentile(og.out_deg[og.out_deg >= 3], 90))
+    res = count_cliques_distributed(g, 4, split_threshold=thr)
+    assert res.count == bf
+    cm = split_cost_model(og, 4, thr)
+    assert cm["n_heavy"] > 0
+    assert cm["split_max_unit_cost"] <= cm["base_max_unit_cost"]
+    assert cm["speedup_bound"] >= 1.0
+
+
+def test_partition_is_balanced_and_covers_all_nodes():
+    g = barabasi_albert(400, 10, seed=3)
+    og = build_oriented(g)
+    plan = build_plan(og, 4)
+    for w in (2, 4, 8):
+        plans = partition_for_workers(plan, og, w)
+        nodes = np.concatenate(
+            [b.nodes[b.nodes >= 0] for p in plans for b in p.buckets])
+        expect = np.concatenate(
+            [b.nodes[b.nodes >= 0] for b in plan.buckets])
+        assert sorted(nodes.tolist()) == sorted(expect.tolist())
+        rep = balance_report(plan, og, w)
+        assert rep["imbalance"] < 1.35, rep
+
+
+def test_sampling_invariant_to_worker_count():
+    """RNG keyed by node id ⇒ the estimate is identical for any W."""
+    g = barabasi_albert(300, 8, seed=9)
+    a = count_cliques(g, 4, method="color", colors=3, seed=5).estimate
+    b = count_cliques_distributed(
+        g, 4, method="color", colors=3, seed=5).estimate
+    assert abs(a - b) <= 1e-3 * max(abs(a), 1.0)
+
+
+@pytest.mark.slow
+def test_eight_workers_exact_and_elastic():
+    run_with_devices("""
+from repro.graphs import barabasi_albert
+from repro.core.distributed import count_cliques_distributed
+from repro.core import clique_count_bruteforce
+import jax, numpy as np
+g = barabasi_albert(300, 8, seed=9)
+bf = clique_count_bruteforce(g, 4)
+full = count_cliques_distributed(g, 4)
+assert full.n_workers == 8 and full.count == bf, (full.count, bf)
+# elastic: 4-device sub-mesh of the same host
+mesh4 = jax.sharding.Mesh(np.array(jax.devices()[:4]), ("workers",))
+sub = count_cliques_distributed(g, 4, mesh=mesh4)
+assert sub.n_workers == 4 and sub.count == bf
+# split round on 8 workers
+s = count_cliques_distributed(g, 4, split_threshold=16)
+assert s.count == bf
+# sampling identical on 8 workers vs 4
+e8 = count_cliques_distributed(g, 4, method="color", colors=3, seed=5)
+e4 = count_cliques_distributed(g, 4, method="color", colors=3, seed=5,
+                               mesh=mesh4)
+assert abs(e8.estimate - e4.estimate) < 1e-3 * abs(e8.estimate or 1)
+print("OK")
+""", n_devices=8)
+
+
+@pytest.mark.slow
+def test_degree_computation_distributed():
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.graphs import erdos_renyi
+from repro.graphs.degree import degrees_sharded, degrees_from_edges
+g = erdos_renyi(100, 0.2, seed=0)
+mesh = jax.sharding.Mesh(np.array(jax.devices()), ("w",))
+m = g.edges.shape[0]
+pad = (-m) % 8
+edges = np.concatenate([g.edges, np.full((pad, 2), -1)], 0).astype(np.int32)
+fn = jax.jit(jax.shard_map(
+    lambda e: degrees_sharded(e, 100, "w"), mesh=mesh,
+    in_specs=(P("w", None),), out_specs=P()))
+got = np.asarray(fn(jnp.asarray(edges)))[:100]
+want = np.asarray(degrees_from_edges(jnp.asarray(g.edges), 100))
+assert (got == want).all()
+print("OK")
+""", n_devices=8)

@@ -1,0 +1,104 @@
+"""Deliverable (f): per-architecture smoke tests — reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.configs.base import SHAPES, ShapeConfig, cell_is_runnable
+from repro.data.pipeline import make_pipeline
+from repro.models import (decode_step, forward_train, init_cache,
+                          init_params)
+
+SHAPE = ShapeConfig("tiny", 32, 4, "train")
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_and_train_step_no_nans(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.family == get_config(arch).family
+    params = init_params(cfg, KEY)
+    batch = {k: jnp.asarray(v) for k, v in
+             next(make_pipeline(cfg, SHAPE, seed=1)).items()}
+    loss, mets = jax.jit(
+        lambda p, b: forward_train(cfg, p, b, remat="none"))(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+    from repro.training.optimizer import OptConfig, init_opt_state
+    from repro.training.train_step import make_train_step
+    step = jax.jit(make_train_step(cfg, OptConfig(lr=1e-3), remat="none"))
+    p2, o2, m2 = step(params, init_opt_state(params), batch)
+    for leaf in jax.tree.leaves(p2):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    assert np.isfinite(float(m2["loss"]))
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_step_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    B = 3
+    cache = init_cache(cfg, B, 16)
+    logits, cache2 = jax.jit(
+        lambda p, c, t: decode_step(cfg, p, c, t, jnp.int32(0)))(
+            params, cache, jnp.zeros((B,), jnp.int32))
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_full_config_matches_assignment(arch):
+    """Exact figures from the assignment brief."""
+    cfg = get_config(arch)
+    expect = {
+        "hymba-1.5b": (32, 1600, 25, 5, 5504, 32001),
+        "command-r-35b": (40, 8192, 64, 8, 22528, 256000),
+        "qwen1.5-4b": (40, 2560, 20, 20, 6912, 151936),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "tinyllama-1.1b": (22, 2048, 32, 4, 5632, 32000),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+        "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expect, (got, expect)
+
+
+def test_special_config_fields():
+    assert get_config("deepseek-v2-lite-16b").kv_lora_rank == 512
+    assert get_config("deepseek-v2-lite-16b").n_experts == 64
+    assert get_config("deepseek-v2-lite-16b").n_experts_per_tok == 6
+    assert get_config("mixtral-8x7b").n_experts == 8
+    assert get_config("mixtral-8x7b").n_experts_per_tok == 2
+    assert get_config("hymba-1.5b").ssm_state == 16
+    assert get_config("mamba2-370m").ssm_state == 128
+    assert get_config("whisper-small").encoder_layers == 12
+
+
+def test_long_500k_skip_rule():
+    runs = {a: cell_is_runnable(get_config(a), SHAPES["long_500k"])[0]
+            for a in list_archs()}
+    assert runs == {
+        "hymba-1.5b": True, "mixtral-8x7b": True, "mamba2-370m": True,
+        "command-r-35b": False, "qwen1.5-4b": False, "yi-6b": False,
+        "tinyllama-1.1b": False, "whisper-small": False,
+        "internvl2-76b": False, "deepseek-v2-lite-16b": False}
+
+
+def test_param_counts_in_expected_range():
+    """Analytic param counts should be within ~35% of the nameplate size
+    (names are marketing; vocab padding and stubs shift things)."""
+    expect = {"tinyllama-1.1b": 1.1e9, "yi-6b": 6e9, "mixtral-8x7b": 46e9,
+              "command-r-35b": 35e9, "mamba2-370m": 370e6,
+              "deepseek-v2-lite-16b": 16e9, "qwen1.5-4b": 4e9,
+              "hymba-1.5b": 1.5e9, "internvl2-76b": 70e9,
+              "whisper-small": 244e6}
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * want < got < 1.45 * want, (arch, got, want)

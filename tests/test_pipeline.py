@@ -1,0 +1,43 @@
+"""Pipeline parallelism: pipelined forward ≡ sequential forward."""
+import pytest
+
+from conftest import run_with_devices
+
+from repro.distributed.pipeline import bubble_fraction
+
+
+def test_bubble_fraction():
+    assert bubble_fraction(1, 8) == 0.0
+    assert bubble_fraction(4, 4) == pytest.approx(3 / 7)
+    assert bubble_fraction(2, 30) < 0.04  # many microbatches amortize
+
+
+@pytest.mark.slow
+def test_pipelined_forward_matches_sequential():
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_mesh
+from repro.distributed.pipeline import pipeline_forward
+
+L, D, B = 8, 16, 12
+key = jax.random.PRNGKey(0)
+w = jax.random.normal(key, (L, D, D)) * 0.3
+
+def block_fn(stage_params, x):
+    def layer(c, wl):
+        return jnp.tanh(c @ wl), ()
+    y, _ = jax.lax.scan(layer, x, stage_params)
+    return y
+
+x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+# sequential reference
+ref = block_fn(w, x)
+mesh = make_mesh((4, 2), ("pipe", "data"))
+for n_stages, n_micro in ((4, 4), (4, 6)):
+    fn = pipeline_forward(block_fn, n_stages, n_micro, mesh, axis="pipe")
+    got = jax.jit(fn)(w, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-6)
+print("OK")
+""", n_devices=8, timeout=600)

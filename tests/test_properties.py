@@ -1,0 +1,94 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_oriented, check_lemma1,
+                        clique_count_bruteforce, count_cliques)
+from repro.core.order import ranks
+from repro.graphs import (erdos_renyi, from_edges, relabel, union,
+                          random_graph_for_tests)
+
+
+graphs = st.integers(min_value=0, max_value=10_000)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=graphs, k=st.integers(3, 5))
+def test_exact_count_matches_bruteforce(seed, k):
+    g = random_graph_for_tests(seed, max_n=28)
+    assert count_cliques(g, k).count == clique_count_bruteforce(g, k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=graphs)
+def test_relabeling_invariance(seed):
+    g = random_graph_for_tests(seed, max_n=24)
+    rng = np.random.default_rng(seed + 1)
+    g2 = relabel(g, rng.permutation(g.n))
+    assert count_cliques(g, 4).count == count_cliques(g2, 4).count
+
+
+@settings(max_examples=10, deadline=None)
+@given(s1=graphs, s2=graphs)
+def test_disjoint_union_additivity(s1, s2):
+    a = random_graph_for_tests(s1, max_n=20)
+    b = random_graph_for_tests(s2, max_n=20)
+    u = union(a, b)
+    for k in (3, 4):
+        assert count_cliques(u, k).count == \
+            count_cliques(a, k).count + count_cliques(b, k).count
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=graphs)
+def test_edge_addition_monotone(seed):
+    """Adding one edge can never decrease any clique count."""
+    g = random_graph_for_tests(seed, max_n=20)
+    rng = np.random.default_rng(seed)
+    u, v = rng.integers(0, g.n, 2)
+    if u == v:
+        return
+    g2 = from_edges(np.concatenate([g.edges, [[u, v]]], 0), n=g.n)
+    for k in (3, 4):
+        assert count_cliques(g2, k).count >= count_cliques(g, k).count
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=graphs)
+def test_lemma1_always_holds(seed):
+    g = random_graph_for_tests(seed, max_n=40)
+    og = build_oriented(g)
+    assert check_lemma1(g, og.out_deg)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=graphs)
+def test_orientation_is_total_order(seed):
+    """ranks are a permutation and orientation is acyclic by rank."""
+    g = random_graph_for_tests(seed, max_n=40)
+    r = ranks(g.degrees)
+    assert sorted(r.tolist()) == list(range(g.n))
+    og = build_oriented(g)
+    for u in range(min(g.n, 12)):
+        for x in og.gamma_plus(u):
+            assert r[u] < r[x]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=graphs, p=st.sampled_from([0.5, 1.0]))
+def test_edge_sampling_never_overcounts_at_p1(seed, p):
+    g = random_graph_for_tests(seed, max_n=22)
+    exact = count_cliques(g, 3).count
+    est = count_cliques(g, 3, method="edge", p=p, seed=seed).estimate
+    if p == 1.0:
+        assert round(est) == exact
+    else:
+        assert est >= 0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=graphs)
+def test_per_node_counts_sum_to_total(seed):
+    g = random_graph_for_tests(seed, max_n=26)
+    res = count_cliques(g, 4, return_per_node=True)
+    assert int(round(res.per_node.sum())) == res.count

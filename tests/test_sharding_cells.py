@@ -1,0 +1,155 @@
+"""Sharding rules + cell construction + multi-device lowering (subprocess)."""
+import numpy as np
+import pytest
+import jax
+
+from conftest import run_with_devices
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ParallelConfig, SHAPES
+
+
+def test_param_spec_rules():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import param_spec
+    cfg = get_config("yi-6b")
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    par = ParallelConfig()
+    mesh = FakeMesh()
+    # ffn weight: d_ff goes to model, d_model to data
+    s = param_spec("layers/mlp/w_gate", (32, 4096, 11008), cfg, mesh, par)
+    assert s == P(None, "data", "model")
+    # stacked per-layer vectors: never shard the layer dim; the feature
+    # dim may take the fsdp axis (ZeRO-style) but not tp
+    s = param_spec("layers/ln1/scale", (32, 4096), cfg, mesh, par)
+    assert s[0] is None and "model" not in tuple(s)
+    # embedding: vocab on model
+    s = param_spec("embed", (cfg.padded_vocab, 4096), cfg, mesh, par)
+    assert s == P("model", "data")
+
+
+def test_moe_expert_sharding():
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed.sharding import param_spec
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    # deepseek: 64 experts divide the 16-way tp axis → experts on model
+    dcfg = get_config("deepseek-v2-lite-16b")
+    s = param_spec("layers/moe/w_gate", (27, 64, 2048, 1408), dcfg,
+                   FakeMesh(), ParallelConfig())
+    assert s[1] == "model"
+    # mixtral: 8 experts don't divide 16 → falls through to dim rules;
+    # the spec must still be constructible and shard something
+    mcfg = get_config("mixtral-8x7b")
+    s = param_spec("layers/moe/w_gate", (32, 8, 4096, 14336), mcfg,
+                   FakeMesh(), ParallelConfig())
+    assert any(a is not None for a in s)
+
+
+def test_input_specs_shapes():
+    from repro.launch.cells import input_specs
+    sp = input_specs("yi-6b", "train_4k")
+    assert sp["batch"]["tokens"].shape == (256, 4096)
+    sp = input_specs("yi-6b", "decode_32k")
+    assert sp["token"].shape == (128,)
+    cache = sp["cache"]
+    assert cache["k"].shape == (32, 128, 32768, 4, 128)
+    sp = input_specs("mixtral-8x7b", "long_500k")
+    assert sp["cache"]["k"].shape[2] == 4096  # SWA ring, not 524288
+    sp = input_specs("mamba2-370m", "long_500k")
+    assert "state" in sp["cache"] and "k" not in sp["cache"]
+    sp = input_specs("whisper-small", "prefill_32k")
+    assert sp["batch"]["frames"].shape == (32, 1500, 768)
+
+
+@pytest.mark.slow
+def test_lower_and_compile_small_mesh_train_and_decode():
+    """End-to-end cell lowering on an 8-device mesh (smoke of the
+    dry-run machinery without 512 devices)."""
+    run_with_devices("""
+import jax
+from repro.launch.mesh import make_mesh
+from repro.launch.cells import build_cell, lower_cell
+from repro.configs.base import ParallelConfig
+from repro.launch.hlo_analysis import analyze_hlo
+mesh = make_mesh((4, 2), ("data", "model"))
+par = ParallelConfig(dp_axes=("data",))
+for arch, shape in [("tinyllama-1.1b", "train_4k"),
+                    ("deepseek-v2-lite-16b", "decode_32k"),
+                    ("mamba2-370m", "long_500k"),
+                    ("whisper-small", "prefill_32k")]:
+    cell = build_cell(arch, shape, mesh, par)
+    compiled = lower_cell(cell).compile()
+    st = analyze_hlo(compiled.as_text())
+    assert st.dot_flops > 0, (arch, shape)
+    ma = compiled.memory_analysis()
+    assert ma.temp_size_in_bytes > 0
+    print(arch, shape, "ok")
+print("OK")
+""", n_devices=8, timeout=900)
+
+
+@pytest.mark.slow
+def test_elastic_checkpoint_restore_across_meshes():
+    """Save sharded state on a (4,2) mesh, restore onto (2,2) — the
+    elastic-rescale path end to end."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp, tempfile
+from repro.launch.mesh import make_mesh
+from repro.configs import get_smoke_config
+from repro.models import init_params, abstract_params
+from repro.distributed.sharding import param_shardings
+from repro.configs.base import ParallelConfig
+from repro.checkpoint.manager import CheckpointManager
+cfg = get_smoke_config("yi-6b")
+par = ParallelConfig(dp_axes=("data",))
+params = init_params(cfg, jax.random.PRNGKey(0))
+mesh1 = make_mesh((4, 2), ("data", "model"))
+sh1 = param_shardings(abstract_params(cfg), cfg, mesh1, par)
+p1 = jax.tree.map(jax.device_put, params, sh1)
+with tempfile.TemporaryDirectory() as d:
+    m = CheckpointManager(d, async_save=False)
+    m.save(1, p1)
+    mesh2 = make_mesh((2, 2), ("data", "model"))
+    sh2 = param_shardings(abstract_params(cfg), cfg, mesh2, par)
+    p2, _ = m.restore(params, shardings=sh2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("OK")
+""", n_devices=8, timeout=600)
+
+
+def test_hlo_analysis_on_multidevice_module():
+    run_with_devices("""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.launch.hlo_analysis import analyze_hlo
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+L, D, F, B = 6, 256, 512, 32
+def f(w1, w2, x):
+    def body(c, ws):
+        a, b = ws
+        return c + jax.nn.relu(c @ a) @ b, ()
+    y, _ = jax.lax.scan(body, x, (w1, w2))
+    return jnp.mean(y ** 2)
+args = (jax.ShapeDtypeStruct((L, D, F), jnp.float32),
+        jax.ShapeDtypeStruct((L, F, D), jnp.float32),
+        jax.ShapeDtypeStruct((B, D), jnp.float32))
+sh = (NamedSharding(mesh, P(None, "data", "model")),
+      NamedSharding(mesh, P(None, "model", "data")),
+      NamedSharding(mesh, P("data", None)))
+c = jax.jit(f, in_shardings=sh).lower(*args).compile()
+st = analyze_hlo(c.as_text())
+logical = L * 2 * 2 * B * D * F
+assert abs(st.dot_flops - logical / 8) / (logical / 8) < 0.01, st.dot_flops
+assert st.total_collective_bytes > 0
+print("OK")
+""", n_devices=8)
