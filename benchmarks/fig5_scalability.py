@@ -23,10 +23,11 @@ from .common import emit
 SNIPPET = """
 import time
 from repro.graphs import rmat
-from repro.core.distributed import count_cliques_distributed
+from repro.engine import CliqueEngine, CountRequest
 g = rmat(10, 12, seed=3, name="scal")
+eng = CliqueEngine(g, backend="shard_map")
 t0 = time.perf_counter()
-r = count_cliques_distributed(g, {k}, method="{method}", colors=10)
+r = eng.submit(CountRequest(k={k}, method="{method}", colors=10))
 print(r.estimate, time.perf_counter() - t0)
 """
 

@@ -15,6 +15,7 @@ MODULES = [
     "benchmarks.fig4_subgraph_sizes",  # paper Figure 4
     "benchmarks.fig5_scalability",  # paper Figure 5
     "benchmarks.fig6_stragglers",   # paper Figure 6
+    "benchmarks.engine_sweep",      # session amortization (submit_many)
     "benchmarks.table_mrc",         # Theorem 1 bounds
     "benchmarks.kernels_bench",     # kernel layer
     "benchmarks.roofline_report",   # §Roofline table

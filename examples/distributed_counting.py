@@ -1,4 +1,5 @@
-"""Distributed clique counting across workers + fault-tolerant rounds.
+"""Distributed clique counting: one engine session over a workers mesh,
+plus fault-tolerant rounds.
 
 Run with several fake devices to exercise the real shard_map path:
 
@@ -8,38 +9,48 @@ Run with several fake devices to exercise the real shard_map path:
 import jax
 
 from repro.core import clique_count_bruteforce
-from repro.core.distributed import count_cliques_distributed
+from repro.engine import CliqueEngine, CountRequest
 from repro.graphs import rmat
 from repro.runtime.faults import FaultDomain, RoundScheduler
 
 g = rmat(10, 12, seed=3)
 print(f"graph: n={g.n} m={g.m}; devices={jax.device_count()}")
 
+# one session over all local devices: CSR replicated once, the
+# jit(shard_map(...)) executables compiled once per capacity class
+eng = CliqueEngine(g, backend="shard_map")
+
 # --- exact, distributed over all local devices ---------------------------
-res = count_cliques_distributed(g, 4)
+res = eng.submit(CountRequest(k=4))
 print(f"q_4 = {res.count} on {res.n_workers} workers "
       f"(LPT imbalance {res.balance['imbalance']:.3f})")
 
 # --- §6 split round: cap the heaviest reducer -----------------------------
-res_split = count_cliques_distributed(g, 4, split_threshold=64)
+res_split = eng.submit(CountRequest(k=4, split_threshold=64))
 assert res_split.count == res.count
 print(f"split round (threshold 64): same count, "
       f"heavy subgraphs rerouted as (node, pivot) units")
 
 # --- sampled, bit-identical under any worker count ------------------------
-e = count_cliques_distributed(g, 5, method="color_smooth", colors=8,
-                              seed=5)
+e = eng.submit(CountRequest(k=5, method="color_smooth", colors=8, seed=5))
 print(f"SIC_5 estimate = {e.estimate:.0f} "
       f"(per-round bytes: {e.per_round_bytes})")
 
 # --- fault-tolerant round execution ---------------------------------------
+# retried units resubmit against the same session: the plan and compiled
+# executables are already cached, so a retry costs only the count itself
 faults = FaultDomain(fail_at=(1,), max_retries=2)   # unit 1 fails once
 sched = RoundScheduler(faults=faults)
 units = [(f"k{k}", (lambda kk: (lambda:
-          count_cliques_distributed(g, kk).count))(k)) for k in (3, 4)]
+          eng.submit(CountRequest(k=kk)).count))(k)) for k in (3, 4)]
 out = sched.run_round(units)
 print("fault-injected round results:", out,
       f"(calls incl. retries: {faults.calls})")
 bf = clique_count_bruteforce(g, 3)
 assert out["k3"] == bf
 print("verified against brute force:", bf)
+
+stats = eng.session_stats()
+print(f"session: {stats['n_queries']} queries, "
+      f"executables {stats['executables']['hits']} hits / "
+      f"{stats['executables']['misses']} builds")

@@ -1,30 +1,37 @@
-"""Quickstart: count k-cliques exactly and approximately, single host.
+"""Quickstart: one CliqueEngine session, many queries, single host.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import clique_count_bruteforce, count_cliques
+from repro.core import clique_count_bruteforce
 from repro.core.mrc import theorem3_max_colors
+from repro.engine import CliqueEngine, CountRequest
 from repro.graphs import barabasi_albert
 
 # a small scale-free graph (heavy-tailed degrees, like the paper's data)
 g = barabasi_albert(2000, 10, seed=1)
 print(f"graph: n={g.n} m={g.m}")
 
+# one session: the oriented CSR is built and uploaded exactly once;
+# plans and compiled tile executables are cached across every query
+eng = CliqueEngine(g)
+
 # --- exact counting (algorithm SI_k, all three rounds) -------------------
-for k in (3, 4, 5):
-    res = count_cliques(g, k)
-    print(f"q_{k} = {res.count:>10d}   "
-          f"(plan: {res.plan_summary['n_units']} units, "
-          f"pad waste {res.plan_summary['pad_frac']:.1%}, "
-          f"{res.timings['total_s']:.2f}s)")
+for rep in eng.submit_many([CountRequest(k=k) for k in (3, 4, 5)]):
+    print(f"q_{rep.k} = {rep.count:>10d}   "
+          f"(plan: {rep.plan_summary['n_units']} units, "
+          f"pad waste {rep.plan_summary['pad_frac']:.1%}, "
+          f"{rep.timings['total_s']:.2f}s, plan cache {rep.cache['plan']})")
 
 # --- sampled counting (SIC_k, color sampling with smoothing) -------------
-exact = count_cliques(g, 4).count
+# reuses the cached k=4 plan AND the compiled executables: note the hits
+exact = eng.submit(CountRequest(k=4)).count
 for colors in (2, 4, 8):
-    res = count_cliques(g, 4, method="color_smooth", colors=colors, seed=0)
-    err = abs(res.estimate - exact) / exact
-    print(f"SIC_4 c={colors}: estimate={res.estimate:12.0f} "
-          f"err={err:.2%}  (round-3 volume ×{res.mrc.sample_factor:.2f})")
+    rep = eng.submit(CountRequest(k=4, method="color_smooth",
+                                  colors=colors, seed=0))
+    err = abs(rep.estimate - exact) / exact
+    print(f"SIC_4 c={colors}: estimate={rep.estimate:12.0f} "
+          f"err={err:.2%}  (round-3 volume ×{rep.mrc.sample_factor:.2f}, "
+          f"exec cache {rep.cache['exec_hits']} hits)")
 
 # --- how aggressively may we sample? (Theorem 3) --------------------------
 c_max = theorem3_max_colors(g.m, exact, k=4, eps=0.1)
@@ -32,11 +39,20 @@ print(f"Theorem 3: with q_4={exact}, up to c={c_max} colors keeps "
       f"ε=0.1 concentration w.h.p.")
 
 # --- per-node outputs (the exact engine attributes cliques to nodes) ------
-res = count_cliques(g, 3, return_per_node=True)
-top = res.per_node.argsort()[-3:][::-1]
+rep = eng.submit(CountRequest(k=3, return_per_node=True))
+top = rep.per_node.argsort()[-3:][::-1]
 print("top triangle-responsible nodes:", top.tolist())
 
-# --- the same counts via the Pallas kernel path ---------------------------
-res_k = count_cliques(g, 3, engine="pallas")
-assert res_k.count == res.count
-print("pallas kernel path agrees:", res_k.count)
+# --- the same counts via the Pallas kernel backend, same session ----------
+rep_k = eng.submit(CountRequest(k=3, backend="pallas"))
+assert rep_k.count == rep.count
+print("pallas kernel backend agrees:", rep_k.count)
+
+# --- sanity vs brute force + session telemetry ----------------------------
+assert rep.count == clique_count_bruteforce(g, 3)
+stats = eng.session_stats()
+print(f"session: {stats['n_queries']} queries, "
+      f"plan cache {stats['plans']['hits']} hits / "
+      f"{stats['plans']['misses']} misses, "
+      f"executables {stats['executables']['hits']} hits / "
+      f"{stats['executables']['misses']} builds")

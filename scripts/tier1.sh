@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Pre-merge check: the tier-1 test suite plus a fast engine smoke test.
+#   ./scripts/tier1.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python -m repro.launch.count --graph rmat:8:4 --k 4 --method color

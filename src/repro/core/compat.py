@@ -1,0 +1,43 @@
+"""Version-compat shims for the jax API surface the engine touches.
+
+The repo targets the jax.shard_map / jax.sharding.AxisType API; older
+jax releases (≤ 0.4.x) ship the same machinery under
+``jax.experimental.shard_map`` and without ``AxisType``. Import from
+here instead of from jax directly so every call site works on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax ≥ 0.5: top-level export
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:  # jax ≤ 0.4.x
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+try:  # jax ≥ 0.5
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:
+    AxisType = None  # sentinel: this jax has no explicit/auto axis types
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """shard_map with the static replication/VMA check disabled — for
+    bodies whose output replication the older checker cannot infer
+    (e.g. optimizer steps mixing psum'd grads with carried state)."""
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:  # newer jax renamed the flag
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh`` with ``axis_types`` only where supported."""
+    if AxisType is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(AxisType.Auto,) * len(axes))
+        except TypeError:  # make_mesh predates the axis_types kwarg
+            pass
+    return jax.make_mesh(shape, axes)

@@ -10,13 +10,17 @@ Counting identities (A is (B, D, D), strictly upper-triangular 0/1):
 Each r-clique of the underlying graph appears exactly once as an
 increasing tuple, so no division by symmetry is needed. The same math is
 implemented as a Pallas TPU kernel in ``repro.kernels.cliques``; this
-module is the jnp reference path and the single-host estimator driver.
+module is the jnp reference path and hosts the *shared tile path* every
+backend of :class:`repro.engine.CliqueEngine` routes through.
+
+Sampling parameters ``p`` and ``c`` are traced (not compile-time
+static), so one compiled tile executable per ``(capacity, r, method,
+engine)`` serves every sampling rate in a session.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 import time
 from typing import Optional
 
@@ -25,9 +29,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graphs.formats import Graph
-from .csr import OrientedGraph, build_oriented
-from .extract import DeviceCSR, extract_adjacency, to_device
-from .plan import Plan, build_plan
+from .csr import OrientedGraph
+from .extract import DeviceCSR, extract_adjacency
+from .plan import Plan
 from . import mrc as mrc_mod
 
 
@@ -67,6 +71,14 @@ def dag_count_flops(D: int, B: int, r: int) -> float:
     return D * (2.0 * B * D * D + dag_count_flops(D, B, r - 1))
 
 
+def _dag_count_engine(A: jax.Array, r: int, engine: str) -> jax.Array:
+    """Dispatch the counting identity to the jnp or Pallas implementation."""
+    if engine == "pallas":
+        from ..kernels.cliques import ops as cliques_ops
+        return cliques_ops.dag_count_pallas(A, r)
+    return dag_count(A, r)
+
+
 # --------------------------------------------------------------------------
 # sampling masks (Section 4)
 # --------------------------------------------------------------------------
@@ -80,7 +92,7 @@ def _per_node_keys(key: jax.Array, nodes: jax.Array) -> jax.Array:
 
 
 def edge_sample_mask(key: jax.Array, nodes: jax.Array, D: int,
-                     p: float) -> jax.Array:
+                     p) -> jax.Array:
     """Bernoulli(p) mask over each node's candidate pairs (map 2 with
     probability p)."""
     ks = _per_node_keys(key, nodes)
@@ -100,7 +112,7 @@ def color_mask(key: jax.Array, nodes: jax.Array, D: int,
     return (colors[:, :, None] == colors[:, None, :]).astype(jnp.float32)
 
 
-def smoothed_colors(out_deg: jax.Array, c: int, k: int) -> jax.Array:
+def smoothed_colors(out_deg: jax.Array, c, k: int) -> jax.Array:
     """Smoothed color count (Section 5.1): "changes smoothly (up to the
     given threshold c) according to the degree of the node, being smaller
     for nodes with fewer neighbors".
@@ -111,15 +123,40 @@ def smoothed_colors(out_deg: jax.Array, c: int, k: int) -> jax.Array:
     preserved because the reducer rescales per-node by c_u^{k−2}.
     """
     cu = jnp.floor(out_deg.astype(jnp.float32) / float(max(k - 1, 1)))
-    return jnp.clip(cu, 1.0, float(c)).astype(jnp.int32)
+    cmax = jnp.asarray(c, jnp.float32)  # c may be traced (session-cached)
+    return jnp.clip(cu, 1.0, cmax).astype(jnp.int32)
+
+
+def apply_sampling(A: jax.Array, nodes: jax.Array, out_deg: jax.Array,
+                   key: jax.Array, *, method: str, r: int, p, c
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Shared Section-4 sampling step for every tile path: returns
+    (A_masked, per-node rescale). ``p``/``c`` are traced values."""
+    D = A.shape[-1]
+    scale = jnp.ones((nodes.shape[0],), jnp.float32)
+    if method == "edge":
+        A = A * edge_sample_mask(key, nodes, D, p)
+        pf = jnp.asarray(p, jnp.float32)
+        scale = scale / pf ** np.float32(r * (r - 1) / 2.0)
+    elif method in ("color", "color_smooth"):
+        if method == "color_smooth":
+            ncol = smoothed_colors(out_deg, c, r + 1)
+        else:
+            ncol = jnp.full(nodes.shape, c, jnp.int32)
+        A = A * color_mask(key, nodes, D, ncol)
+        scale = scale * ncol.astype(jnp.float32) ** np.float32(r - 1)
+    return A, scale
 
 
 # --------------------------------------------------------------------------
-# the estimator driver (single host; the distributed engine wraps this)
+# the shared tile path (every engine backend routes through these)
 # --------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class CountResult:
+    """Legacy single-host result (kept for the deprecated
+    :func:`count_cliques` wrapper; new code reads
+    :class:`repro.engine.CountReport`)."""
     k: int
     method: str
     estimate: float
@@ -134,34 +171,43 @@ class CountResult:
         return int(round(self.estimate))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("capacity", "n_iters", "r", "method",
-                                    "p", "c", "engine"))
-def _count_tile(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
+def tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
                 capacity: int, n_iters: int, r: int, method: str,
-                p: float, c: int, engine: str) -> jax.Array:
+                p, c, engine: str = "jnp") -> jax.Array:
     """Extract + (optionally sample) + count one tile. Returns (B,) f32
-    per-node *rescaled* estimates."""
+    per-node *rescaled* estimates. Unjitted: the local backend jits it
+    as ``_count_tile``; the shard_map workers fold it under lax.map."""
     A, _ = extract_adjacency(csr, nodes, capacity=capacity, n_iters=n_iters)
-    scale = jnp.ones((nodes.shape[0],), jnp.float32)
-    if method == "edge":
-        mask = edge_sample_mask(key, nodes, capacity, p)
-        A = A * mask
-        scale = scale * np.float32(1.0 / p ** (r * (r - 1) / 2.0))
-    elif method in ("color", "color_smooth"):
-        deg = csr.out_deg[jnp.maximum(nodes, 0)]
-        if method == "color_smooth":
-            ncol = smoothed_colors(deg, c, r + 1)
-        else:
-            ncol = jnp.full(nodes.shape, c, jnp.int32)
-        A = A * color_mask(key, nodes, capacity, ncol)
-        scale = scale * ncol.astype(jnp.float32) ** np.float32(r - 1)
-    if engine == "pallas":
-        from ..kernels.cliques import ops as cliques_ops
-        counts = cliques_ops.dag_count_pallas(A, r)
-    else:
-        counts = dag_count(A, r)
-    return counts * scale
+    deg = csr.out_deg[jnp.maximum(nodes, 0)]
+    A, scale = apply_sampling(A, nodes, deg, key, method=method, r=r,
+                              p=p, c=c)
+    return _dag_count_engine(A, r, engine) * scale
+
+
+def split_tile_values(csr: DeviceCSR, nodes: jax.Array, pivots: jax.Array,
+                      key: jax.Array, *, capacity: int, n_iters: int,
+                      r: int, method: str, p, c,
+                      engine: str = "jnp") -> jax.Array:
+    """§6 split units, one (node, pivot) per lane: counts (k−2)-cliques
+    in A_u masked by pivot row v — the outermost pivot level lifted out
+    of the kernel. Returns (B,) f32 rescaled partial estimates."""
+    A, _ = extract_adjacency(csr, nodes, capacity=capacity, n_iters=n_iters)
+    deg = csr.out_deg[jnp.maximum(nodes, 0)]
+    A, scale = apply_sampling(A, nodes, deg, key, method=method, r=r,
+                              p=p, c=c)
+    rows = jnp.take_along_axis(
+        A, pivots[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    if r - 1 == 1:  # k=3: 1-cliques below pivot v = |Γ⁺(v) ∩ G⁺(u)|
+        return jnp.sum(rows, axis=1) * scale
+    Bv = A * rows[:, :, None] * rows[:, None, :]
+    return _dag_count_engine(Bv, r - 1, engine) * scale
+
+
+_TILE_STATICS = ("capacity", "n_iters", "r", "method", "engine")
+_count_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
+    tile_values)
+_split_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
+    split_tile_values)
 
 
 def _tile_batches(nodes: np.ndarray, capacity: int,
@@ -177,6 +223,24 @@ def _tile_batches(nodes: np.ndarray, capacity: int,
         yield tile
 
 
+def _split_batches(nodes: np.ndarray, pivots: np.ndarray, capacity: int,
+                   elem_budget: int = 1 << 23):
+    """Tile a split plan's (node, pivot) unit lists the same way."""
+    B = max(8, min(len(nodes), elem_budget // (capacity * capacity)))
+    B += (-B) % 8
+    for i in range(0, len(nodes), B):
+        tn, tp = nodes[i:i + B], pivots[i:i + B]
+        if len(tn) < B:
+            pad = B - len(tn)
+            tn = np.concatenate([tn, np.full(pad, -1, np.int32)])
+            tp = np.concatenate([tp, np.zeros(pad, np.int32)])
+        yield tn, tp
+
+
+# --------------------------------------------------------------------------
+# deprecated single-host entry point (thin wrapper over the engine)
+# --------------------------------------------------------------------------
+
 def count_cliques(g: Graph, k: int, method: str = "exact",
                   p: float = 0.1, colors: int = 10,
                   seed: int = 0, engine: str = "jnp",
@@ -184,6 +248,11 @@ def count_cliques(g: Graph, k: int, method: str = "exact",
                   og: Optional[OrientedGraph] = None,
                   plan: Optional[Plan] = None) -> CountResult:
     """Count (exactly) or estimate the number of k-cliques of ``g``.
+
+    .. deprecated:: use :class:`repro.engine.CliqueEngine` — it builds
+       the oriented CSR once per *graph* instead of once per call and
+       caches plans/executables across queries. This wrapper spins up a
+       throwaway engine per call and adapts its report.
 
     methods:
       "exact"        — SI_k (Algorithm 1)
@@ -193,40 +262,18 @@ def count_cliques(g: Graph, k: int, method: str = "exact",
       "ni++"         — Node Iterator++ [34]; k must be 3 (2-round baseline)
     engine: "jnp" reference path or "pallas" (interpret on CPU, MXU on TPU).
     """
-    assert k >= 3
-    if method == "ni++":
-        assert k == 3, "NI++ is a triangle-counting baseline"
+    from ..engine import CliqueEngine, CountRequest
     t0 = time.perf_counter()
-    og = og or build_oriented(g)
-    plan = plan or build_plan(og, k)
-    t_plan = time.perf_counter() - t0
-
-    csr = to_device(og)
-    key = jax.random.PRNGKey(seed)
-    r = k - 1
-    total = 0.0
-    per_node = np.zeros(g.n, np.float64) if return_per_node else None
-    t_count = 0.0
-    eff_method = "exact" if method == "ni++" else method
-    for b in plan.buckets:
-        for tile in _tile_batches(b.nodes, b.capacity):
-            t1 = time.perf_counter()
-            vals = _count_tile(csr, jnp.asarray(tile), key,
-                               capacity=b.capacity,
-                               n_iters=og.lookup_iters, r=r,
-                               method=eff_method, p=float(p),
-                               c=int(colors), engine=engine)
-            vals = np.asarray(jax.block_until_ready(vals), np.float64)
-            t_count += time.perf_counter() - t1
-            total += float(vals.sum())
-            if per_node is not None:
-                sel = tile >= 0
-                np.add.at(per_node, tile[sel], vals[sel])
-    stats = mrc_mod.compute_stats(og, plan, method=method, p=p,
-                                  colors=colors)
+    eng = CliqueEngine(g, backend="pallas" if engine == "pallas"
+                       else "local", og=og)
+    if plan is not None:
+        eng.warm_plan(plan)
+    rep = eng.submit(CountRequest(k=k, method=method, p=p, colors=colors,
+                                  seed=seed,
+                                  return_per_node=return_per_node))
+    timings = dict(rep.timings)
+    timings["total_s"] = time.perf_counter() - t0
     return CountResult(
-        k=k, method=method, estimate=total, per_node=per_node, mrc=stats,
-        plan_summary=plan.cost_summary(),
-        timings={"plan_s": t_plan, "count_s": t_count,
-                 "total_s": time.perf_counter() - t0},
+        k=k, method=method, estimate=rep.estimate, per_node=rep.per_node,
+        mrc=rep.mrc, plan_summary=rep.plan_summary, timings=timings,
         params={"p": p, "colors": colors, "seed": seed, "engine": engine})

@@ -1,6 +1,7 @@
-"""Distributed clique engine: shard_map over a ``workers`` mesh axis.
+"""Deprecated distributed entry point (thin wrapper over the engine).
 
-Mapping of the paper's machinery onto the pod:
+Mapping of the paper's machinery onto the pod (now implemented by
+``repro.engine.backends.ShardMapBackend``):
 
   - reducers            → per-device batched tiles (static shapes)
   - shuffle             → none needed: the oriented CSR is replicated
@@ -15,95 +16,27 @@ Mapping of the paper's machinery onto the pod:
 
 The engine is elastic by construction: the worker count is read off the
 mesh at call time, and any plan re-partitions to any worker count.
+
+.. deprecated:: prefer ``CliqueEngine(g, backend="shard_map")`` — it
+   keeps the CSR on device and the compiled `jit(shard_map(...))`
+   executables cached across queries; this wrapper rebuilds a throwaway
+   session per call (exactly the seed behavior, minus the duplicated
+   sampling/count code).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
 
 from ..graphs.formats import Graph
-from .count import (color_mask, dag_count, edge_sample_mask,
-                    smoothed_colors)
-from .csr import build_oriented
-from .extract import extract_adjacency, gather_neighbors, to_device
-from .plan import build_plan, partition_for_workers
-from .split import split_heavy
-from . import mrc as mrc_mod
-
-
-def _apply_sampling(A, nodes, key, out_deg, *, method: str, p: float,
-                    c: int, r: int):
-    """Shared sampling logic; returns (A_masked, per-node scale)."""
-    D = A.shape[-1]
-    scale = jnp.ones((nodes.shape[0],), jnp.float32)
-    if method == "edge":
-        A = A * edge_sample_mask(key, nodes, D, p)
-        scale = scale * np.float32(1.0 / p ** (r * (r - 1) / 2.0))
-    elif method in ("color", "color_smooth"):
-        if method == "color_smooth":
-            ncol = smoothed_colors(out_deg, c, r + 1)
-        else:
-            ncol = jnp.full(nodes.shape, c, jnp.int32)
-        A = A * color_mask(key, nodes, D, ncol)
-        scale = scale * ncol.astype(jnp.float32) ** np.float32(r - 1)
-    return A, scale
-
-
-def _worker_bucket_sum(csr, nodes_shard, key, *, capacity, n_iters, r,
-                       method, p, c, tile_b, axis):
-    """Runs on each worker: count its shard of one capacity class.
-
-    nodes_shard: (1, T·tile_b) on this device — reshaped to tiles and
-    folded with `lax.map` so the compiled program is one tile body.
-    """
-    nodes = nodes_shard.reshape(-1, tile_b)
-
-    def one_tile(tile_nodes):
-        A, _ = extract_adjacency(csr, tile_nodes, capacity=capacity,
-                                 n_iters=n_iters)
-        deg = csr.out_deg[jnp.maximum(tile_nodes, 0)]
-        A, scale = _apply_sampling(A, tile_nodes, key, deg, method=method,
-                                   p=p, c=c, r=r)
-        return jnp.sum(dag_count(A, r) * scale)
-
-    local = jnp.sum(jax.lax.map(one_tile, nodes))
-    return jax.lax.psum(local, axis)
-
-
-def _worker_split_sum(csr, nodes_shard, pivots_shard, key, *, capacity,
-                      n_iters, r, method, p, c, tile_b, axis):
-    """§6 split units: one (node, pivot) per unit; counts (k−2)-cliques in
-    A_u masked by pivot row v. The adjacency is re-extracted per unit —
-    the dense analogue of replicating G⁺(u) to reducer (u, v)."""
-    nodes = nodes_shard.reshape(-1, tile_b)
-    pivots = pivots_shard.reshape(-1, tile_b)
-
-    def one_tile(args):
-        tile_nodes, tile_pivots = args
-        A, _ = extract_adjacency(csr, tile_nodes, capacity=capacity,
-                                 n_iters=n_iters)
-        deg = csr.out_deg[jnp.maximum(tile_nodes, 0)]
-        A, scale = _apply_sampling(A, tile_nodes, key, deg, method=method,
-                                   p=p, c=c, r=r)
-        rows = jnp.take_along_axis(
-            A, tile_pivots[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        if r - 1 == 1:  # k=3: 1-cliques below pivot v = |Γ⁺(v) ∩ G⁺(u)|
-            return jnp.sum(jnp.sum(rows, axis=1) * scale)
-        Bv = A * rows[:, :, None] * rows[:, None, :]
-        return jnp.sum(dag_count(Bv, r - 1) * scale)
-
-    local = jnp.sum(jax.lax.map(one_tile, (nodes, pivots)))
-    return jax.lax.psum(local, axis)
 
 
 @dataclasses.dataclass
 class DistributedResult:
+    """Legacy result shape (new code reads
+    :class:`repro.engine.CountReport`)."""
     k: int
     method: str
     estimate: float
@@ -129,81 +62,13 @@ def count_cliques_distributed(
     ``split_threshold`` set, nodes with |Γ⁺(u)| above it are rerouted
     through the §6 split round.
     """
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = jax.sharding.Mesh(devs, (axis,))
-    W = mesh.shape[axis]
-    og = build_oriented(g)
-    plan = build_plan(og, k)
-    splits = []
-    if split_threshold is not None:
-        plan, splits = split_heavy(plan, og, k, split_threshold)
-    csr = to_device(og)
-    key = jax.random.PRNGKey(seed)
-    r = k - 1
-    eff_method = "exact" if method == "ni++" else method
-
-    total = 0.0
-    worker_plans = partition_for_workers(plan, og, W)
-    # per capacity class: stack worker shards → (W, width), shard_map it
-    caps = sorted({b.capacity for wp in worker_plans for b in wp.buckets})
-    for cap in caps:
-        per_w = []
-        for wp in worker_plans:
-            arrs = [b.nodes for b in wp.buckets if b.capacity == cap]
-            per_w.append(np.concatenate(arrs) if arrs
-                         else np.zeros(0, np.int32))
-        width = max(len(a) for a in per_w)
-        tile_b = max(8, min(width, tile_elem_budget // (cap * cap)))
-        tile_b += (-tile_b) % 8
-        width += (-width) % tile_b
-        stacked = np.full((W, width), -1, np.int32)
-        for i, a in enumerate(per_w):
-            stacked[i, :len(a)] = a
-        fn = jax.jit(jax.shard_map(
-            functools.partial(_worker_bucket_sum, capacity=cap,
-                              n_iters=og.lookup_iters, r=r,
-                              method=eff_method, p=float(p), c=int(colors),
-                              tile_b=tile_b, axis=axis),
-            mesh=mesh,
-            in_specs=(P(), P(axis, None), P()),
-            out_specs=P()))
-        total += float(fn(csr, jnp.asarray(stacked), key))
-
-    for sp in splits:
-        units = np.stack([sp.nodes, sp.pivots], axis=1)
-        pad = (-len(units)) % (8 * W)
-        units = np.concatenate(
-            [units, np.tile([[-1, 0]], (pad, 1)).astype(np.int32)])
-        per = len(units) // W
-        tile_b = max(8, min(per, tile_elem_budget // (sp.capacity ** 2)))
-        tile_b += (-tile_b) % 8
-        per += (-per) % tile_b
-        stacked_n = np.full((W, per), -1, np.int32)
-        stacked_p = np.zeros((W, per), np.int32)
-        # round-robin so consecutive pivots of one node spread out (LPT-ish)
-        for i in range(len(units)):
-            w, j = i % W, i // W
-            stacked_n[w, j], stacked_p[w, j] = units[i]
-        fn = jax.jit(jax.shard_map(
-            functools.partial(_worker_split_sum, capacity=sp.capacity,
-                              n_iters=og.lookup_iters, r=r,
-                              method=eff_method, p=float(p), c=int(colors),
-                              tile_b=tile_b, axis=axis),
-            mesh=mesh,
-            in_specs=(P(), P(axis, None), P(axis, None), P()),
-            out_specs=P()))
-        total += float(fn(csr, jnp.asarray(stacked_n),
-                          jnp.asarray(stacked_p), key))
-
-    csr_bytes = 4.0 * (og.n + 1 + 2 * og.m + og.n)
-    from .plan import balance_report
+    from ..engine import CliqueEngine, CountRequest
+    eng = CliqueEngine(g, backend="shard_map", mesh=mesh, axis=axis,
+                       dist_tile_budget=tile_elem_budget)
+    rep = eng.submit(CountRequest(k=k, method=method, p=p, colors=colors,
+                                  seed=seed,
+                                  split_threshold=split_threshold))
     return DistributedResult(
-        k=k, method=method, estimate=total, n_workers=W,
-        per_round_bytes={
-            "csr_replication_allgather": csr_bytes * (W - 1),
-            "count_allreduce": 4.0 * W,
-            "paper_round2_shuffle_equiv":
-                mrc_mod.compute_stats(og, plan).round2_pairs * 8.0,
-        },
-        balance=balance_report(plan, og, W))
+        k=k, method=method, estimate=rep.estimate,
+        n_workers=rep.n_workers, per_round_bytes=rep.per_round_bytes,
+        balance=rep.balance)

@@ -81,8 +81,9 @@ def pipeline_forward(block_fn, n_stages: int, n_micro: int,
 
         xm = x.reshape((n_micro, mb) + x.shape[1:])
         pspec = jax.tree.map(lambda _: P(axis), stages)
-        run = jax.shard_map(body, mesh=mesh,
-                            in_specs=(pspec, P()), out_specs=P(axis))
+        from ..core.compat import shard_map
+        run = shard_map(body, mesh=mesh,
+                        in_specs=(pspec, P()), out_specs=P(axis))
         out = run(stages, xm)           # (S·n_micro, mb, ...)
         out = out[(n_stages - 1) * n_micro:]   # last stage's block
         return out.reshape(x.shape)

@@ -1,0 +1,21 @@
+"""Session-style clique-counting engine: one query API over the
+single-host jnp, Pallas-kernel, and shard_map execution backends.
+
+    from repro.engine import CliqueEngine, CountRequest
+
+    eng = CliqueEngine(graph)                 # orient + upload CSR once
+    rep = eng.submit(CountRequest(k=4))       # exact q_4
+    sweep = eng.submit_many([CountRequest(k=k) for k in (3, 4, 5)])
+
+The legacy ``repro.core.count_cliques`` / ``count_cliques_distributed``
+entry points are thin deprecated wrappers over this engine.
+"""
+from .backends import Backend, ExecutableCache, LocalBackend, ShardMapBackend
+from .engine import CliqueEngine, PlanEntry
+from .report import BACKENDS, METHODS, CountReport, CountRequest
+
+__all__ = [
+    "CliqueEngine", "CountRequest", "CountReport", "PlanEntry",
+    "Backend", "LocalBackend", "ShardMapBackend", "ExecutableCache",
+    "BACKENDS", "METHODS",
+]

@@ -1,0 +1,224 @@
+"""Engine backends: one shared tile path, three execution strategies.
+
+  "local"     — jnp tile path on the default device
+  "pallas"    — same tile path with the Pallas MXU kernel for round 3
+  "shard_map" — workers-axis mesh; per-capacity bucket shards + psum
+
+All three consume the same plan, the same device CSR, and the same
+sampling/count math from ``repro.core.count`` — the collapse of the
+seed's duplicated ``_count_tile`` vs ``_apply_sampling``/
+``_worker_bucket_sum`` forks.
+
+The engine's ExecutableCache keys by ``(kind, capacity, r, method, …)``.
+For the shard_map backend it caches the actual ``jit(shard_map(...))``
+objects the seed rebuilt (and so recompiled) on every distributed call
+— that is where the cache saves real compilation. For the local/pallas
+backends the tile functions are jitted at module scope in
+``repro.core.count`` with jax's process-wide compile cache, so even a
+throwaway engine skips recompiles there; the engine-level entries are
+cheap partial bindings whose hit/miss counts serve as per-session
+telemetry, not as the thing preventing recompilation.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.compat import shard_map
+from ..core.count import (_count_tile, _split_batches, _split_tile,
+                          _tile_batches, split_tile_values, tile_values)
+
+
+class ExecutableCache:
+    """Session-lifetime cache of compiled callables with hit telemetry."""
+
+    def __init__(self) -> None:
+        self._fns: dict[tuple, Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple, build: Callable[[], Callable]) -> Callable:
+        fn = self._fns.get(key)
+        if fn is None:
+            self.misses += 1
+            fn = self._fns[key] = build()
+        else:
+            self.hits += 1
+        return fn
+
+    def snapshot(self) -> tuple[int, int]:
+        return self.hits, self.misses
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+
+class Backend(abc.ABC):
+    """Executes one planned query against the engine's device CSR."""
+
+    name: str
+
+    @property
+    @abc.abstractmethod
+    def n_workers(self) -> int:
+        ...
+
+    @abc.abstractmethod
+    def run(self, eng, entry, req, key) -> tuple[float, Optional[np.ndarray]]:
+        """Returns (estimate, per_node or None)."""
+
+
+# --------------------------------------------------------------------------
+# local (single-device) backend: jnp or pallas round-3 kernel
+# --------------------------------------------------------------------------
+
+class LocalBackend(Backend):
+    def __init__(self, kind: str = "jnp",
+                 tile_elem_budget: int = 1 << 23) -> None:
+        assert kind in ("jnp", "pallas")
+        self.kind = kind
+        self.name = "pallas" if kind == "pallas" else "local"
+        self.budget = tile_elem_budget
+
+    @property
+    def n_workers(self) -> int:
+        return 1
+
+    def run(self, eng, entry, req, key):
+        r = req.k - 1
+        method = req.effective_method
+        p, c = float(req.p), int(req.colors)
+        total = 0.0
+        per_node = (np.zeros(eng.og.n, np.float64)
+                    if req.return_per_node else None)
+
+        def accumulate(vals, ids):
+            nonlocal total
+            vals = np.asarray(jax.block_until_ready(vals), np.float64)
+            total += float(vals.sum())
+            if per_node is not None:
+                sel = ids >= 0
+                np.add.at(per_node, ids[sel], vals[sel])
+
+        for b in entry.plan.buckets:
+            fn = eng.executables.get(
+                ("tile", self.kind, b.capacity, r, method),
+                lambda cap=b.capacity: functools.partial(
+                    _count_tile, capacity=cap,
+                    n_iters=eng.og.lookup_iters, r=r, method=method,
+                    engine=self.kind))
+            for tile in _tile_batches(b.nodes, b.capacity, self.budget):
+                accumulate(fn(eng.csr, jnp.asarray(tile), key, p=p, c=c),
+                           tile)
+        for sp in entry.splits:
+            fn = eng.executables.get(
+                ("split", self.kind, sp.capacity, r, method),
+                lambda cap=sp.capacity: functools.partial(
+                    _split_tile, capacity=cap,
+                    n_iters=eng.og.lookup_iters, r=r, method=method,
+                    engine=self.kind))
+            for tn, tp in _split_batches(sp.nodes, sp.pivots, sp.capacity,
+                                         self.budget):
+                accumulate(fn(eng.csr, jnp.asarray(tn), jnp.asarray(tp),
+                              key, p=p, c=c), tn)
+        return total, per_node
+
+
+# --------------------------------------------------------------------------
+# shard_map backend: workers-axis mesh, per-capacity shards, psum
+# --------------------------------------------------------------------------
+
+def _worker_bucket_sum(csr, nodes_shard, key, p, c, *, capacity, n_iters,
+                       r, method, tile_b, axis):
+    """Runs on each worker: count its shard of one capacity class.
+
+    nodes_shard: (1, T·tile_b) on this device — reshaped to tiles and
+    folded with `lax.map` so the compiled program is one tile body —
+    the same ``tile_values`` body the local backend jits.
+    """
+    nodes = nodes_shard.reshape(-1, tile_b)
+
+    def one_tile(tile_nodes):
+        return jnp.sum(tile_values(csr, tile_nodes, key, p=p, c=c,
+                                   capacity=capacity, n_iters=n_iters,
+                                   r=r, method=method))
+
+    local = jnp.sum(jax.lax.map(one_tile, nodes))
+    return jax.lax.psum(local, axis)
+
+
+def _worker_split_sum(csr, nodes_shard, pivots_shard, key, p, c, *,
+                      capacity, n_iters, r, method, tile_b, axis):
+    """§6 split units: one (node, pivot) per unit; counts (k−2)-cliques in
+    A_u masked by pivot row v — ``split_tile_values``, the dense analogue
+    of replicating G⁺(u) to reducer (u, v)."""
+    nodes = nodes_shard.reshape(-1, tile_b)
+    pivots = pivots_shard.reshape(-1, tile_b)
+
+    def one_tile(args):
+        tile_nodes, tile_pivots = args
+        return jnp.sum(split_tile_values(csr, tile_nodes, tile_pivots,
+                                         key, p=p, c=c, capacity=capacity,
+                                         n_iters=n_iters, r=r,
+                                         method=method))
+
+    local = jnp.sum(jax.lax.map(one_tile, (nodes, pivots)))
+    return jax.lax.psum(local, axis)
+
+
+class ShardMapBackend(Backend):
+    name = "shard_map"
+
+    def __init__(self, mesh: Optional[jax.sharding.Mesh] = None,
+                 axis: str = "workers",
+                 tile_elem_budget: int = 1 << 22) -> None:
+        if mesh is None:
+            mesh = jax.sharding.Mesh(np.array(jax.devices()), (axis,))
+        self.mesh = mesh
+        self.axis = axis
+        self.budget = tile_elem_budget
+
+    @property
+    def n_workers(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def _wrap(self, body, n_arrays: int):
+        """jit(shard_map(body)): csr replicated, stacked work arrays
+        sharded over the workers axis, (key, p, c) replicated."""
+        in_specs = ((P(),) + (P(self.axis, None),) * n_arrays
+                    + (P(), P(), P()))
+        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                 out_specs=P()))
+
+    def run(self, eng, entry, req, key):
+        W = self.n_workers
+        sharded = entry.sharded(eng.og, W, self.budget)
+        r = req.k - 1
+        method = req.effective_method
+        p = jnp.float32(req.p)
+        c = jnp.int32(req.colors)
+        total = 0.0
+        for sb in sharded.buckets:
+            fn = eng.executables.get(
+                ("wsum", sb.capacity, sb.tile_b, r, method, W, self.axis),
+                lambda sb=sb: self._wrap(functools.partial(
+                    _worker_bucket_sum, capacity=sb.capacity,
+                    n_iters=eng.og.lookup_iters, r=r, method=method,
+                    tile_b=sb.tile_b, axis=self.axis), n_arrays=1))
+            total += float(fn(eng.csr, sb.nodes, key, p, c))
+        for ss in sharded.splits:
+            fn = eng.executables.get(
+                ("wsplit", ss.capacity, ss.tile_b, r, method, W,
+                 self.axis),
+                lambda ss=ss: self._wrap(functools.partial(
+                    _worker_split_sum, capacity=ss.capacity,
+                    n_iters=eng.og.lookup_iters, r=r, method=method,
+                    tile_b=ss.tile_b, axis=self.axis), n_arrays=2))
+            total += float(fn(eng.csr, ss.nodes, ss.pivots, key, p, c))
+        return total, None

@@ -1,0 +1,78 @@
+"""Request/report types for the session engine.
+
+One request type and one report type cover every backend — the engine's
+answer to the seed API's fork into ``CountResult`` (single host) vs
+``DistributedResult`` (shard_map) with incompatible fields.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import mrc as mrc_mod
+
+METHODS = ("exact", "edge", "color", "color_smooth", "ni++")
+BACKENDS = ("local", "pallas", "shard_map")
+
+
+@dataclasses.dataclass(frozen=True)
+class CountRequest:
+    """One query against a :class:`CliqueEngine` session.
+
+    ``backend=None`` uses the engine's default; any request may override
+    it, so one session can serve e.g. exact shard_map sweeps and quick
+    local sampled probes side by side.
+    """
+    k: int
+    method: str = "exact"
+    p: float = 0.1                       # edge-sampling rate
+    colors: int = 10                     # SIC_k color count c
+    seed: int = 0
+    backend: Optional[str] = None        # None → engine default
+    return_per_node: bool = False        # local/pallas backends only
+    split_threshold: Optional[int] = None  # §6 split round for |Γ⁺|>thr
+    max_capacity: Optional[int] = None   # clamp the planner's classes
+
+    def validate(self) -> None:
+        if self.k < 3:
+            raise ValueError(f"k must be ≥ 3, got {self.k}")
+        if self.method not in METHODS:
+            raise ValueError(f"unknown method {self.method!r}")
+        if self.method == "ni++" and self.k != 3:
+            raise ValueError("NI++ is a triangle-counting baseline (k=3)")
+        if self.backend is not None and self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}")
+
+    @property
+    def effective_method(self) -> str:
+        """NI++ shares the exact tile path (it differs only in round
+        accounting, reported through the MRC stats)."""
+        return "exact" if self.method == "ni++" else self.method
+
+    def plan_key(self) -> tuple:
+        return (self.k, self.max_capacity, self.split_threshold)
+
+
+@dataclasses.dataclass
+class CountReport:
+    """Unified per-query result: estimate + MRC accounting + balance +
+    timings + cache telemetry, identical across backends."""
+    k: int
+    method: str
+    backend: str
+    estimate: float
+    per_node: Optional[np.ndarray]   # local/pallas + return_per_node only
+    mrc: "mrc_mod.MRCStats"
+    plan_summary: dict
+    balance: dict                    # LPT straggler profile over n_workers
+    per_round_bytes: dict            # modeled communication volumes
+    timings: dict                    # plan_s / count_s / total_s
+    cache: dict                      # {"plan": hit|miss, "exec_hits": …}
+    n_workers: int
+    params: dict
+
+    @property
+    def count(self) -> int:
+        return int(round(self.estimate))

@@ -1,7 +1,12 @@
-"""Clique-counting launcher (the paper's workload as a CLI).
+"""Clique-counting launcher (the paper's workload as a CLI), now a thin
+shell over the session engine: one CSR build + upload serves every
+query, and ``--k`` accepts a comma list for a batched session sweep.
 
   PYTHONPATH=src python -m repro.launch.count --graph rmat:12:8 --k 4 \
-      --method color --colors 10 [--devices 8] [--split-threshold 512]
+      --method color --colors 10 [--backend shard_map] [--devices 8] \
+      [--split-threshold 512]
+  PYTHONPATH=src python -m repro.launch.count --graph rmat:10:8 \
+      --k 3,4,5 --method exact,color   # session sweep, cached plans
 """
 import argparse
 import os
@@ -35,17 +40,26 @@ def main() -> int:
     ap.add_argument("--graph", required=True,
                     help="rmat:S[:EF] | ba:N:K | er:N:M | complete:N | "
                          "npz:path | snap:path")
-    ap.add_argument("--k", type=int, default=3)
+    ap.add_argument("--k", default="3",
+                    help="clique size, or comma list (session sweep)")
     ap.add_argument("--method", default="exact",
-                    choices=["exact", "edge", "color", "color_smooth",
-                             "ni++"])
+                    help="exact | edge | color | color_smooth | ni++, "
+                         "or comma list (crossed with every k)")
     ap.add_argument("--p", type=float, default=0.1)
     ap.add_argument("--colors", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--backend", default=None,
+                    choices=["local", "pallas", "shard_map"],
+                    help="engine backend (default local; --distributed/"
+                         "--devices imply shard_map)")
+    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"],
+                    help="deprecated alias: --engine pallas ≡ "
+                         "--backend pallas")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--split-threshold", type=int, default=0)
     ap.add_argument("--distributed", action="store_true")
+    ap.add_argument("--per-node", action="store_true",
+                    help="report top per-node clique attribution")
     args = ap.parse_args()
 
     if args.devices and "XLA_FLAGS" not in os.environ:
@@ -57,30 +71,56 @@ def main() -> int:
     import json
     import time
 
+    from ..engine import CliqueEngine, CountRequest
+
+    backend = args.backend
+    if backend is None:
+        if args.distributed or args.devices:
+            backend = "shard_map"
+        elif args.engine == "pallas":
+            backend = "pallas"
+        else:
+            backend = "local"
+
+    ks = [int(x) for x in str(args.k).split(",")]
+    methods = args.method.split(",")
+    if args.per_node and backend == "shard_map":
+        print("warning: --per-node is a local/pallas feature; ignored "
+              "on the shard_map backend", file=sys.stderr)
+    reqs = [CountRequest(
+        k=k, method=m, p=args.p, colors=args.colors, seed=args.seed,
+        split_threshold=args.split_threshold or None,
+        return_per_node=args.per_node and backend != "shard_map")
+        for k in ks for m in methods]
+    try:  # validate the whole sweep before any work runs
+        for r in reqs:
+            r.validate()
+    except ValueError as e:
+        ap.error(str(e))
+
     g = _make_graph(args.graph, args.seed)
     print(f"graph {g.name}: n={g.n} m={g.m} ({g.storage_mb():.1f} MB)")
     t0 = time.perf_counter()
-    if args.distributed or args.devices:
-        from ..core.distributed import count_cliques_distributed
-        res = count_cliques_distributed(
-            g, args.k, method=args.method, p=args.p, colors=args.colors,
-            seed=args.seed,
-            split_threshold=args.split_threshold or None)
-        print(json.dumps({
-            "estimate": res.estimate, "count": res.count,
-            "workers": res.n_workers, "balance": res.balance,
-            "bytes": res.per_round_bytes}, indent=1))
-    else:
-        from ..core import count_cliques
-        res = count_cliques(g, args.k, method=args.method, p=args.p,
-                            colors=args.colors, seed=args.seed,
-                            engine=args.engine)
-        print(json.dumps({
-            "estimate": res.estimate, "count": res.count,
-            "mrc_rounds": res.mrc.rounds,
-            "plan": res.plan_summary}, indent=1, default=str))
+    eng = CliqueEngine(g, backend=backend)
+    for rep in eng.submit_many(reqs):
+        row = {
+            "k": rep.k, "method": rep.method, "backend": rep.backend,
+            "estimate": rep.estimate, "count": rep.count,
+            "workers": rep.n_workers,
+            "mrc_rounds": rep.mrc.rounds,
+            "imbalance": rep.balance["imbalance"],
+            "plan": rep.plan_summary,
+            "cache": rep.cache,
+            "count_s": round(rep.timings["count_s"], 4),
+        }
+        if rep.per_node is not None:
+            top = rep.per_node.argsort()[-3:][::-1]
+            row["top_nodes"] = top.tolist()
+        print(json.dumps(row, indent=1, default=str))
+    print(json.dumps({"session": eng.session_stats()}, indent=1,
+                     default=str))
     print(f"wall: {time.perf_counter() - t0:.2f}s "
-          f"(q_{args.k} of {g.name})")
+          f"(q_k of {g.name}, k={ks})")
     return 0
 
 

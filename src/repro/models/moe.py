@@ -137,7 +137,8 @@ def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
     pmean_axes = dp_used
     body = functools.partial(_moe_local, cfg, psum_axes=psum_axes,
                              pmean_axes=pmean_axes)
-    y, mets = jax.shard_map(
+    from ..core.compat import shard_map
+    y, mets = shard_map(
         lambda pl, xl: body(pl, xl),
         mesh=ctx.mesh,
         in_specs=(wspecs, P(dp_used if dp_used else None, None, None)),

@@ -77,7 +77,8 @@ def make_compressed_dp_step(cfg, oc, mesh, axis: str = "data",
         return params, opt_state, residuals, (loss, mets)
 
     pspec = jax.tree.map(lambda _: P(), {"p": 0})["p"]
-    step = jax.shard_map(
+    from ..core.compat import shard_map_unchecked
+    step = shard_map_unchecked(
         sharded_step, mesh=mesh,
         in_specs=(P(), P(), P(), P(axis)),
         out_specs=(P(), P(), P(), P()))

@@ -91,6 +91,7 @@ def test_degree_computation_distributed():
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.core.compat import shard_map
 from repro.graphs import erdos_renyi
 from repro.graphs.degree import degrees_sharded, degrees_from_edges
 g = erdos_renyi(100, 0.2, seed=0)
@@ -98,7 +99,7 @@ mesh = jax.sharding.Mesh(np.array(jax.devices()), ("w",))
 m = g.edges.shape[0]
 pad = (-m) % 8
 edges = np.concatenate([g.edges, np.full((pad, 2), -1)], 0).astype(np.int32)
-fn = jax.jit(jax.shard_map(
+fn = jax.jit(shard_map(
     lambda e: degrees_sharded(e, 100, "w"), mesh=mesh,
     in_specs=(P("w", None),), out_specs=P()))
 got = np.asarray(fn(jnp.asarray(edges)))[:100]

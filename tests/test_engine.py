@@ -1,0 +1,159 @@
+"""Session engine: parity with the legacy entry points, cache
+telemetry, per-request backend routing, multi-device shard_map."""
+import numpy as np
+import pytest
+
+from conftest import run_with_devices
+
+from repro.core import clique_count_bruteforce, count_cliques
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import barabasi_albert, erdos_renyi
+
+
+@pytest.fixture(scope="module")
+def er_graph():
+    return erdos_renyi(60, 0.3, seed=4)
+
+
+def test_submit_matches_count_cliques_all_methods(er_graph):
+    eng = CliqueEngine(er_graph)
+    cases = [("exact", {}), ("edge", {"p": 0.5}),
+             ("color", {"colors": 3}), ("color_smooth", {"colors": 3})]
+    for method, kw in cases:
+        for k in (3, 4):
+            rep = eng.submit(CountRequest(k=k, method=method, seed=3, **kw))
+            legacy = count_cliques(er_graph, k, method=method, seed=3, **kw)
+            assert rep.estimate == pytest.approx(legacy.estimate,
+                                                 rel=1e-6), (method, k)
+    nipp = eng.submit(CountRequest(k=3, method="ni++"))
+    assert nipp.count == clique_count_bruteforce(er_graph, 3)
+    assert nipp.mrc.rounds == 2
+
+
+def test_sampling_at_rate_one_is_exact(er_graph):
+    """Independent oracle for the sampled tile path (parity with the
+    legacy wrapper alone is tautological now that the wrapper routes
+    through the engine): sampling at rate 1 must equal brute force."""
+    eng = CliqueEngine(er_graph)
+    for k in (3, 4):
+        bf = clique_count_bruteforce(er_graph, k)
+        assert eng.submit(CountRequest(k=k, method="edge",
+                                       p=1.0)).count == bf
+        assert eng.submit(CountRequest(k=k, method="color",
+                                       colors=1)).count == bf
+
+
+def test_exact_matches_bruteforce_and_per_node(er_graph):
+    eng = CliqueEngine(er_graph)
+    for k in (3, 4, 5):
+        rep = eng.submit(CountRequest(k=k, return_per_node=True))
+        bf, pn = clique_count_bruteforce(er_graph, k, return_per_node=True)
+        assert rep.count == bf
+        np.testing.assert_array_equal(
+            np.round(rep.per_node).astype(np.int64), pn)
+
+
+def test_second_query_reports_cache_hits(er_graph):
+    eng = CliqueEngine(er_graph)
+    r1 = eng.submit(CountRequest(k=4))
+    assert r1.cache["plan"] == "miss"
+    assert r1.cache["exec_misses"] >= 1
+    r2 = eng.submit(CountRequest(k=4))
+    assert r2.cache["plan"] == "hit"
+    assert r2.cache["exec_misses"] == 0
+    assert r2.cache["exec_hits"] >= 1
+    assert r2.estimate == r1.estimate
+    # different sampling params, same compiled executables (p/c traced)
+    r3 = eng.submit(CountRequest(k=4, method="color", colors=5))
+    r4 = eng.submit(CountRequest(k=4, method="color", colors=9))
+    assert r3.cache["plan"] == "hit"
+    assert r4.cache["exec_misses"] == 0 and r4.cache["exec_hits"] >= 1
+
+
+def test_submit_many_session_sweep(er_graph):
+    eng = CliqueEngine(er_graph)
+    reqs = ([CountRequest(k=k) for k in (3, 4, 5)] +
+            [CountRequest(k=4),
+             CountRequest(k=4, method="color", colors=3, seed=1)])
+    reps = eng.submit_many(reqs)
+    for rep, k in zip(reps[:3], (3, 4, 5)):
+        assert rep.count == clique_count_bruteforce(er_graph, k)
+    assert reps[3].estimate == reps[1].estimate
+    stats = eng.session_stats()
+    assert stats["n_queries"] == len(reqs)
+    assert stats["plans"]["hits"] >= 2       # repeat k=4 (exact + color)
+    assert stats["executables"]["hits"] >= 1
+
+
+def test_shard_map_backend_matches_local(er_graph):
+    eng = CliqueEngine(er_graph)          # 1-device mesh in-process
+    for method, kw in [("exact", {}), ("color", {"colors": 3})]:
+        loc = eng.submit(CountRequest(k=4, method=method, seed=5, **kw))
+        dist = eng.submit(CountRequest(k=4, method=method, seed=5,
+                                       backend="shard_map", **kw))
+        assert dist.backend == "shard_map" and loc.backend == "local"
+        assert dist.estimate == pytest.approx(loc.estimate, rel=1e-5)
+    # split round through the same session, both backends
+    thr = 8
+    a = eng.submit(CountRequest(k=4, split_threshold=thr))
+    b = eng.submit(CountRequest(k=4, split_threshold=thr,
+                                backend="shard_map"))
+    assert a.count == b.count == clique_count_bruteforce(er_graph, 4)
+
+
+def test_pallas_backend_matches_local(er_graph):
+    eng = CliqueEngine(er_graph)
+    for k in (3, 4):
+        loc = eng.submit(CountRequest(k=k))
+        pal = eng.submit(CountRequest(k=k, backend="pallas"))
+        assert pal.count == loc.count
+
+
+def test_request_validation(er_graph):
+    eng = CliqueEngine(er_graph)
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=2))
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=4, method="ni++"))
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=3, method="nope"))
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=3, backend="hadoop"))
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=3, backend="shard_map",
+                                return_per_node=True))
+
+
+def test_sampling_deterministic_per_seed_across_backends():
+    g = barabasi_albert(300, 8, seed=9)
+    eng = CliqueEngine(g)
+    a = eng.submit(CountRequest(k=4, method="color", colors=3, seed=5))
+    b = eng.submit(CountRequest(k=4, method="color", colors=3, seed=5))
+    assert a.estimate == b.estimate
+    c = eng.submit(CountRequest(k=4, method="color", colors=3, seed=6))
+    assert a.estimate != c.estimate
+
+
+@pytest.mark.slow
+def test_engine_shard_map_eight_workers():
+    run_with_devices("""
+from repro.engine import CliqueEngine, CountRequest
+from repro.core import clique_count_bruteforce
+from repro.graphs import barabasi_albert
+g = barabasi_albert(300, 8, seed=9)
+bf = clique_count_bruteforce(g, 4)
+eng = CliqueEngine(g, backend="shard_map")
+reps = eng.submit_many([CountRequest(k=4),
+                        CountRequest(k=4, split_threshold=16),
+                        CountRequest(k=4)])
+assert reps[0].n_workers == 8
+assert [r.count for r in reps] == [bf, bf, bf]
+assert reps[2].cache["plan"] == "hit"
+assert reps[2].cache["exec_misses"] == 0
+local = CliqueEngine(g).submit(
+    CountRequest(k=4, method="color", colors=3, seed=5)).estimate
+dist = eng.submit(
+    CountRequest(k=4, method="color", colors=3, seed=5)).estimate
+assert abs(local - dist) < 1e-3 * max(abs(local), 1.0)
+print("OK")
+""", n_devices=8)

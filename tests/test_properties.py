@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (build_oriented, check_lemma1,
                         clique_count_bruteforce, count_cliques)

@@ -113,7 +113,8 @@ def test_error_feedback_residual_bookkeeping():
         return compressed_psum(g, r, "d")
 
     from jax.sharding import PartitionSpec as P
-    out, newr = jax.jit(jax.shard_map(
+    from repro.core.compat import shard_map
+    out, newr = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P())))(g, r)
     # residual must equal exactly what was lost to quantization
     np.testing.assert_allclose(np.asarray(out["w"] + newr["w"]),
