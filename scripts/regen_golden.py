@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Regenerate tests/fixtures/golden_counts.json — the checked-in exact
+clique counts for the conformance corpus.
+
+  PYTHONPATH=src python scripts/regen_golden.py
+
+Counts come from the brute-force oracle (never from the engine under
+test), so the fixture is an independent regression anchor: rerun this
+only when the corpus itself changes deliberately, and review the diff —
+a changed count means changed semantics, not a refresh.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import clique_count_bruteforce            # noqa: E402
+from repro.graphs import conformance_corpus               # noqa: E402
+
+KS = (3, 4, 5)
+OUT = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "fixtures", "golden_counts.json")
+
+
+def main() -> int:
+    golden = {}
+    for g in conformance_corpus():
+        golden[g.name] = {
+            "n": g.n,
+            "m": g.m,
+            "counts": {str(k): int(clique_count_bruteforce(g, k))
+                       for k in KS},
+        }
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {OUT}")
+    for name, entry in golden.items():
+        print(f"  {name}: n={entry['n']} m={entry['m']} "
+              f"counts={entry['counts']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

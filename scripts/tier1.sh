@@ -1,10 +1,18 @@
 #!/usr/bin/env bash
-# Pre-merge check: the tier-1 test suite plus a fast engine smoke test.
+# Pre-merge check: the tier-1 test suite (includes the cross-backend
+# conformance suite), a fast engine smoke, and a CliqueService smoke
+# (2 graphs through a 1-session pool: coalesced duplicate queries +
+# LRU eviction, asserted by --serve itself).
 #   ./scripts/tier1.sh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# full suite — tests/test_conformance.py (backend-vs-oracle agreement)
+# and tests/test_golden.py (pinned corpus counts) are collected here
 python -m pytest -x -q
 
 python -m repro.launch.count --graph rmat:8:4 --k 4 --method color
+
+python -m repro.launch.count --serve --graph rmat:7:4,er:60:150 \
+    --k 3,4 --repeat 2 --max-sessions 1

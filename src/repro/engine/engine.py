@@ -18,8 +18,9 @@ executables, and routes each request through a per-request backend.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
-from typing import Iterable, Optional, Sequence
+from typing import Callable, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +36,21 @@ from ..graphs.formats import Graph
 from .backends import (Backend, ExecutableCache, LocalBackend,
                        ShardMapBackend)
 from .report import CountReport, CountRequest
+
+
+def graph_fingerprint(graph: Graph) -> str:
+    """Content hash of a canonical graph — the session-pool key.
+
+    ``Graph`` stores edges canonicalized (u < v, sorted, deduplicated),
+    so two structurally identical graphs hash equal regardless of the
+    edge order / duplicates / self-loops they were built from. Isolated
+    tail nodes change ``n`` and therefore the fingerprint: q_k is the
+    same, but per-node attributions are not.
+    """
+    h = hashlib.sha256()
+    h.update(int(graph.n).to_bytes(8, "little"))
+    h.update(np.ascontiguousarray(graph.edges, dtype=np.int64).tobytes())
+    return h.hexdigest()[:16]
 
 
 @dataclasses.dataclass
@@ -178,7 +194,44 @@ class CliqueEngine:
         self._plan_misses = 0
         self.executables = ExecutableCache()
         self.n_queries = 0
+        self._fingerprint: Optional[str] = None
+        self._closed = False
+        self._close_hooks: list[Callable[["CliqueEngine"], None]] = []
         self._backend(backend)  # validate the default name eagerly
+
+    # -- session lifecycle -------------------------------------------------
+
+    @property
+    def fingerprint(self) -> str:
+        """Content hash of the session's graph (the pool key)."""
+        if self._fingerprint is None:
+            self._fingerprint = graph_fingerprint(self.graph)
+        return self._fingerprint
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def register_close_hook(self,
+                            hook: Callable[["CliqueEngine"], None]) -> None:
+        """Run ``hook(engine)`` when the session is closed/evicted —
+        lets a pool flush per-session telemetry before dropping refs."""
+        self._close_hooks.append(hook)
+
+    def close(self) -> None:
+        """End the session: run eviction hooks and drop the device CSR
+        and every cache, so an LRU pool eviction actually releases the
+        graph's device memory. Idempotent; further submits raise."""
+        if self._closed:
+            return
+        self._closed = True
+        for hook in self._close_hooks:
+            hook(self)
+        self._close_hooks.clear()
+        self._plans.clear()
+        self._backends.clear()
+        self.executables = ExecutableCache()
+        self.csr = None  # type: ignore[assignment]  # frees device buffers
 
     # -- caches ------------------------------------------------------------
 
@@ -225,6 +278,10 @@ class CliqueEngine:
 
     def submit(self, req: CountRequest) -> CountReport:
         t0 = time.perf_counter()
+        if self._closed:
+            raise RuntimeError(
+                "CliqueEngine session is closed (evicted from its pool); "
+                "build a new session for this graph")
         req.validate()
         backend = self._backend(req.backend or self.default_backend)
         if req.return_per_node and backend.name == "shard_map":
@@ -248,7 +305,9 @@ class CliqueEngine:
             k=req.k, method=req.method, backend=backend.name,
             estimate=estimate, per_node=per_node, mrc=stats,
             plan_summary=entry.plan.cost_summary(),
-            balance=entry.balance(self.og, W),
+            # copy: the cached dict must survive callers mutating their
+            # report in place
+            balance=dict(entry.balance(self.og, W)),
             per_round_bytes={
                 "csr_replication_allgather": csr_bytes * (W - 1),
                 "count_allreduce": 4.0 * W,
@@ -274,7 +333,10 @@ class CliqueEngine:
     def session_stats(self) -> dict:
         return {
             "n_queries": self.n_queries,
-            "graph": {"n": self.og.n, "m": self.og.m},
+            "closed": self._closed,
+            "graph": {"n": self.og.n, "m": self.og.m,
+                      "name": self.graph.name,
+                      "fingerprint": self.fingerprint},
             "plans": {"hits": self._plan_hits,
                       "misses": self._plan_misses,
                       "cached": len(self._plans)},

@@ -54,6 +54,23 @@ class CountRequest:
     def plan_key(self) -> tuple:
         return (self.k, self.max_capacity, self.split_threshold)
 
+    def query_key(self, default_backend: str = "local") -> tuple:
+        """Identity of the *answer* this request produces — the coalescing
+        key used by ``repro.serving.cliques``. Two requests with equal
+        keys are satisfiable by one execution. Exact counting ignores the
+        sampling knobs (p/colors/seed change nothing), so exact queries
+        coalesce across users who picked different seeds; sampled methods
+        keep all three, since the estimate depends on them.
+        """
+        backend = self.backend or default_backend
+        if self.effective_method == "exact":
+            p, colors, seed = 0.0, 0, 0
+        else:
+            p, colors, seed = self.p, self.colors, self.seed
+        return (self.k, self.method, p, colors, seed, backend,
+                self.return_per_node, self.split_threshold,
+                self.max_capacity)
+
 
 @dataclasses.dataclass
 class CountReport:

@@ -41,15 +41,37 @@ def erdos_renyi(n: int, p: float, seed: int = 0,
 
 def erdos_renyi_m(n: int, m: int, seed: int = 0,
                   name: Optional[str] = None) -> Graph:
-    """G(n, m): sample ~m distinct edges uniformly (for larger n)."""
+    """G(n, m): exactly m distinct edges, uniform over edge sets.
+
+    Resamples until m distinct non-loop pairs have been seen (a fixed
+    1.3× oversample can dedup below m on dense targets), then keeps a
+    uniform m-subset, so ``g.m == m`` always. Raises for m > C(n, 2).
+    """
+    max_m = n * (n - 1) // 2
+    if m > max_m:
+        raise ValueError(f"m={m} exceeds C({n},2)={max_m} distinct edges")
     rng = np.random.default_rng(seed)
-    # oversample to survive dedup
-    k = int(m * 1.3) + 16
-    u = rng.integers(0, n, size=k, dtype=np.int64)
-    v = rng.integers(0, n, size=k, dtype=np.int64)
-    g = from_edges(np.stack([u, v], 1), n=n, name=name or f"er_n{n}_m{m}")
-    if g.m > m:
-        g = from_edges(g.edges[:m], n=n, name=name or f"er_n{n}_m{m}")
+    if 4 * m >= max_m:
+        # dense target: rejection mixes slowly, but materializing all
+        # C(n,2) pairs is only O(m) here — take a uniform m-subset.
+        lo, hi = np.triu_indices(n, 1)
+        pick = rng.choice(max_m, size=m, replace=False)
+        keys = lo[pick].astype(np.int64) * n + hi[pick]
+    else:
+        keys = np.zeros(0, dtype=np.int64)  # canonical lo*n+hi, dedup'd
+        while len(keys) < m:
+            batch = max(64, 2 * (m - len(keys)))
+            u = rng.integers(0, n, size=batch, dtype=np.int64)
+            v = rng.integers(0, n, size=batch, dtype=np.int64)
+            ok = u != v
+            lo = np.minimum(u, v)[ok]
+            hi = np.maximum(u, v)[ok]
+            keys = np.union1d(keys, lo * np.int64(n) + hi)
+        if len(keys) > m:
+            keys = rng.choice(keys, size=m, replace=False)
+    g = from_edges(np.stack([keys // n, keys % n], 1), n=n,
+                   name=name or f"er_n{n}_m{m}")
+    assert g.m == m
     return g
 
 
@@ -123,6 +145,27 @@ def random_graph_for_tests(seed: int, max_n: int = 48,
     n = int(rng.integers(4, max_n))
     p = density if density is not None else float(rng.uniform(0.05, 0.6))
     return erdos_renyi(n, p, seed=seed + 1, name=f"test_s{seed}")
+
+
+def conformance_corpus() -> list[Graph]:
+    """The fixed generator corpus behind the cross-backend conformance
+    suite and the golden-count fixture (`tests/fixtures/golden_counts.json`,
+    regenerated by `scripts/regen_golden.py`). Seeds are pinned: changing
+    any entry invalidates the checked-in golden counts.
+
+    Small enough that the brute-force oracle covers k ≤ 5, but spanning
+    the structures that stress different code paths: closed-form K_n,
+    ER controls (both G(n,p) and exact-m), heavy-tailed BA, and planted
+    cliques whose counts the background can't mask.
+    """
+    return [
+        complete_graph(10),
+        erdos_renyi(48, 0.25, seed=11),
+        erdos_renyi_m(40, 120, seed=7),
+        barabasi_albert(64, 6, seed=3),
+        planted_cliques(32, 0.08, [6, 7], seed=5,
+                        name="planted_32_6_7"),
+    ]
 
 
 # --- the benchmark suite: scaled analogues of the paper's Figure 1 ----------

@@ -7,6 +7,15 @@ query, and ``--k`` accepts a comma list for a batched session sweep.
       [--split-threshold 512]
   PYTHONPATH=src python -m repro.launch.count --graph rmat:10:8 \
       --k 3,4,5 --method exact,color   # session sweep, cached plans
+
+``--serve`` drives the multi-graph :class:`CliqueService` instead:
+``--graph`` takes a comma list of specs, ``--repeat R`` submits the
+whole workload R times (duplicate "users" — exercises coalescing), and
+``--max-sessions`` bounds the LRU engine pool (fewer sessions than
+graphs exercises eviction):
+
+  PYTHONPATH=src python -m repro.launch.count --serve \
+      --graph rmat:7:4,er:60:150 --k 3,4 --repeat 2 --max-sessions 1
 """
 import argparse
 import os
@@ -35,6 +44,59 @@ def _make_graph(spec: str, seed: int):
     raise ValueError(f"unknown graph spec {spec}")
 
 
+def _serve(args, backend: str, reqs) -> int:
+    """--serve: run the (graphs × reqs) × repeat workload through one
+    CliqueService and report per-query rows plus pool/coalescing
+    telemetry. ``backend`` and ``reqs`` arrive resolved/validated by
+    main() (--devices / --distributed imply shard_map, --engine pallas
+    implies pallas). The invariants the flags imply are asserted, so
+    this doubles as the tier-1 service smoke."""
+    import dataclasses
+    import json
+    import time
+
+    from ..serving.cliques import CliqueService
+
+    specs = args.graph.split(",")
+    graphs = [_make_graph(s, args.seed) for s in specs]
+    if args.per_node:
+        print("warning: --per-node is ignored in --serve mode",
+              file=sys.stderr)
+    sweep = [dataclasses.replace(r, return_per_node=False) for r in reqs]
+
+    svc = CliqueService(max_sessions=args.max_sessions,
+                        default_backend=backend)
+    jobs = [(g, r) for _ in range(max(args.repeat, 1))
+            for g in graphs for r in sweep]
+    refs = [svc.register(g) for g in graphs]
+    for g, ref in zip(graphs, refs):
+        print(f"graph {g.name}: n={g.n} m={g.m} ({ref[:8]}…)")
+    t0 = time.perf_counter()
+    tickets = svc.submit_many(jobs)
+    svc.drain()
+    wall = time.perf_counter() - t0
+    for (g, req), t in zip(jobs[:len(graphs) * len(sweep)], tickets):
+        rep = t.result()
+        print(json.dumps({
+            "graph": g.name, "k": rep.k, "method": rep.method,
+            "backend": rep.backend, "estimate": rep.estimate,
+            "count": rep.count, "cache": rep.cache,
+        }, default=str))
+    stats = svc.stats()
+    print(json.dumps({"service": stats}, indent=1, default=str))
+    print(f"wall: {wall:.2f}s for {len(jobs)} queries "
+          f"({len(jobs) / max(wall, 1e-9):.1f} q/s, "
+          f"coalesce_rate={stats['coalesce_rate']:.2f})")
+    assert stats["failed"] == 0, "service reported failed queries"
+    if args.repeat > 1:
+        assert stats["coalesced"] > 0, \
+            "duplicate workload produced no coalescing"
+    if len(set(refs)) > args.max_sessions:   # duplicate specs share a session
+        assert stats["pool"]["evictions"] > 0, \
+            "graphs exceed the pool but nothing was evicted"
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", required=True,
@@ -60,6 +122,14 @@ def main() -> int:
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--per-node", action="store_true",
                     help="report top per-node clique attribution")
+    ap.add_argument("--serve", action="store_true",
+                    help="drive a CliqueService over a comma list of "
+                         "--graph specs (multi-graph pool + coalescing)")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="--serve: submit the workload this many times "
+                         "(duplicate users; exercises coalescing)")
+    ap.add_argument("--max-sessions", type=int, default=4,
+                    help="--serve: LRU engine-pool capacity")
     args = ap.parse_args()
 
     if args.devices and "XLA_FLAGS" not in os.environ:
@@ -97,6 +167,9 @@ def main() -> int:
             r.validate()
     except ValueError as e:
         ap.error(str(e))
+
+    if args.serve:
+        return _serve(args, backend, reqs)
 
     g = _make_graph(args.graph, args.seed)
     print(f"graph {g.name}: n={g.n} m={g.m} ({g.storage_mb():.1f} MB)")

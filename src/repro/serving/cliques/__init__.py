@@ -1,0 +1,19 @@
+"""Clique-query serving: a multi-graph front end over pooled
+:class:`~repro.engine.CliqueEngine` sessions.
+
+    from repro.serving.cliques import CliqueService
+    from repro.engine import CountRequest
+
+    svc = CliqueService(max_sessions=4)
+    ref = svc.register(graph)                      # fingerprint handle
+    tickets = svc.submit_many([(ref, CountRequest(k=k)) for k in (3, 4, 5)])
+    counts = [t.result().count for t in tickets]   # drains on demand
+    svc.stats()                                    # coalescing / pool telemetry
+
+See ``docs/serving.md``.
+"""
+from .pool import EngineFactory, EnginePool
+from .service import CliqueService, GraphRef, Ticket
+
+__all__ = ["CliqueService", "EnginePool", "EngineFactory", "GraphRef",
+           "Ticket"]

@@ -1,0 +1,152 @@
+"""LRU pool of :class:`CliqueEngine` sessions keyed by graph fingerprint.
+
+A served graph is expensive to admit — orientation, device upload, and
+(lazily) plans and compiled executables — and holds device memory while
+resident. The pool bounds that footprint to ``max_sessions`` live
+engines with LRU eviction; an evicted session is ``close()``d so its
+device CSR and executable caches are actually released, and its cache
+telemetry is folded into the pool's retired totals before the refs drop
+(via the engine's close hook).
+
+The pool itself is not thread-safe; :class:`~.service.CliqueService`
+serializes access under its own lock.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, Optional
+
+from ...engine import CliqueEngine, graph_fingerprint
+from ...graphs.formats import Graph
+
+EngineFactory = Callable[[Graph], CliqueEngine]
+
+
+class EnginePool:
+    """Get-or-build engine sessions with LRU eviction and telemetry.
+
+    Parameters
+    ----------
+    max_sessions: most engines resident at once (≥ 1).
+    factory: builds an engine for an admitted graph; defaults to
+        ``CliqueEngine(graph, backend=default_backend)``.
+    default_backend: backend for the default factory.
+    """
+
+    def __init__(self, max_sessions: int = 4, *,
+                 factory: Optional[EngineFactory] = None,
+                 default_backend: str = "local") -> None:
+        if max_sessions < 1:
+            raise ValueError(f"max_sessions must be ≥ 1, got {max_sessions}")
+        self.max_sessions = max_sessions
+        self._factory = factory or (
+            lambda g: CliqueEngine(g, backend=default_backend))
+        self._engines: "collections.OrderedDict[str, CliqueEngine]" = \
+            collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        # per-session telemetry survives eviction: close hooks fold the
+        # dying session's stats in here so service totals stay monotone.
+        self._retired_queries = 0
+        self._retired_plan_hits = 0
+        self._retired_exec_hits = 0
+
+    # -- admission / lookup ------------------------------------------------
+
+    def get(self, graph: Graph,
+            fingerprint: Optional[str] = None) -> tuple[CliqueEngine, bool]:
+        """Return ``(engine, was_resident)`` for ``graph``, admitting it
+        (and possibly evicting the LRU session) if absent."""
+        fp = fingerprint or graph_fingerprint(graph)
+        eng = self.lookup(fp)
+        if eng is not None:
+            return eng, True
+        eng = self.build(graph)
+        for _, lru in self.admit(fp, eng):
+            lru.close()
+        return eng, False
+
+    def lookup(self, fp: str) -> Optional[CliqueEngine]:
+        """Resident engine for ``fp`` (counts a hit/miss, refreshes LRU
+        order), or None. Cheap — safe to call under a service lock."""
+        eng = self._engines.get(fp)
+        if eng is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self._engines.move_to_end(fp)
+        return eng
+
+    def build(self, graph: Graph) -> CliqueEngine:
+        """Construct a session for ``graph`` WITHOUT touching the pool —
+        the expensive step (orient + device upload), so callers can run
+        it outside any lock and :meth:`admit` the result after."""
+        eng = self._factory(graph)
+        eng.register_close_hook(self._on_close)
+        return eng
+
+    def admit(self, fp: str,
+              eng: CliqueEngine) -> list[tuple[str, CliqueEngine]]:
+        """Insert a built session; returns the LRU sessions evicted past
+        capacity WITHOUT closing them — the caller closes (and may do so
+        outside its own lock, since close hooks can call back into it).
+        :meth:`get` is the close-for-you convenience path."""
+        self._engines[fp] = eng
+        self._engines.move_to_end(fp)
+        evicted = []
+        while len(self._engines) > self.max_sessions:
+            lru_fp, lru = self._engines.popitem(last=False)
+            self.evictions += 1
+            evicted.append((lru_fp, lru))
+        return evicted
+
+    def peek(self, fingerprint: str) -> Optional[CliqueEngine]:
+        """Resident engine for ``fingerprint`` without touching LRU order."""
+        return self._engines.get(fingerprint)
+
+    def evict(self, fingerprint: str) -> bool:
+        """Explicitly close + drop one session (True if it was resident)."""
+        eng = self._engines.pop(fingerprint, None)
+        if eng is None:
+            return False
+        self.evictions += 1
+        eng.close()
+        return True
+
+    def close(self) -> None:
+        """Close every resident session (service shutdown)."""
+        while self._engines:
+            _, eng = self._engines.popitem(last=False)
+            eng.close()
+
+    def _on_close(self, eng: CliqueEngine) -> None:
+        stats = eng.session_stats()
+        self._retired_queries += stats["n_queries"]
+        self._retired_plan_hits += stats["plans"]["hits"]
+        self._retired_exec_hits += stats["executables"]["hits"]
+
+    # -- telemetry ---------------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._engines)
+
+    def __contains__(self, fingerprint: str) -> bool:
+        return fingerprint in self._engines
+
+    def stats(self) -> dict:
+        live = [e.session_stats() for e in self._engines.values()]
+        return {
+            "max_sessions": self.max_sessions,
+            "live": len(self._engines),
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "queries": self._retired_queries + sum(s["n_queries"]
+                                                   for s in live),
+            "plan_hits": self._retired_plan_hits + sum(s["plans"]["hits"]
+                                                       for s in live),
+            "exec_hits": self._retired_exec_hits + sum(
+                s["executables"]["hits"] for s in live),
+            "resident": [s["graph"] for s in live],
+        }

@@ -1,0 +1,355 @@
+"""Multi-graph clique-counting front end with request coalescing.
+
+:class:`CliqueService` is the layer between many users and many
+:class:`~repro.engine.CliqueEngine` sessions. The engine already
+amortizes orient/plan/compile across queries *on one graph*; the
+service extends that across a workload:
+
+- **pool** — an LRU :class:`~.pool.EnginePool` keyed by graph
+  fingerprint bounds resident sessions; re-submitting a served graph is
+  a session hit (no re-orient, no re-upload, warm caches).
+- **coalescing** — identical in-flight queries (same fingerprint and
+  :meth:`CountRequest.query_key`) collapse into one execution whose
+  report fans out to every waiter; exact queries even coalesce across
+  users who picked different sampling seeds.
+- **batching** — a drain groups queued jobs by session so each engine
+  answers its whole batch back-to-back, reusing cached plans, shard
+  stacks, and compiled executables across users (``submit_many``
+  semantics with per-job error isolation).
+
+Submission is thread-safe; execution is serialized (one drain at a
+time), matching JAX's single-dispatch-thread model. Use it either
+synchronously — ``submit(...)`` then ``drain()`` (or just
+``ticket.result()``, which drains on demand) — or with a background
+worker via ``start()``/``stop()``::
+
+    svc = CliqueService(max_sessions=4)
+    t1 = svc.submit(graph_a, CountRequest(k=4))
+    t2 = svc.submit(graph_a, CountRequest(k=4))   # coalesces with t1
+    t3 = svc.submit(graph_b, CountRequest(k=5, method="color"))
+    print(t1.result().count, t3.result().count)
+    svc.stats()["coalesced"]                      # -> 1
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Iterable, Optional, Union
+
+from ...engine import CliqueEngine, CountReport, CountRequest, \
+    graph_fingerprint
+from ...graphs.formats import Graph
+from .pool import EngineFactory, EnginePool
+
+GraphRef = Union[Graph, str]
+
+
+class Ticket:
+    """Handle to one submitted query (a minimal future).
+
+    ``result()`` blocks until the report is available; on a service
+    without a background worker it drives ``drain()`` itself, so plain
+    synchronous callers never deadlock. On that worker-less path the
+    drive is synchronous and unbounded — ``timeout`` applies to the
+    wait *after* it; for a hard latency bound, run a worker
+    (``service.start()``) so ``result`` only ever waits.
+    """
+
+    def __init__(self, service: "CliqueService") -> None:
+        self._service = service
+        self._event = threading.Event()
+        self._report: Optional[CountReport] = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> CountReport:
+        if not self._event.is_set():
+            self._service._ensure_progress()
+        if not self._event.wait(timeout):
+            raise TimeoutError("query still queued; is the service "
+                               "draining (worker started or drain called)?")
+        if self._exc is not None:
+            raise self._exc
+        assert self._report is not None
+        return self._report
+
+    def _fulfill(self, report: Optional[CountReport],
+                 exc: Optional[BaseException] = None) -> None:
+        self._report, self._exc = report, exc
+        self._event.set()
+
+
+def _annotated_copy(report: CountReport, fanout: int,
+                    session: str) -> CountReport:
+    """Per-ticket report with serving telemetry in ``cache``. Coalesced
+    waiters must not share mutable state — one user normalizing their
+    ``per_node`` in place must not corrupt another's report — so fan-out
+    copies the array and the per-report dicts (``mrc`` is immutable and
+    stays shared)."""
+    cache = {**report.cache, "coalesced": fanout, "session": session}
+    if fanout == 1:
+        return dataclasses.replace(report, cache=cache)
+    return dataclasses.replace(
+        report, cache=cache,
+        per_node=None if report.per_node is None else report.per_node.copy(),
+        plan_summary=dict(report.plan_summary),
+        balance=dict(report.balance),
+        per_round_bytes=dict(report.per_round_bytes),
+        timings=dict(report.timings),
+        params=dict(report.params))
+
+
+class _Job:
+    """One pending execution; fans its report out to coalesced tickets."""
+
+    __slots__ = ("fingerprint", "request", "tickets")
+
+    def __init__(self, fingerprint: str, request: CountRequest) -> None:
+        self.fingerprint = fingerprint
+        self.request = request
+        self.tickets: list[Ticket] = []
+
+
+class CliqueService:
+    """Serve `(graph, CountRequest)` jobs over a pooled engine fleet."""
+
+    def __init__(self, max_sessions: int = 4, *,
+                 default_backend: str = "local",
+                 engine_factory: Optional[EngineFactory] = None) -> None:
+        self.default_backend = default_backend
+        self.pool = EnginePool(max_sessions,
+                               factory=engine_factory,
+                               default_backend=default_backend)
+        self._graphs: dict[str, Graph] = {}     # fp -> graph (re-admission)
+        self._fp_by_id: dict[int, str] = {}     # id(graph) -> fp memo
+        self._queue: list[_Job] = []
+        self._pending: dict[tuple, _Job] = {}   # (fp, query_key) -> job
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._drain_lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        self._stopping = False
+        self.submitted = 0
+        self.coalesced = 0
+        self.executed = 0
+        self.failed = 0
+
+    # -- graph registry ----------------------------------------------------
+
+    def register(self, graph: Graph) -> str:
+        """Register a graph and return its fingerprint (the graph_ref
+        accepted by :meth:`submit`). Registration is cheap — the engine
+        session is built lazily on first drain touching the graph."""
+        with self._lock:
+            fp = self._fp_by_id.get(id(graph))
+        if fp is not None:
+            return fp
+        fp = graph_fingerprint(graph)
+        with self._lock:
+            stored = self._graphs.setdefault(fp, graph)
+            if stored is graph:
+                # memo only objects we hold a reference to: a structural
+                # duplicate may be garbage-collected and its id() reused
+                # by a different graph, which would then resolve to the
+                # wrong fingerprint.
+                self._fp_by_id[id(graph)] = fp
+        return fp
+
+    def _resolve(self, graph_ref: GraphRef) -> str:
+        if isinstance(graph_ref, Graph):
+            return self.register(graph_ref)
+        if graph_ref not in self._graphs:
+            raise KeyError(f"unknown graph_ref {graph_ref!r}; register() "
+                           "the graph first")
+        return graph_ref
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, graph_ref: GraphRef, req: CountRequest) -> Ticket:
+        """Enqueue one query; returns immediately with a :class:`Ticket`.
+
+        The request's ``backend=None`` resolves to the service default
+        here, so the coalescing key is fully determined at submit time.
+        """
+        fp = self._resolve(graph_ref)
+        req = dataclasses.replace(
+            req, backend=req.backend or self.default_backend)
+        req.validate()
+        if req.return_per_node and req.backend == "shard_map":
+            raise ValueError("per-node attribution is a local/pallas "
+                             "backend feature")
+        ticket = Ticket(self)
+        key = (fp, req.query_key(self.default_backend))
+        with self._lock:
+            job = self._pending.get(key)
+            if job is None:
+                job = _Job(fp, req)
+                self._pending[key] = job
+                self._queue.append(job)
+            else:
+                self.coalesced += 1
+            job.tickets.append(ticket)
+            self.submitted += 1
+            self._cv.notify_all()
+        return ticket
+
+    def submit_many(self, jobs: Iterable[tuple[GraphRef, CountRequest]]
+                    ) -> list[Ticket]:
+        return [self.submit(ref, req) for ref, req in jobs]
+
+    # -- execution ---------------------------------------------------------
+
+    def drain(self) -> int:
+        """Execute everything queued (including jobs submitted while the
+        drain runs); returns the number of engine executions performed.
+        Serialized — concurrent callers queue up behind one drain."""
+        executed = 0
+        with self._drain_lock:
+            while True:
+                with self._lock:
+                    batch, self._queue = self._queue, []
+                if not batch:
+                    return executed
+                by_fp: dict[str, list[_Job]] = {}
+                for job in batch:
+                    by_fp.setdefault(job.fingerprint, []).append(job)
+                for fp, group in by_fp.items():
+                    executed += self._run_group(fp, group)
+
+    def _run_group(self, fp: str, group: list[_Job]) -> int:
+        """One session answers its whole batch back-to-back (the
+        ``submit_many`` grouping), with per-job error isolation.
+
+        The expensive admission step (orient + upload in ``pool.build``)
+        runs OUTSIDE the service lock — only the cheap pool-map reads
+        and mutations hold it, so concurrent submits never stall behind
+        an engine build. Safe because drains are serialized: no second
+        thread can admit the same fingerprint concurrently."""
+        try:
+            with self._lock:
+                engine = self.pool.lookup(fp)
+                graph = self._graphs[fp]
+            resident = engine is not None
+            if engine is None:
+                engine = self.pool.build(graph)
+                with self._lock:
+                    evicted = self.pool.admit(fp, engine)
+                    for _, lru in evicted:
+                        # close is cheap (hooks + cache clears); doing it
+                        # under the lock keeps pool telemetry monotone —
+                        # a concurrent stats() never sees a session gone
+                        # from live but not yet folded into retired.
+                        lru.close()
+                for lru_fp, _ in evicted:
+                    self._forget(lru_fp)   # takes the lock itself
+        except Exception as exc:  # admission failed: fail the whole group
+            for job in group:
+                self._fulfill(job, None, "miss", exc)
+            return 0
+        session = "hit" if resident else "miss"
+        executed = 0
+        for job in group:
+            try:
+                report = engine.submit(job.request)
+                executed += 1
+                self._fulfill(job, report, session)
+            except Exception as exc:
+                self._fulfill(job, None, session, exc)
+            session = "hit"   # same session for the rest of the batch
+        return executed
+
+    def _fulfill(self, job: _Job, report: Optional[CountReport],
+                 session: str, exc: Optional[BaseException] = None) -> None:
+        """Deliver to every coalesced waiter. The job leaves the pending
+        map and claims its tickets atomically, so a concurrent submit
+        either joins before delivery (and is served now) or starts a
+        fresh job — never lost."""
+        with self._lock:
+            self._pending.pop((job.fingerprint,
+                               job.request.query_key(self.default_backend)),
+                              None)
+            tickets, job.tickets = job.tickets, []
+            if exc is None:
+                self.executed += 1
+            else:
+                self.failed += len(tickets)
+        fanout = len(tickets)
+        for t in tickets:
+            if exc is not None:
+                t._fulfill(None, exc)
+            else:
+                assert report is not None
+                t._fulfill(_annotated_copy(report, fanout, session))
+
+    def _forget(self, fp: str) -> None:
+        """Drop an evicted graph from the registry (unless work still
+        references it), so a long-running service's host memory is
+        bounded by the pool + queue, not by every graph ever served.
+        Submitting the Graph object again simply re-registers it; a
+        bare fingerprint ref for a forgotten graph raises KeyError."""
+        with self._lock:
+            if any(j.fingerprint == fp for j in self._queue) or \
+                    any(k[0] == fp for k in self._pending):
+                return
+            g = self._graphs.pop(fp, None)
+            if g is not None:
+                self._fp_by_id.pop(id(g), None)
+
+    def _ensure_progress(self) -> None:
+        """Called by Ticket.result(): with a worker running the wait
+        suffices; otherwise the calling thread drives the drain."""
+        if self._worker is None or not self._worker.is_alive():
+            self.drain()
+
+    # -- background worker -------------------------------------------------
+
+    def start(self) -> "CliqueService":
+        """Start a worker thread that drains as jobs arrive."""
+        if self._worker is not None and self._worker.is_alive():
+            return self
+        self._stopping = False
+        self._worker = threading.Thread(target=self._worker_loop,
+                                        name="clique-service", daemon=True)
+        self._worker.start()
+        return self
+
+    def stop(self, close_pool: bool = False) -> None:
+        """Stop the worker after a final drain; optionally close every
+        pooled session (releasing device memory)."""
+        worker = self._worker
+        if worker is not None and worker.is_alive():
+            with self._lock:
+                self._stopping = True
+                self._cv.notify_all()
+            worker.join()
+        self._worker = None
+        self.drain()   # anything submitted after the worker exited
+        if close_pool:
+            with self._lock:
+                self.pool.close()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                while not self._queue and not self._stopping:
+                    self._cv.wait()
+                if self._stopping and not self._queue:
+                    return
+            self.drain()
+
+    # -- telemetry ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "submitted": self.submitted,
+                "coalesced": self.coalesced,
+                "executed": self.executed,
+                "failed": self.failed,
+                "coalesce_rate": self.coalesced / max(self.submitted, 1),
+                "queue_depth": len(self._queue),
+                "registered_graphs": len(self._graphs),
+                "pool": self.pool.stats(),
+            }

@@ -1,0 +1,198 @@
+"""CliqueService: pooled sessions, request coalescing, LRU eviction,
+telemetry, and the background worker."""
+import threading
+
+import pytest
+
+from repro.core import clique_count_bruteforce
+from repro.engine import CliqueEngine, CountRequest, graph_fingerprint
+from repro.graphs import barabasi_albert, erdos_renyi, relabel
+from repro.serving.cliques import CliqueService, EnginePool
+
+import numpy as np
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return (erdos_renyi(40, 0.25, seed=1),
+            barabasi_albert(80, 5, seed=2),
+            erdos_renyi(36, 0.3, seed=3))
+
+
+@pytest.fixture(scope="module")
+def bf(graphs):
+    return {g.name: {k: clique_count_bruteforce(g, k) for k in (3, 4)}
+            for g in graphs}
+
+
+def test_fingerprint_is_structural(graphs):
+    a, b, _ = graphs
+    assert graph_fingerprint(a) == graph_fingerprint(a)
+    assert graph_fingerprint(a) != graph_fingerprint(b)
+    # identity permutation reorders nothing: same canonical edges
+    ident = relabel(a, np.arange(a.n))
+    assert graph_fingerprint(ident) == graph_fingerprint(a)
+    assert CliqueEngine(a).fingerprint == graph_fingerprint(a)
+
+
+def test_results_match_oracle_across_graphs(graphs, bf):
+    svc = CliqueService(max_sessions=3)
+    tickets = svc.submit_many([(g, CountRequest(k=k))
+                               for g in graphs for k in (3, 4)])
+    for t, (g, k) in zip(tickets, [(g, k) for g in graphs
+                                   for k in (3, 4)]):
+        assert t.result().count == bf[g.name][k]
+    stats = svc.stats()
+    assert stats["executed"] == 6 and stats["failed"] == 0
+    assert stats["pool"]["live"] == 3
+
+
+def test_duplicate_inflight_queries_coalesce(graphs, bf):
+    g = graphs[0]
+    svc = CliqueService(max_sessions=2)
+    dup = [svc.submit(g, CountRequest(k=4)) for _ in range(4)]
+    other = svc.submit(g, CountRequest(k=3))
+    svc.drain()
+    for t in dup:
+        rep = t.result()
+        assert rep.count == bf[g.name][4]
+        assert rep.cache["coalesced"] == 4     # fanout visible per report
+    assert other.result().cache["coalesced"] == 1
+    stats = svc.stats()
+    assert stats["submitted"] == 5
+    assert stats["coalesced"] == 3             # 3 of the 4 dups rode along
+    assert stats["executed"] == 2              # one k=4 run + one k=3 run
+
+
+def test_exact_queries_coalesce_across_seeds_sampled_do_not(graphs):
+    g = graphs[1]
+    svc = CliqueService()
+    svc.submit(g, CountRequest(k=3, seed=0))
+    svc.submit(g, CountRequest(k=3, seed=99))           # exact: same answer
+    svc.submit(g, CountRequest(k=3, method="color", colors=3, seed=0))
+    svc.submit(g, CountRequest(k=3, method="color", colors=3, seed=99))
+    svc.drain()
+    stats = svc.stats()
+    assert stats["coalesced"] == 1 and stats["executed"] == 3
+
+
+def test_lru_eviction_closes_session_and_readmits(graphs, bf):
+    a, b, _ = graphs
+    svc = CliqueService(max_sessions=1)
+    assert svc.submit(a, CountRequest(k=3)).result().cache["session"] == \
+        "miss"
+    held = svc.pool.peek(graph_fingerprint(a))
+    assert held is not None and not held.closed
+    svc.submit(b, CountRequest(k=3)).result()           # evicts a
+    assert held.closed                                  # device refs dropped
+    with pytest.raises(RuntimeError):
+        held.submit(CountRequest(k=3))
+    # eviction also drops the graph registry entry (bounded host memory):
+    # a bare fingerprint ref no longer resolves, the Graph object does
+    with pytest.raises(KeyError):
+        svc.submit(graph_fingerprint(a), CountRequest(k=3))
+    rep = svc.submit(a, CountRequest(k=3)).result()     # re-admitted
+    assert rep.count == bf[a.name][3]
+    assert rep.cache["session"] == "miss"
+    stats = svc.stats()
+    assert stats["registered_graphs"] <= 2
+    pool = stats["pool"]
+    assert pool["evictions"] == 2 and pool["live"] == 1
+    assert pool["queries"] == 3                         # retired stats kept
+
+
+def test_batch_grouping_reuses_session_caches(graphs):
+    g = graphs[2]
+    svc = CliqueService(max_sessions=2)
+    svc.submit_many([(g, CountRequest(k=4)),
+                     (g, CountRequest(k=4, method="color", colors=3)),
+                     (g, CountRequest(k=4, method="color", colors=5))])
+    svc.drain()
+    eng = svc.pool.peek(graph_fingerprint(g))
+    st = eng.session_stats()
+    assert st["plans"]["hits"] >= 2        # one k=4 plan served all three
+    assert st["executables"]["hits"] >= 1  # colors traced, exec reused
+
+
+def test_per_job_error_isolation(graphs, bf, monkeypatch):
+    """An execution-time failure fails only its own job's tickets; the
+    rest of the batch still runs on the same session."""
+    g = graphs[0]
+    svc = CliqueService()
+    orig = CliqueEngine.submit
+
+    def flaky(self, req):
+        if req.k == 5:
+            raise RuntimeError("boom")
+        return orig(self, req)
+
+    monkeypatch.setattr(CliqueEngine, "submit", flaky)
+    bad = svc.submit(g, CountRequest(k=5))
+    good = svc.submit(g, CountRequest(k=4))
+    svc.drain()
+    assert bad.done() and good.done()
+    with pytest.raises(RuntimeError, match="boom"):
+        bad.result()
+    assert good.result().count == bf[g.name][4]
+    stats = svc.stats()
+    assert stats["failed"] == 1 and stats["executed"] == 1
+    # invalid requests never enqueue: rejected at submit time
+    with pytest.raises(ValueError):
+        svc.submit(g, CountRequest(k=4, method="ni++"))
+
+
+def test_unknown_graph_ref_and_eager_validation(graphs):
+    svc = CliqueService()
+    with pytest.raises(KeyError):
+        svc.submit("deadbeef00000000", CountRequest(k=3))
+    with pytest.raises(ValueError):
+        svc.submit(graphs[0], CountRequest(k=3, backend="shard_map",
+                                           return_per_node=True))
+    ref = svc.register(graphs[0])
+    assert svc.submit(ref, CountRequest(k=3)).result().count >= 0
+
+
+def test_background_worker_and_threaded_submitters(graphs, bf):
+    g = graphs[0]
+    svc = CliqueService(max_sessions=2).start()
+    results = {}
+
+    def user(i):
+        t = svc.submit(g, CountRequest(k=4))
+        results[i] = t.result(timeout=120).count
+
+    threads = [threading.Thread(target=user, args=(i,)) for i in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    svc.stop(close_pool=True)
+    assert set(results.values()) == {bf[g.name][4]}
+    stats = svc.stats()
+    assert stats["submitted"] == 6 and stats["failed"] == 0
+    assert stats["executed"] + stats["coalesced"] == 6
+    assert stats["pool"]["live"] == 0                   # closed on stop
+
+
+def test_pool_rejects_bad_capacity():
+    with pytest.raises(ValueError):
+        EnginePool(0)
+
+
+def test_pool_standalone_get_evict(graphs):
+    """EnginePool.get/evict/__contains__ — the single-user convenience
+    API (the service drives lookup/build/admit itself, under its lock)."""
+    a, b, _ = graphs
+    pool = EnginePool(1)
+    fa, fb = graph_fingerprint(a), graph_fingerprint(b)
+    e1, resident = pool.get(a)
+    assert not resident and fa in pool and len(pool) == 1
+    e2, resident = pool.get(a, fa)
+    assert resident and e2 is e1
+    e3, _ = pool.get(b)                      # evicts + closes a's session
+    assert fb in pool and fa not in pool
+    assert e1.closed and not e3.closed
+    assert pool.evict(fb) and not pool.evict(fb)
+    assert e3.closed and len(pool) == 0
+    assert pool.stats()["evictions"] == 2
+    assert pool.stats()["queries"] == 0      # retired telemetry folded

@@ -1,0 +1,47 @@
+"""Deterministic generator contracts (no hypothesis dependency — these
+must run in every environment; tests/test_properties.py widens them to
+randomized metamorphic checks where hypothesis is available)."""
+import numpy as np
+import pytest
+
+from repro.graphs import (complete_graph, conformance_corpus,
+                          erdos_renyi_m)
+
+
+@pytest.mark.parametrize("n,m", [
+    (10, 40),    # dense: the old 1.3× oversample deduped below m here
+    (10, 45),    # m == C(n,2): must produce exactly K_10's edge set
+    (30, 0),
+    (50, 300),
+    (200, 1500),
+])
+def test_erdos_renyi_m_delivers_exactly_m(n, m):
+    g = erdos_renyi_m(n, m, seed=2)
+    assert g.m == m and g.n == n
+    # canonical invariants survive the resampling path
+    assert np.all(g.edges[:, 0] < g.edges[:, 1])
+    assert len(np.unique(g.edges[:, 0] * n + g.edges[:, 1])) == g.m
+
+
+def test_erdos_renyi_m_saturated_is_complete():
+    g = erdos_renyi_m(12, 66, seed=5)
+    np.testing.assert_array_equal(g.edges, complete_graph(12).edges)
+
+
+def test_erdos_renyi_m_infeasible_raises():
+    with pytest.raises(ValueError):
+        erdos_renyi_m(10, 46)
+
+
+def test_erdos_renyi_m_seed_reproducible():
+    a = erdos_renyi_m(40, 120, seed=7)
+    b = erdos_renyi_m(40, 120, seed=7)
+    np.testing.assert_array_equal(a.edges, b.edges)
+    assert erdos_renyi_m(40, 120, seed=8).edges.tolist() != a.edges.tolist()
+
+
+def test_conformance_corpus_is_stable():
+    names = [g.name for g in conformance_corpus()]
+    assert names == ["K10", "er_n48_p0.25", "er_n40_m120", "ba_n64_k6",
+                     "planted_32_6_7"]
+    assert len(set(names)) == len(names)

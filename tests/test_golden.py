@@ -1,0 +1,43 @@
+"""Golden-count regression: the engine must reproduce the checked-in
+exact counts for the seeded generator corpus.
+
+The fixture (tests/fixtures/golden_counts.json, regenerated only by
+scripts/regen_golden.py) pins both the corpus graphs (n, m per seeded
+generator) and their exact q_3..q_5 — so a backend or planner refactor
+that silently shifts results, or a generator change that silently
+reshapes the corpus, fails here even if all backends still agree with
+each other.
+"""
+import json
+import os
+
+import pytest
+
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import conformance_corpus
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "golden_counts.json")
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def test_corpus_matches_golden_shapes(golden):
+    corpus = conformance_corpus()
+    assert sorted(g.name for g in corpus) == sorted(golden), \
+        "corpus changed: rerun scripts/regen_golden.py deliberately"
+    for g in corpus:
+        assert (g.n, g.m) == (golden[g.name]["n"], golden[g.name]["m"]), \
+            f"{g.name}: generator output drifted for pinned seed"
+
+
+def test_engine_counts_match_golden(golden):
+    for g in conformance_corpus():
+        eng = CliqueEngine(g)
+        for k_str, expected in golden[g.name]["counts"].items():
+            rep = eng.submit(CountRequest(k=int(k_str)))
+            assert rep.count == expected, (g.name, k_str)

@@ -8,8 +8,11 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (build_oriented, check_lemma1,
                         clique_count_bruteforce, count_cliques)
+from repro.core.oracle import complete_graph_cliques
 from repro.core.order import ranks
-from repro.graphs import (erdos_renyi, from_edges, relabel, union,
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import (complete_graph, erdos_renyi, erdos_renyi_m,
+                          from_edges, relabel, union,
                           random_graph_for_tests)
 
 
@@ -88,6 +91,69 @@ def test_edge_sampling_never_overcounts_at_p1(seed, p):
         assert round(est) == exact
     else:
         assert est >= 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=graphs)
+def test_edge_deletion_monotone(seed):
+    """Metamorphic: deleting any edge never increases any clique count."""
+    g = random_graph_for_tests(seed, max_n=20)
+    if g.m == 0:
+        return
+    rng = np.random.default_rng(seed)
+    keep = np.ones(g.m, dtype=bool)
+    keep[rng.integers(0, g.m)] = False
+    g2 = from_edges(g.edges[keep], n=g.n)
+    eng, eng2 = CliqueEngine(g), CliqueEngine(g2)
+    for k in (3, 4):
+        assert eng2.submit(CountRequest(k=k)).count <= \
+            eng.submit(CountRequest(k=k)).count
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(5, 14), k=st.integers(3, 5))
+def test_complete_graph_closed_form(n, k):
+    """K_n must hit the C(n, k) closed form exactly, on the engine."""
+    eng = CliqueEngine(complete_graph(n))
+    assert eng.submit(CountRequest(k=k)).count == complete_graph_cliques(n, k)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=graphs, k=st.integers(3, 5))
+def test_engine_relabeling_invariance(seed, k):
+    """Node relabeling leaves every q_k invariant (engine sessions on
+    both labelings — the CSR build must not depend on label order)."""
+    g = random_graph_for_tests(seed, max_n=22)
+    rng = np.random.default_rng(seed + 2)
+    g2 = relabel(g, rng.permutation(g.n))
+    assert CliqueEngine(g).submit(CountRequest(k=k)).count == \
+        CliqueEngine(g2).submit(CountRequest(k=k)).count
+
+
+@settings(max_examples=10, deadline=None)
+@given(s1=graphs, s2=graphs, k=st.integers(3, 5))
+def test_engine_union_additivity(s1, s2, k):
+    """Disjoint union sums counts — no cross-component cliques leak."""
+    a = random_graph_for_tests(s1, max_n=18)
+    b = random_graph_for_tests(s2, max_n=18)
+    u = union(a, b)
+    assert CliqueEngine(u).submit(CountRequest(k=k)).count == \
+        CliqueEngine(a).submit(CountRequest(k=k)).count + \
+        CliqueEngine(b).submit(CountRequest(k=k)).count
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 24), frac=st.floats(0.0, 1.0), seed=graphs)
+def test_erdos_renyi_m_exact_edge_count(n, frac, seed):
+    """G(n, m) must deliver exactly m edges for every feasible m (the
+    fixed-oversample version undershot on dense targets)."""
+    max_m = n * (n - 1) // 2
+    m = int(round(frac * max_m))
+    g = erdos_renyi_m(n, m, seed=seed)
+    assert g.m == m
+    assert g.n == n
+    with pytest.raises(ValueError):
+        erdos_renyi_m(n, max_m + 1, seed=seed)
 
 
 @settings(max_examples=8, deadline=None)
