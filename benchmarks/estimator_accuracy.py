@@ -1,0 +1,83 @@
+"""Time-vs-accuracy frontier with the adaptive controller choosing the
+operating point (the paper's Fig. 2 story, productized).
+
+The paper plots running time against SIC_k error for hand-picked color
+counts; ``repro.estimator`` inverts the interface — the caller states a
+relative-error target and the controller finds the cheapest operating
+point meeting it (or proves exact is cheaper). This driver sweeps the
+target on the largest conformance-corpus graph at k=5 and reports, per
+target: wall time, the reported CI, the realized error vs the golden
+count, and the speedup over the exact query on the same warm session.
+
+Asserted claims (the acceptance bar for the estimator subsystem):
+- at the 5% target the controller is ≥ 3× faster than exact,
+- every reported CI contains the true count,
+- every realized error is within the reported ``achieved_rel_error``.
+"""
+import json
+import os
+
+from repro.engine import CountRequest
+from repro.graphs import conformance_corpus
+
+from .common import emit, session, timed
+
+FIXTURE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "fixtures",
+    "golden_counts.json")
+K = 5
+TARGETS = (0.2, 0.1, 0.05)
+
+
+def main() -> None:
+    g = max(conformance_corpus(), key=lambda g: g.m)
+    with open(FIXTURE) as f:
+        truth = json.load(f)[g.name]["counts"][str(K)]
+    eng = session(g)
+    # warm: exact plan+tiles, then one auto query (density certificates,
+    # subset executables) so every row measures steady-state query cost
+    eng.submit(CountRequest(k=K))
+    eng.submit(CountRequest(k=K, method="auto", rel_error=min(TARGETS)))
+    exact_rep, t_exact = timed(eng.submit, CountRequest(k=K), repeat=3)
+    assert exact_rep.count == truth, (exact_rep.count, truth)
+    emit(f"estimator/{g.name}/exact_k{K}", t_exact, f"q{K}={truth}")
+    speedup_at_5pct = None
+    for rel in TARGETS:
+        reps, dts = [], []
+        for seed in range(3):
+            rep, dt = timed(eng.submit, CountRequest(
+                k=K, method="auto", rel_error=rel, confidence=0.99,
+                seed=seed))
+            reps.append(rep)
+            dts.append(dt)
+        t_auto = min(dts)
+        speedup = t_exact / t_auto
+        rep = reps[0]
+        err = abs(rep.estimate - truth) / truth
+        emit(f"estimator/{g.name}/auto_rel{rel}", t_auto,
+             f"est={rep.estimate:.0f};err%={err * 100:.2f};"
+             f"ci=[{rep.ci_low:.0f},{rep.ci_high:.0f}];"
+             f"achieved={rep.achieved_rel_error:.4f};"
+             f"resolved={rep.params['resolved']};"
+             f"level={rep.estimator['level']};"
+             f"reps={rep.estimator['replicates']};"
+             f"speedup={speedup:.2f}x")
+        for r in reps:
+            assert r.ci_low <= truth <= r.ci_high, \
+                (rel, truth, r.ci_low, r.ci_high)
+            realized = abs(r.estimate - truth)
+            assert realized <= r.achieved_rel_error \
+                * max(abs(r.estimate), 1.0) + 1e-9, (rel, realized)
+        if rel == 0.05:
+            speedup_at_5pct = speedup
+    assert speedup_at_5pct is not None and speedup_at_5pct >= 3.0, \
+        f"auto at 5% target only {speedup_at_5pct:.2f}x faster than exact"
+    stats = eng.session_stats()["estimator"]
+    emit(f"estimator/{g.name}/controller", 0.0,
+         f"queries={stats['queries']};sampled={stats['sampled']};"
+         f"fallthroughs={stats['fallthroughs']};"
+         f"replicates={stats['replicates']}")
+
+
+if __name__ == "__main__":
+    main()

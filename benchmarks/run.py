@@ -16,6 +16,7 @@ MODULES = [
     "benchmarks.fig5_scalability",  # paper Figure 5
     "benchmarks.fig6_stragglers",   # paper Figure 6
     "benchmarks.engine_sweep",      # session amortization (submit_many)
+    "benchmarks.estimator_accuracy",  # adaptive controller frontier
     "benchmarks.service_throughput",  # CliqueService vs engine-per-request
     "benchmarks.table_mrc",         # Theorem 1 bounds
     "benchmarks.kernels_bench",     # kernel layer

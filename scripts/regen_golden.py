@@ -8,6 +8,12 @@ Counts come from the brute-force oracle (never from the engine under
 test), so the fixture is an independent regression anchor: rerun this
 only when the corpus itself changes deliberately, and review the diff —
 a changed count means changed semantics, not a refresh.
+
+Coverage: k = 3..7 on the small corpus graphs (the deep-k regression —
+planted_32_6_7 pins nonzero q_6/q_7, the bipartite graph pins the
+all-zero column); the large estimator-benchmark graph stops at k = 5,
+where both the oracle and the engine's exact path stay test-budget
+friendly (its q_6/q_7 work grows as D^{k-1} on 32-wide units).
 """
 import json
 import os
@@ -19,9 +25,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
 from repro.core import clique_count_bruteforce            # noqa: E402
 from repro.graphs import conformance_corpus               # noqa: E402
 
-KS = (3, 4, 5)
+KS = (3, 4, 5, 6, 7)
+DEEP_K_MAX_NODES = 100   # graphs above this pin only k ≤ 5
 OUT = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "tests", "fixtures", "golden_counts.json")
+
+
+def ks_for(n: int):
+    return [k for k in KS if k <= 5 or n <= DEEP_K_MAX_NODES]
 
 
 def main() -> int:
@@ -31,7 +42,7 @@ def main() -> int:
             "n": g.n,
             "m": g.m,
             "counts": {str(k): int(clique_count_bruteforce(g, k))
-                       for k in KS},
+                       for k in ks_for(g.n)},
         }
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:

@@ -14,5 +14,10 @@ python -m pytest -x -q
 
 python -m repro.launch.count --graph rmat:8:4 --k 4 --method color
 
+# estimator smoke: accuracy-targeted auto query on the corpus benchmark
+# graph; --assert-golden checks the reported CI contains the golden count
+python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
+    --rel-error 0.1 --assert-golden
+
 python -m repro.launch.count --serve --graph rmat:7:4,er:60:150 \
     --k 3,4 --repeat 2 --max-sessions 1

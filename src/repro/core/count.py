@@ -30,7 +30,8 @@ import numpy as np
 
 from ..graphs.formats import Graph
 from .csr import OrientedGraph
-from .extract import DeviceCSR, extract_adjacency
+from .extract import (DeviceCSR, edge_lookup, extract_adjacency,
+                      gather_neighbors)
 from .plan import Plan
 from . import mrc as mrc_mod
 
@@ -203,11 +204,62 @@ def split_tile_values(csr: DeviceCSR, nodes: jax.Array, pivots: jax.Array,
     return _dag_count_engine(Bv, r - 1, engine) * scale
 
 
+def subset_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
+                       capacity: int, kept: int, n_iters: int, r: int,
+                       engine: str = "jnp") -> jax.Array:
+    """Fixed-size neighborhood subsampling: the §5.1 smoothing idea taken
+    to its compute-saving conclusion. Instead of masking pairs inside the
+    full ``capacity``-wide adjacency (which leaves the dense tile cost
+    untouched), keep a uniform random ``kept``-subset of each Γ⁺(u) and
+    count r-cliques in the *compacted* (B, kept, kept) adjacency — the
+    tile cost drops from O(D^{r−1}) to O(S^{r−1}) per unit.
+
+    Unbiasedness: a fixed r-subset of Γ⁺(u) survives with probability
+    (s)_r/(d)_r (s = min(d, kept), falling factorials), so the per-node
+    estimate rescales by w_u = (d)_r/(s)_r. Nodes with d ≤ kept keep
+    their whole neighborhood: w_u = 1 and the count is exact — only the
+    heavy units carry sampling variance. Equivalently this is color
+    sampling with a degree-smoothed color count c_u ≈ d_u/kept and
+    exactly one retained color class.
+
+    Returns (B,) f32 rescaled per-node estimates, like ``tile_values``.
+    """
+    nb, in_row = gather_neighbors(csr, nodes, capacity=capacity)
+    B, S = nodes.shape[0], kept
+    ks = _per_node_keys(key, nodes)
+    scores = jax.vmap(lambda k: jax.random.uniform(k, (capacity,)))(ks)
+    # invalid slots sort last, so the S smallest scores are a uniform
+    # S-subset of the real neighbors (all of them when d ≤ S)
+    scores = jnp.where(in_row, scores, jnp.inf)
+    idx = jnp.sort(jnp.argsort(scores, axis=1)[:, :S], axis=1)
+    kept_nb = jnp.take_along_axis(nb, idx, axis=1)
+    kept_nb = jnp.where(jnp.take_along_axis(in_row, idx, axis=1),
+                        kept_nb, -1)
+    # positions stay ascending, rows stay rank-sorted → strict upper
+    # triangularity is preserved and each clique counts once
+    x = jnp.broadcast_to(kept_nb[:, :, None], (B, S, S))
+    y = jnp.broadcast_to(kept_nb[:, None, :], (B, S, S))
+    tri = jnp.triu(jnp.ones((S, S), bool), 1)[None]
+    A = (edge_lookup(csr, jnp.where(tri, x, -1), y, n_iters)
+         & tri).astype(jnp.float32)
+    counts = _dag_count_engine(A, r, engine)
+    d = csr.out_deg[jnp.maximum(nodes, 0)].astype(jnp.float32)
+    s = jnp.minimum(d, np.float32(S))
+    i = jnp.arange(r, dtype=jnp.float32)[None, :]
+    # (d)_r/(s)_r; the max(·, 1) guards only fire where d < r ⇒ counts=0
+    w = jnp.prod(jnp.maximum(d[:, None] - i, 1.0)
+                 / jnp.maximum(s[:, None] - i, 1.0), axis=1)
+    return jnp.where(nodes >= 0, counts * w, 0.0)
+
+
 _TILE_STATICS = ("capacity", "n_iters", "r", "method", "engine")
 _count_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
     tile_values)
 _split_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
     split_tile_values)
+_subset_tile = functools.partial(
+    jax.jit, static_argnames=("capacity", "kept", "n_iters", "r", "engine"))(
+    subset_tile_values)
 
 
 def _tile_batches(nodes: np.ndarray, capacity: int,

@@ -35,15 +35,23 @@ class MRCStats:
     bound_local_space: float     # O(m)
     bound_local_time: float      # O(m^{(k−1)/2})
     sample_factor: float         # expected shrink of round-2/3 volume
+    max_unit_size: int = 0       # largest |Γ⁺(u)| (largest capacity class)
 
     def check_bounds(self, const: float = 4.0) -> dict[str, bool]:
-        """Empirical validation of Theorem 1's asymptotics (constant-slack)."""
+        """Empirical validation of Theorem 1's asymptotics (constant-slack).
+
+        ``lemma1`` is exact, not constant-slack: the degree-order
+        orientation guarantees every reduce-3 input |Γ⁺(u)| ≤ 2√m (paper
+        Lemma 1 — a node's out-neighbors all have degree ≥ |Γ⁺(u)|, so
+        m ≥ |Γ⁺(u)|²/2), hence the planner's largest capacity class is
+        bounded the same way.
+        """
         return {
             "total_space": self.round2_pairs * self.sample_factor
             <= const * self.bound_total_space,
             "local_space": self.max_local_space <= const * self.bound_local_space,
             "total_work": self.total_work <= const * self.bound_total_work,
-            "lemma1": True,
+            "lemma1": self.max_unit_size <= 2.0 * math.sqrt(max(self.m, 1)),
         }
 
 
@@ -71,7 +79,8 @@ def compute_stats(og: OrientedGraph, plan: Plan, method: str = "exact",
         bound_total_work=m ** (k / 2.0),
         bound_local_space=m,
         bound_local_time=m ** ((k - 1) / 2.0),
-        sample_factor=sample)
+        sample_factor=sample,
+        max_unit_size=int(d.max()) if og.n else 0)
 
 
 def theorem2_min_p(m: int, qk: float, k: int, eps: float = 0.1,

@@ -11,11 +11,14 @@ The legacy ``repro.core.count_cliques`` / ``count_cliques_distributed``
 entry points are thin deprecated wrappers over this engine.
 """
 from .backends import Backend, ExecutableCache, LocalBackend, ShardMapBackend
-from .engine import CliqueEngine, PlanEntry, graph_fingerprint
-from .report import BACKENDS, METHODS, CountReport, CountRequest
+from .engine import (CliqueEngine, PlanEntry, derive_sweep_seed,
+                     graph_fingerprint)
+from .report import (ADAPTIVE_METHODS, BACKENDS, METHODS, CountReport,
+                     CountRequest)
 
 __all__ = [
     "CliqueEngine", "CountRequest", "CountReport", "PlanEntry",
     "Backend", "LocalBackend", "ShardMapBackend", "ExecutableCache",
-    "BACKENDS", "METHODS", "graph_fingerprint",
+    "ADAPTIVE_METHODS", "BACKENDS", "METHODS", "derive_sweep_seed",
+    "graph_fingerprint",
 ]

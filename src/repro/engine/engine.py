@@ -38,6 +38,15 @@ from .backends import (Backend, ExecutableCache, LocalBackend,
 from .report import CountReport, CountRequest
 
 
+def derive_sweep_seed(seed: int, index: int) -> int:
+    """Per-request seed for sweep entry ``index``: fold the index into
+    the template seed with the same counter-based PRNG the samplers use,
+    so sweep replicates are decorrelated but fully reproducible."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), index)
+    data = np.asarray(jax.random.key_data(key)).ravel()
+    return int(data[-1]) & 0x7FFFFFFF
+
+
 def graph_fingerprint(graph: Graph) -> str:
     """Content hash of a canonical graph — the session-pool key.
 
@@ -83,6 +92,10 @@ class PlanEntry:
     _sharded: dict = dataclasses.field(default_factory=dict)
     _balance: dict = dataclasses.field(default_factory=dict)
     _mrc: dict = dataclasses.field(default_factory=dict)
+    # plan-lifetime scratch for the adaptive estimator: density
+    # certificates and the key-independent exact bucket partials, both
+    # pure functions of (plan, backend kind) — see repro.estimator
+    _aux: dict = dataclasses.field(default_factory=dict)
 
     def sharded(self, og: OrientedGraph, n_workers: int,
                 tile_elem_budget: int) -> _ShardedPlan:
@@ -194,6 +207,11 @@ class CliqueEngine:
         self._plan_misses = 0
         self.executables = ExecutableCache()
         self.n_queries = 0
+        # adaptive-controller knobs + telemetry (repro.estimator)
+        self.estimator_policy = None   # None → estimator.DEFAULT_POLICY
+        self.adaptive_stats = {"queries": 0, "sampled": 0,
+                               "fallthroughs": 0, "escalations": 0,
+                               "replicates": 0}
         self._fingerprint: Optional[str] = None
         self._closed = False
         self._close_hooks: list[Callable[["CliqueEngine"], None]] = []
@@ -291,9 +309,15 @@ class CliqueEngine:
         t_plan = time.perf_counter() - t0
 
         h0, m0 = self.executables.snapshot()
-        key = jax.random.PRNGKey(req.seed)
         t1 = time.perf_counter()
-        estimate, per_node = backend.run(self, entry, req, key)
+        adaptive_info = None
+        if req.is_adaptive:
+            from ..estimator import run_adaptive
+            estimate, per_node, adaptive_info = run_adaptive(
+                self, backend, entry, req, self.estimator_policy)
+        else:
+            key = jax.random.PRNGKey(req.seed)
+            estimate, per_node = backend.run(self, entry, req, key)
         t_count = time.perf_counter() - t1
         h1, m1 = self.executables.snapshot()
 
@@ -301,7 +325,7 @@ class CliqueEngine:
         stats = entry.stats(self.og, req.method, req.p, req.colors)
         csr_bytes = 4.0 * (self.og.n + 1 + 2 * self.og.m + self.og.n)
         self.n_queries += 1
-        return CountReport(
+        report = CountReport(
             k=req.k, method=req.method, backend=backend.name,
             estimate=estimate, per_node=per_node, mrc=stats,
             plan_summary=entry.plan.cost_summary(),
@@ -320,13 +344,38 @@ class CliqueEngine:
             n_workers=W,
             params={"p": req.p, "colors": req.colors, "seed": req.seed,
                     "backend": backend.name})
+        if adaptive_info is not None:
+            report.ci_low = adaptive_info["ci_low"]
+            report.ci_high = adaptive_info["ci_high"]
+            report.achieved_rel_error = adaptive_info["achieved_rel_error"]
+            report.escalations = adaptive_info["escalations"]
+            report.estimator = adaptive_info
+            report.params.update(rel_error=adaptive_info["rel_error_target"],
+                                 confidence=req.confidence,
+                                 resolved=adaptive_info["resolved"])
+        return report
 
-    def submit_many(self, reqs: Iterable[CountRequest]
-                    ) -> list[CountReport]:
+    def submit_many(self, reqs: Iterable[CountRequest], *,
+                    decorrelate: bool = True) -> list[CountReport]:
         """Batched sweep over one session — e.g. k=3..7 exact+color in
         one call; every query reuses the device CSR, and repeat
-        (capacity, r, method) combinations hit the executable cache."""
-        return [self.submit(r) for r in reqs]
+        (capacity, r, method) combinations hit the executable cache.
+
+        Sampled entries get per-request seeds derived by folding the
+        sweep index into their seed (``jax.random.fold_in``): a sweep of
+        R sampled replicates built from one request template would
+        otherwise silently reuse one seed — identical masks, perfectly
+        correlated "replicates". Exact entries are untouched (the seed
+        is not answer-defining there). Pass ``decorrelate=False`` to
+        submit requests verbatim.
+        """
+        out = []
+        for i, req in enumerate(reqs):
+            if decorrelate and req.effective_method != "exact":
+                req = dataclasses.replace(
+                    req, seed=derive_sweep_seed(req.seed, i))
+            out.append(self.submit(req))
+        return out
 
     # -- telemetry ---------------------------------------------------------
 
@@ -343,5 +392,6 @@ class CliqueEngine:
             "executables": {"hits": self.executables.hits,
                             "misses": self.executables.misses,
                             "cached": len(self.executables)},
+            "estimator": dict(self.adaptive_stats),
             "timings": dict(self.timings),
         }

@@ -13,8 +13,9 @@ import numpy as np
 
 from ..core import mrc as mrc_mod
 
-METHODS = ("exact", "edge", "color", "color_smooth", "ni++")
+METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "auto")
 BACKENDS = ("local", "pallas", "shard_map")
+ADAPTIVE_METHODS = ("auto", "edge", "color")   # may carry a rel_error target
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,6 +25,14 @@ class CountRequest:
     ``backend=None`` uses the engine's default; any request may override
     it, so one session can serve e.g. exact shard_map sweeps and quick
     local sampled probes side by side.
+
+    Accuracy-targeted queries: ``method="auto"`` (or ``"edge"``/``"color"``
+    with ``rel_error`` set) hands the query to the adaptive controller in
+    :mod:`repro.estimator`, which escalates sampling until the confidence
+    interval half-width is within ``rel_error``·estimate at ``confidence``
+    — or falls through to exact counting when the work model says exact
+    is cheaper. For these requests ``p``/``colors``/``seed`` stop being
+    answer-defining (the controller owns the operating point).
     """
     k: int
     method: str = "exact"
@@ -34,6 +43,8 @@ class CountRequest:
     return_per_node: bool = False        # local/pallas backends only
     split_threshold: Optional[int] = None  # §6 split round for |Γ⁺|>thr
     max_capacity: Optional[int] = None   # clamp the planner's classes
+    rel_error: Optional[float] = None    # accuracy target (adaptive only)
+    confidence: float = 0.99             # CI level for rel_error
 
     def validate(self) -> None:
         if self.k < 3:
@@ -44,12 +55,40 @@ class CountRequest:
             raise ValueError("NI++ is a triangle-counting baseline (k=3)")
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if not 0.0 < self.confidence < 1.0:
+            raise ValueError(f"confidence must be in (0, 1), "
+                             f"got {self.confidence}")
+        if self.rel_error is not None:
+            if self.rel_error <= 0.0:
+                raise ValueError(f"rel_error must be > 0, "
+                                 f"got {self.rel_error}")
+            if self.method not in ADAPTIVE_METHODS:
+                raise ValueError(
+                    f"rel_error targets need an adaptive method "
+                    f"{ADAPTIVE_METHODS}, got {self.method!r}")
+        if self.is_adaptive and self.split_threshold is not None:
+            # the estimator's density certificates (and hence the CI's
+            # certified range term) only cover plan buckets; §6 split
+            # units would be sampled but never certified, understating
+            # the error bar — reject rather than lie
+            raise ValueError("adaptive (accuracy-targeted) requests "
+                             "manage their own work partition; "
+                             "split_threshold is not supported")
 
     @property
     def effective_method(self) -> str:
         """NI++ shares the exact tile path (it differs only in round
         accounting, reported through the MRC stats)."""
         return "exact" if self.method == "ni++" else self.method
+
+    @property
+    def is_adaptive(self) -> bool:
+        """True when the query is accuracy-targeted and must be driven by
+        the :mod:`repro.estimator` controller rather than a single
+        backend execution."""
+        return self.method == "auto" or (self.rel_error is not None
+                                         and self.method in ("edge",
+                                                             "color"))
 
     def plan_key(self) -> tuple:
         return (self.k, self.max_capacity, self.split_threshold)
@@ -60,16 +99,25 @@ class CountRequest:
         keys are satisfiable by one execution. Exact counting ignores the
         sampling knobs (p/colors/seed change nothing), so exact queries
         coalesce across users who picked different seeds; sampled methods
-        keep all three, since the estimate depends on them.
+        keep all three, since the estimate depends on them. Adaptive
+        (accuracy-targeted) queries coalesce on the accuracy target
+        instead: two users asking for "q_k within 5% at 99%" are served
+        by one controller run regardless of their seeds or the sampling
+        starting points the controller will escalate past anyway.
         """
         backend = self.backend or default_backend
-        if self.effective_method == "exact":
+        if self.is_adaptive:
             p, colors, seed = 0.0, 0, 0
+            target = (self.rel_error, self.confidence)
+        elif self.effective_method == "exact":
+            p, colors, seed = 0.0, 0, 0
+            target = None
         else:
             p, colors, seed = self.p, self.colors, self.seed
+            target = None
         return (self.k, self.method, p, colors, seed, backend,
                 self.return_per_node, self.split_threshold,
-                self.max_capacity)
+                self.max_capacity, target)
 
 
 @dataclasses.dataclass
@@ -89,6 +137,12 @@ class CountReport:
     cache: dict                      # {"plan": hit|miss, "exec_hits": …}
     n_workers: int
     params: dict
+    # adaptive (accuracy-targeted) queries only; None/0 otherwise
+    ci_low: Optional[float] = None
+    ci_high: Optional[float] = None
+    achieved_rel_error: Optional[float] = None
+    escalations: int = 0
+    estimator: Optional[dict] = None  # controller telemetry (see docs)
 
     @property
     def count(self) -> int:

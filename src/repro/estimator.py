@@ -1,0 +1,543 @@
+"""Accuracy-targeted adaptive estimation: the controller behind
+``CountRequest(method="auto", rel_error=..., confidence=...)``.
+
+The paper's headline claim for the sampling algorithms is "very accurate
+solutions with high probability" — but SI_k/SIC_k make the *user* pick
+the operating point (``p`` / ``colors``) blind. This module closes the
+loop the way Kolda et al. do for wedge sampling: the caller states an
+accuracy contract ("q_k within 5% relative error at 99% confidence") and
+the controller finds the cheapest operating point that meets it.
+
+How it works
+------------
+1. **Density certificates** — one cheap per-node edge count over the
+   cached plan (the r=2 tile, reusing the session's executables) yields
+   e_u = |E(G⁺(u))| for every work unit. That single number classifies
+   each unit *before any sampling*: e_u = C(d_u,2) means the unit is a
+   clique and its contribution C(d_u, k−1) is deterministic under
+   neighborhood subsampling; e_u < C(k−1,2) means the unit cannot hold a
+   single (k−1)-clique under any mask; everything else gets a rigorous
+   per-node support bound from the Kruskal–Katona extremal count
+   (max r-cliques in a graph with e edges).
+2. **Pilot** — a few replicates at the coarsest operating point the
+   certificates deem feasible (hopeless levels are skipped without
+   running them). Replicates share compiled tile executables, so
+   escalation recompiles nothing the session didn't already have.
+3. **Confidence interval** — per-node sampling keys make per-node
+   estimates independent across nodes *and* replicates, so per-node
+   attribution is the replicate structure: ``Var(total) = Σ_u Var(X_u)``,
+   estimated by per-node sample variance summed over nodes (thousands of
+   degrees of freedom from a 2-replicate pilot). The half-width is an
+   empirical-Bernstein bound
+
+       hw = sqrt(2·V̂·L/R) + 3·M·L/max(R−1, 1),  L = ln(3/(1−confidence))
+
+   where M is the *certified* support width — the largest Kruskal–Katona
+   bound over the still-stochastic units, never the observed range. A
+   zero-width interval therefore only happens when every unit is
+   certified deterministic, in which case it is exact, not lucky.
+4. **Escalation** — while the CI misses the target, the controller adds
+   replicates when the projected count is small, else escalates
+   geometrically: ``method="edge"`` doubles ``p`` toward 1,
+   ``method="color"`` halves ``colors`` toward 1, and ``method="auto"``
+   doubles the kept capacity of the subset estimator
+   (:func:`repro.core.count.subset_tile_values` — SIC_k's smoothed
+   coloring taken to its compute-saving conclusion, the only lever that
+   shrinks the dense tile cost rather than just the variance).
+5. **Exact fall-through** — before every spend the controller consults a
+   work model; once the projected sampled work passes the exact plan
+   cost (actual tile FLOPs for the subset lever; the paper's MRC
+   round-3 volume shrink for the mask levers, whose dense tiles cost the
+   same regardless of ``p``/``colors``), it runs the exact query instead
+   and reports a zero-width interval. Tiny graphs and
+   rare-count targets (rel_error · q_k below what any certificate can
+   promise) resolve exact — "auto" degrades to correctness, never to a
+   wrong bar.
+
+Every query reports ``ci_low``/``ci_high``/``achieved_rel_error``/
+``escalations`` plus an ``estimator`` telemetry dict on its
+:class:`~repro.engine.CountReport`. See ``docs/estimator.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core.count import (_count_tile, _subset_tile, _tile_batches,
+                         dag_count_flops)
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorPolicy:
+    """Controller knobs (engine-wide; requests carry only the target)."""
+    default_rel_error: float = 0.05   # when method="auto" sets no target
+    pilot_replicates: int = 2         # replicates per new operating point
+    max_replicates_per_level: int = 24  # beyond this, escalate instead
+    init_kept: int = 8                # subset lever: starting capacity
+    init_p: float = 1.0 / 16.0        # edge lever: starting rate
+    init_colors: int = 16             # color lever: starting color count
+    max_escalations: int = 16         # hard cap → exact fall-through
+    work_slack: float = 0.9           # sampled budget vs exact work
+
+
+DEFAULT_POLICY = EstimatorPolicy()
+
+
+# --------------------------------------------------------------------------
+# certificates and the confidence interval
+# --------------------------------------------------------------------------
+
+def _falling_comb(n: np.ndarray, r: int) -> np.ndarray:
+    """C(n, r) for float arrays via falling factorials, 0 where n < r."""
+    out = np.ones_like(n, dtype=np.float64)
+    for i in range(r):
+        out *= np.maximum(n - i, 0.0)
+    return out / math.factorial(r)
+
+
+def kruskal_katona_bound(edges: np.ndarray, r: int) -> np.ndarray:
+    """Max number of r-cliques in any graph with ``edges`` edges: the
+    colex graphs are extremal, giving C(x, r) + C(j, r−1) for
+    e = C(x, 2) + j, 0 ≤ j < x."""
+    e = np.maximum(np.asarray(edges, np.float64), 0.0)
+    x = np.floor((1.0 + np.sqrt(1.0 + 8.0 * e)) / 2.0)
+    j = e - x * (x - 1.0) / 2.0
+    return _falling_comb(x, r) + _falling_comb(j, r - 1)
+
+
+def empirical_bernstein(X: np.ndarray, confidence: float, M: float
+                        ) -> tuple[float, float, float]:
+    """(estimate, half_width, V̂) for replicate matrix X of shape (R, n):
+    R independent replicates of the n per-node estimates, with certified
+    per-node support width ≤ M.
+
+    The variance of the total is the sum of per-node variances (per-node
+    keys decorrelate nodes), so V̂ pools (R−1) degrees of freedom from
+    every node. The range term uses the *certified* width M, not the
+    observed range — R lucky all-zero replicates of a rare-clique unit
+    cannot fake a tight interval. M = 0 means every unit is certified
+    deterministic and the interval honestly collapses to a point.
+    """
+    R = X.shape[0]
+    est = float(X.sum(axis=1).mean())
+    V = float(X.var(axis=0, ddof=1).sum()) if R > 1 else float("inf")
+    L = math.log(3.0 / max(1.0 - confidence, 1e-12))
+    if not np.isfinite(V):
+        return est, float("inf"), V
+    hw = math.sqrt(2.0 * V * L / R) + 3.0 * M * L / max(R - 1, 1)
+    return est, hw, V
+
+
+def _replicates_to_target(V: float, M: float, confidence: float,
+                          target_hw: float) -> int:
+    """Smallest R with sqrt(2VL/R) + 3ML/(R−1) ≤ target (solve the
+    quadratic in 1/sqrt(R), then pay the −1 back)."""
+    if target_hw <= 0.0 or not np.isfinite(V):
+        return 1 << 30
+    L = math.log(3.0 / max(1.0 - confidence, 1e-12))
+    a, b = math.sqrt(2.0 * V * L), 3.0 * M * L
+    root = (a + math.sqrt(a * a + 4.0 * target_hw * b)) / (2.0 * target_hw)
+    return max(1, int(math.ceil(root * root)) + 1)
+
+
+# --------------------------------------------------------------------------
+# per-plan density certificates (cached on the PlanEntry)
+# --------------------------------------------------------------------------
+
+class _Certificates:
+    """Per-unit (d_u, e_u) and what they certify for order r = k−1."""
+
+    def __init__(self, deg: np.ndarray, edges: np.ndarray, in_plan:
+                 np.ndarray, r: int) -> None:
+        self.deg, self.edges, self.in_plan, self.r = deg, edges, in_plan, r
+        need = r * (r - 1) / 2.0
+        self.complete = in_plan & (edges >= deg * (deg - 1.0) / 2.0)
+        self.zero = in_plan & (edges < need)
+        self.stochastic = in_plan & ~self.complete & ~self.zero
+        # deterministic structural lower bound on the true q_k: clique
+        # units contribute exactly C(d, r), everything else ≥ 0
+        self.det_lower = float(_falling_comb(deg[self.complete], r).sum())
+        self.kk = np.zeros_like(deg)
+        self.kk[self.stochastic] = kruskal_katona_bound(
+            edges[self.stochastic], r)
+
+
+def _certificates(eng, backend, entry, r: int) -> _Certificates:
+    """Compute (once per plan entry per backend kind) each unit's
+    out-neighborhood edge count via the exact r=2 tile — one extraction
+    pass, no counting recursion — and derive the certificates."""
+    kind = backend.kind
+    cache = entry._aux.setdefault("certificates", {})
+    cert = cache.get((kind, r))
+    if cert is not None:
+        return cert
+    n = eng.og.n
+    edges = np.zeros(n, np.float64)
+    in_plan = np.zeros(n, bool)
+    for b in entry.plan.buckets:
+        fn = eng.executables.get(
+            ("tile", kind, b.capacity, 2, "exact"),
+            lambda cap=b.capacity: functools.partial(
+                _count_tile, capacity=cap, n_iters=eng.og.lookup_iters,
+                r=2, method="exact", engine=kind))
+        for tile in _tile_batches(b.nodes, b.capacity, backend.budget):
+            vals = np.asarray(jax.block_until_ready(
+                fn(eng.csr, jnp.asarray(tile), jax.random.PRNGKey(0),
+                   p=1.0, c=1)), np.float64)
+            sel = tile >= 0
+            np.add.at(edges, tile[sel], vals[sel])
+            in_plan[tile[sel]] = True
+    deg = eng.og.out_deg.astype(np.float64)
+    cert = _Certificates(deg, edges, in_plan, r)
+    cache[(kind, r)] = cert
+    return cert
+
+
+# --------------------------------------------------------------------------
+# escalation levers
+# --------------------------------------------------------------------------
+
+class _SubsetLever:
+    """method="auto": escalate the kept neighborhood capacity S. Units
+    with |Γ⁺(u)| ≤ S are counted exactly (and cached across replicates
+    and queries — they are key-independent); heavier units run only if
+    the certificates left them stochastic — clique units contribute
+    their known C(d, r) and zero-certified units nothing, so a replicate
+    touches just the genuinely uncertain tail, at O((S/D)^{k−2}) of its
+    exact tile cost. S ≥ max |Γ⁺(u)| is exact."""
+
+    name = "subset"
+
+    def __init__(self, eng, backend, entry, r: int, cert: _Certificates,
+                 policy: EstimatorPolicy) -> None:
+        self.eng, self.backend, self.entry, self.r = eng, backend, entry, r
+        self.kind = backend.kind
+        self.cert = cert
+        self.policy = policy
+        deg = eng.og.out_deg
+        self.dmax = max((int(deg[b.nodes[b.nodes >= 0]].max())
+                         for b in entry.plan.buckets if b.n_real), default=0)
+        # per-bucket split of the heavy units: the certified-deterministic
+        # per-node contribution (computed once, numpy) and the stochastic
+        # node list a replicate actually has to sample — pure functions of
+        # (plan, certificates, r), so cached on the entry across queries
+        parts = entry._aux.get(("subset_parts", r))
+        if parts is None:
+            det_parts: dict[int, np.ndarray] = {}
+            stoch_nodes: dict[int, np.ndarray] = {}
+            det_all = np.zeros(eng.og.n, np.float64)
+            det_all[cert.complete] = _falling_comb(
+                cert.deg[cert.complete], r)
+            for bi, b in enumerate(entry.plan.buckets):
+                real = b.nodes[b.nodes >= 0]
+                det = np.zeros(eng.og.n, np.float64)
+                det[real] = det_all[real]
+                det_parts[bi] = det
+                stoch = real[cert.stochastic[real]].astype(np.int32)
+                pad = (-len(stoch)) % 8
+                stoch_nodes[bi] = np.concatenate(
+                    [stoch, np.full(pad, -1, np.int32)])
+            parts = entry._aux[("subset_parts", r)] = (det_parts,
+                                                      stoch_nodes)
+        self._det_parts, self._stoch_nodes = parts
+
+    def levels(self, start: int) -> Iterator[int]:
+        S = start
+        while True:
+            yield S
+            S *= 2
+
+    def start_level(self) -> int:
+        """Never subsample below r kept neighbors: with S < r every
+        r-clique is destroyed (a certified-zero lie, not an estimate),
+        so deep-k queries start at the first power-of-two level that can
+        still hold a clique."""
+        S = self.policy.init_kept
+        while S < self.r:
+            S *= 2
+        return S
+
+    def is_exact(self, S: int) -> bool:
+        return S >= self.dmax
+
+    def width_bound(self, S: int) -> float:
+        """Certified support width: only stochastic units with d > S are
+        subsampled; their estimate is w·Y with Y ≤ the Kruskal–Katona
+        count for min(C(S,2), e_u) edges. Clique units are deterministic
+        under subsampling (every S-subset of a clique is a clique) and
+        zero-certified units stay zero, so both have width 0."""
+        c = self.cert
+        sampled = c.stochastic & (c.deg > S)
+        if not sampled.any():
+            return 0.0
+        d = c.deg[sampled]
+        s = np.minimum(d, float(S))
+        w = np.ones_like(d)
+        for i in range(self.r):
+            w *= np.maximum(d - i, 1.0) / np.maximum(s - i, 1.0)
+        cap_e = np.minimum(s * (s - 1.0) / 2.0, c.edges[sampled])
+        return float((w * kruskal_katona_bound(cap_e, self.r)).max())
+
+    def _bucket_flops(self, cap: int, batch: int, S: int) -> float:
+        S = min(cap, S)
+        n_iters = self.eng.og.lookup_iters
+        return (8.0 * batch * cap                     # score + select
+                + 4.0 * batch * S * S * n_iters       # pair lookups
+                + dag_count_flops(S, batch, self.r))  # count
+
+    def cost(self, S: int) -> float:
+        """Marginal per-replicate work: only the stochastic units of the
+        heavy buckets run; the cap ≤ S exact parts are key-independent
+        and cached after the first replicate (priced separately)."""
+        return sum(self._bucket_flops(b.capacity,
+                                      len(self._stoch_nodes[bi]), S)
+                   for bi, b in enumerate(self.entry.plan.buckets)
+                   if b.capacity > S)
+
+    def fixed_cost(self, S: int) -> float:
+        """One-off work at this level: exact tiles for buckets the cache
+        doesn't hold yet."""
+        exact_parts = self.entry._aux.setdefault("subset_exact", {})
+        return sum(self._bucket_flops(b.capacity, b.batch, b.capacity)
+                   for bi, b in enumerate(self.entry.plan.buckets)
+                   if b.capacity <= S
+                   and (self.kind, self.r, bi) not in exact_parts)
+
+    def exact_work(self) -> float:
+        return sum(self._bucket_flops(b.capacity, b.batch, b.capacity)
+                   for b in self.entry.plan.buckets)
+
+    def replicate(self, S: int, key: jax.Array) -> np.ndarray:
+        eng, r, kind = self.eng, self.r, self.kind
+        exact_parts = self.entry._aux.setdefault("subset_exact", {})
+        per_node = np.zeros(eng.og.n, np.float64)
+        for bi, b in enumerate(self.entry.plan.buckets):
+            if b.capacity <= S:
+                part = exact_parts.get((kind, r, bi))
+                if part is None:
+                    part = np.zeros(eng.og.n, np.float64)
+                    fn = eng.executables.get(
+                        ("tile", kind, b.capacity, r, "exact"),
+                        lambda cap=b.capacity: functools.partial(
+                            _count_tile, capacity=cap,
+                            n_iters=eng.og.lookup_iters, r=r,
+                            method="exact", engine=kind))
+                    for tile in _tile_batches(b.nodes, b.capacity,
+                                              self.backend.budget):
+                        _accumulate(part, fn(eng.csr, jnp.asarray(tile),
+                                             key, p=1.0, c=1), tile)
+                    exact_parts[(kind, r, bi)] = part
+                per_node += part
+            else:
+                per_node += self._det_parts[bi]
+                nodes = self._stoch_nodes[bi]
+                if not len(nodes):
+                    continue
+                fn = eng.executables.get(
+                    ("subset", kind, b.capacity, S, r),
+                    lambda cap=b.capacity, S=S: functools.partial(
+                        _subset_tile, capacity=cap, kept=S,
+                        n_iters=eng.og.lookup_iters, r=r, engine=kind))
+                for tile in _tile_batches(nodes, b.capacity,
+                                          self.backend.budget):
+                    _accumulate(per_node,
+                                fn(eng.csr, jnp.asarray(tile), key), tile)
+        return per_node
+
+
+class _MaskLever:
+    """method="edge"/"color" with a rel_error target: escalate the
+    method's own knob through the standard masked tile path. ``p`` and
+    ``colors`` are traced, so every escalation reuses the session's
+    compiled executables — escalation recompiles nothing. The dense tile
+    cost does not shrink with the mask, so the work model prices
+    replicates by the paper's MRC round-3 volume shrink (the quantity
+    the sampling theorems actually buy) rather than by tile FLOPs."""
+
+    def __init__(self, eng, backend, entry, req, cert: _Certificates,
+                 policy: EstimatorPolicy) -> None:
+        self.eng, self.backend, self.entry = eng, backend, entry
+        self.req, self.cert, self.policy = req, cert, policy
+        self.name = req.method
+        self.r = req.k - 1
+
+    def levels(self, start) -> Iterator[float]:
+        if self.name == "edge":
+            p = start
+            while True:
+                yield min(1.0, p)
+                p *= 2.0
+        else:
+            c = start
+            while True:
+                yield max(1, c)
+                c //= 2
+
+    def start_level(self):
+        return (self.policy.init_p if self.name == "edge"
+                else self.policy.init_colors)
+
+    def is_exact(self, level) -> bool:
+        return level >= 1.0 if self.name == "edge" else level <= 1
+
+    def _scale(self, level) -> float:
+        """Largest per-node rescale factor the mask applies."""
+        r = self.r
+        if self.name == "edge":
+            return float(level) ** -(r * (r - 1) / 2.0)
+        return float(level) ** (r - 1)
+
+    def width_bound(self, level) -> float:
+        """Every non-zero-certified unit is stochastic under a mask
+        (even a clique unit), with masked count ≤ its Kruskal–Katona
+        bound and rescale ≤ the mask's scale."""
+        c = self.cert
+        live = c.stochastic | c.complete
+        if not live.any():
+            return 0.0
+        kk = np.where(c.complete, _falling_comb(c.deg, self.r), c.kk)
+        return float(kk[live].max()) * self._scale(level)
+
+    def _factor(self, level) -> float:
+        return float(level) if self.name == "edge" else 1.0 / float(level)
+
+    def cost(self, level) -> float:
+        return self.entry.plan.total_cost * self._factor(level)
+
+    def fixed_cost(self, level) -> float:
+        return 0.0
+
+    def exact_work(self) -> float:
+        return self.entry.plan.total_cost
+
+    def replicate(self, level, key: jax.Array) -> np.ndarray:
+        child = dataclasses.replace(
+            self.req, rel_error=None, return_per_node=True,
+            p=float(level) if self.name == "edge" else self.req.p,
+            colors=int(level) if self.name == "color" else self.req.colors)
+        _, per_node = self.backend.run(self.eng, self.entry, child, key)
+        return per_node
+
+
+def _accumulate(per_node: np.ndarray, vals, tile) -> None:
+    vals = np.asarray(jax.block_until_ready(vals), np.float64)
+    sel = tile >= 0
+    np.add.at(per_node, tile[sel], vals[sel])
+
+
+# --------------------------------------------------------------------------
+# the controller
+# --------------------------------------------------------------------------
+
+def run_adaptive(eng, backend, entry, req,
+                 policy: Optional[EstimatorPolicy] = None
+                 ) -> tuple[float, Optional[np.ndarray], dict]:
+    """Drive one accuracy-targeted query on an engine session. Returns
+    ``(estimate, per_node, info)``; ``info`` carries the CI fields and
+    controller telemetry the engine folds into the CountReport."""
+    policy = policy or DEFAULT_POLICY
+    if backend.name == "shard_map":
+        raise ValueError("adaptive (accuracy-targeted) queries need the "
+                         "per-node replicate structure; use the local or "
+                         "pallas backend")
+    rel = req.rel_error if req.rel_error is not None \
+        else policy.default_rel_error
+    conf = req.confidence
+    r = req.k - 1
+    L = math.log(3.0 / max(1.0 - conf, 1e-12))
+    cert = _certificates(eng, backend, entry, r)
+    if req.method == "auto":
+        lever = _SubsetLever(eng, backend, entry, r, cert, policy)
+    else:
+        lever = _MaskLever(eng, backend, entry, req, cert, policy)
+    exact_work = lever.exact_work()
+    budget = policy.work_slack * exact_work
+    base_key = jax.random.PRNGKey(req.seed)
+    spent, esc, reps_total = 0.0, 0, 0
+    stats = getattr(eng, "adaptive_stats", None)
+    if stats is not None:
+        stats["queries"] += 1
+
+    def info(resolved: str, level, est: float, hw: float) -> dict:
+        achieved = hw / max(abs(est), 1.0)
+        if stats is not None:
+            stats["escalations"] += esc
+            stats["replicates"] += reps_total
+            stats["sampled" if resolved == "sampled"
+                  else "fallthroughs"] += 1
+        return {
+            "resolved": resolved, "lever": lever.name, "level": level,
+            "ci_low": est - hw, "ci_high": est + hw,
+            "achieved_rel_error": achieved, "escalations": esc,
+            "replicates": reps_total, "rel_error_target": rel,
+            "confidence": conf, "spent_work": spent,
+            "exact_work": exact_work,
+        }
+
+    def fall_through() -> tuple[float, Optional[np.ndarray], dict]:
+        child = dataclasses.replace(req, method="exact", rel_error=None)
+        est, per_node = backend.run(eng, entry, child, base_key)
+        return est, per_node, info("exact", None, est, 0.0)
+
+    def run_replicate(X: list, level) -> None:
+        nonlocal spent, reps_total
+        key = jax.random.fold_in(base_key, reps_total)
+        X.append(lever.replicate(level, key))
+        reps_total += 1
+        spent += lever.cost(level)
+
+    # prescreen: the certificates' structural lower bound on q_k prices
+    # each level's range floor before any replicate runs, so the pilot
+    # starts at the coarsest level that could possibly certify the
+    # target (only a *lower* bound on the estimate can be trusted here —
+    # if nothing is certified, start coarse and let the pilot reveal it)
+    start = lever.start_level()
+    if cert.det_lower > 0.0:
+        floor_target = rel * max(cert.det_lower, 1.0)
+        for level in lever.levels(start):
+            if lever.is_exact(level):
+                break
+            floor = 3.0 * lever.width_bound(level) * L \
+                / max(policy.pilot_replicates - 1, 1)
+            if floor <= floor_target:
+                start = level
+                break
+            start = level  # remember the last pre-exact level
+
+    for level in lever.levels(start):
+        if esc >= policy.max_escalations or lever.is_exact(level):
+            return fall_through()
+        fixed = lever.fixed_cost(level)
+        if spent + fixed + policy.pilot_replicates * lever.cost(level) \
+                > budget:
+            return fall_through()
+        spent += fixed
+        M = lever.width_bound(level)
+        X: list[np.ndarray] = []
+        for _ in range(policy.pilot_replicates):
+            run_replicate(X, level)
+        while True:
+            est, hw, V = empirical_bernstein(np.stack(X), conf, M)
+            if hw <= rel * max(abs(est), 1.0):
+                per_node = (np.mean(np.stack(X), axis=0)
+                            if req.return_per_node else None)
+                return est, per_node, info("sampled", level, est, hw)
+            need = _replicates_to_target(V, M, conf,
+                                         rel * max(abs(est), 1.0))
+            if need > policy.max_replicates_per_level:
+                break                      # cheaper to escalate the lever
+            extra = need - len(X)
+            if extra <= 0:
+                break
+            if spent + extra * lever.cost(level) > budget:
+                return fall_through()
+            for _ in range(extra):
+                run_replicate(X, level)
+        esc += 1
+    return fall_through()                  # not reached (levels infinite)

@@ -1,14 +1,15 @@
 """Graph substrate: containers, generators, io, degree computation."""
 from .formats import Graph, from_edges, relabel, subgraph, union
-from .generators import (barabasi_albert, complete_graph,
-                         conformance_corpus, empty_graph, erdos_renyi,
-                         erdos_renyi_m, paper_suite, planted_cliques,
-                         random_graph_for_tests, rmat)
+from .generators import (barabasi_albert, complete_bipartite,
+                         complete_graph, conformance_corpus, empty_graph,
+                         erdos_renyi, erdos_renyi_m, paper_suite,
+                         planted_cliques, random_graph_for_tests, rmat)
 from .io import load_npz, load_snap_txt, save_npz, save_snap_txt
 
 __all__ = [
     "Graph", "from_edges", "relabel", "subgraph", "union",
-    "barabasi_albert", "complete_graph", "conformance_corpus",
+    "barabasi_albert", "complete_bipartite", "complete_graph",
+    "conformance_corpus",
     "empty_graph", "erdos_renyi", "erdos_renyi_m", "paper_suite",
     "planted_cliques",
     "random_graph_for_tests", "rmat",

@@ -28,6 +28,18 @@ def empty_graph(n: int) -> Graph:
     return from_edges(np.zeros((0, 2), np.int64), n=n, name=f"empty{n}")
 
 
+def complete_bipartite(n1: int, n2: int,
+                       name: Optional[str] = None) -> Graph:
+    """K_{n1,n2}: triangle-free, so q_k = 0 for every k ≥ 3 while the
+    degrees (and the planner's capacity classes) stay substantial — the
+    adversarial zero-count case for estimators and their confidence
+    intervals."""
+    u = np.repeat(np.arange(n1, dtype=np.int64), n2)
+    v = n1 + np.tile(np.arange(n2, dtype=np.int64), n1)
+    return from_edges(np.stack([u, v], 1), n=n1 + n2,
+                      name=name or f"K{n1}_{n2}")
+
+
 def erdos_renyi(n: int, p: float, seed: int = 0,
                 name: Optional[str] = None) -> Graph:
     """G(n, p) via per-pair Bernoulli on the upper triangle."""
@@ -153,10 +165,15 @@ def conformance_corpus() -> list[Graph]:
     regenerated by `scripts/regen_golden.py`). Seeds are pinned: changing
     any entry invalidates the checked-in golden counts.
 
-    Small enough that the brute-force oracle covers k ≤ 5, but spanning
-    the structures that stress different code paths: closed-form K_n,
-    ER controls (both G(n,p) and exact-m), heavy-tailed BA, and planted
-    cliques whose counts the background can't mask.
+    Small enough that the brute-force oracle covers every pinned k, but
+    spanning the structures that stress different code paths: closed-form
+    K_n, ER controls (both G(n,p) and exact-m), heavy-tailed BA, planted
+    cliques whose counts the background can't mask, a triangle-free
+    bipartite graph (q_k = 0 for k ≥ 3 — the estimator's zero-count CI
+    case), and a larger planted-clique instance whose exact k=5 count is
+    expensive enough that the adaptive estimator's sampled path must
+    genuinely engage (it is the benchmark graph for
+    benchmarks/estimator_accuracy.py).
     """
     return [
         complete_graph(10),
@@ -165,6 +182,9 @@ def conformance_corpus() -> list[Graph]:
         barabasi_albert(64, 6, seed=3),
         planted_cliques(32, 0.08, [6, 7], seed=5,
                         name="planted_32_6_7"),
+        complete_bipartite(12, 12),
+        planted_cliques(1200, 0.02, [12, 16, 40], seed=9,
+                        name="planted_1200_12_16_40"),
     ]
 
 

@@ -7,6 +7,9 @@ query, and ``--k`` accepts a comma list for a batched session sweep.
       [--split-threshold 512]
   PYTHONPATH=src python -m repro.launch.count --graph rmat:10:8 \
       --k 3,4,5 --method exact,color   # session sweep, cached plans
+  PYTHONPATH=src python -m repro.launch.count \
+      --graph corpus:planted_1200_12_16_40 --k 5 --rel-error 0.05 \
+      --assert-golden                  # accuracy-targeted (repro.estimator)
 
 ``--serve`` drives the multi-graph :class:`CliqueService` instead:
 ``--graph`` takes a comma list of specs, ``--repeat R`` submits the
@@ -23,9 +26,16 @@ import sys
 
 
 def _make_graph(spec: str, seed: int):
-    from ..graphs import (barabasi_albert, complete_graph, erdos_renyi_m,
-                          load_npz, load_snap_txt, rmat)
+    from ..graphs import (barabasi_albert, complete_graph,
+                          conformance_corpus, erdos_renyi_m, load_npz,
+                          load_snap_txt, rmat)
     kind, *rest = spec.split(":")
+    if kind == "corpus":
+        by_name = {g.name: g for g in conformance_corpus()}
+        if rest[0] not in by_name:
+            raise ValueError(f"unknown corpus graph {rest[0]!r}; "
+                             f"one of {sorted(by_name)}")
+        return by_name[rest[0]]
     if kind == "rmat":
         scale, ef = int(rest[0]), int(rest[1]) if len(rest) > 1 else 8
         return rmat(scale, ef, seed=seed)
@@ -105,11 +115,23 @@ def main() -> int:
     ap.add_argument("--k", default="3",
                     help="clique size, or comma list (session sweep)")
     ap.add_argument("--method", default="exact",
-                    help="exact | edge | color | color_smooth | ni++, "
-                         "or comma list (crossed with every k)")
+                    help="exact | edge | color | color_smooth | ni++ | "
+                         "auto, or comma list (crossed with every k); "
+                         "auto picks the sampling operating point to "
+                         "meet --rel-error/--confidence")
     ap.add_argument("--p", type=float, default=0.1)
     ap.add_argument("--colors", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--rel-error", type=float, default=None,
+                    help="accuracy target: estimate within this relative "
+                         "error at --confidence (implies method auto "
+                         "unless an adaptive method is given)")
+    ap.add_argument("--confidence", type=float, default=0.99,
+                    help="confidence level for --rel-error (default .99)")
+    ap.add_argument("--assert-golden", action="store_true",
+                    help="corpus: graphs only — assert each reported CI "
+                         "(or exact count) contains the checked-in "
+                         "golden count (the tier-1 estimator smoke)")
     ap.add_argument("--backend", default=None,
                     choices=["local", "pallas", "shard_map"],
                     help="engine backend (default local; --distributed/"
@@ -152,13 +174,22 @@ def main() -> int:
         else:
             backend = "local"
 
+    from ..engine import ADAPTIVE_METHODS
+
     ks = [int(x) for x in str(args.k).split(",")]
     methods = args.method.split(",")
+    if args.rel_error is not None and methods == ["exact"]:
+        methods = ["auto"]   # bare --rel-error means "auto, to this bar"
     if args.per_node and backend == "shard_map":
         print("warning: --per-node is a local/pallas feature; ignored "
               "on the shard_map backend", file=sys.stderr)
     reqs = [CountRequest(
         k=k, method=m, p=args.p, colors=args.colors, seed=args.seed,
+        # the accuracy target rides only the methods that can adapt, so
+        # e.g. --method auto,exact --rel-error 0.05 compares the
+        # controller against the exact baseline in one sweep
+        rel_error=args.rel_error if m in ADAPTIVE_METHODS else None,
+        confidence=args.confidence,
         split_threshold=args.split_threshold or None,
         return_per_node=args.per_node and backend != "shard_map")
         for k in ks for m in methods]
@@ -173,6 +204,15 @@ def main() -> int:
 
     g = _make_graph(args.graph, args.seed)
     print(f"graph {g.name}: n={g.n} m={g.m} ({g.storage_mb():.1f} MB)")
+    golden = None
+    if args.assert_golden:
+        fixture = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(__file__))))),
+            "tests", "fixtures", "golden_counts.json")
+        with open(fixture) as f:
+            golden = json.load(f)
+        assert g.name in golden, \
+            f"--assert-golden needs a corpus: graph, got {g.name!r}"
     t0 = time.perf_counter()
     eng = CliqueEngine(g, backend=backend)
     for rep in eng.submit_many(reqs):
@@ -186,10 +226,27 @@ def main() -> int:
             "cache": rep.cache,
             "count_s": round(rep.timings["count_s"], 4),
         }
+        if rep.ci_low is not None:
+            row["ci"] = [rep.ci_low, rep.ci_high]
+            row["achieved_rel_error"] = rep.achieved_rel_error
+            row["escalations"] = rep.escalations
+            row["resolved"] = rep.params["resolved"]
         if rep.per_node is not None:
             top = rep.per_node.argsort()[-3:][::-1]
             row["top_nodes"] = top.tolist()
         print(json.dumps(row, indent=1, default=str))
+        if golden is not None:
+            pinned = golden[g.name]["counts"]
+            assert str(rep.k) in pinned, \
+                (f"--assert-golden: k={rep.k} is not pinned for "
+                 f"{g.name} (fixture has k in {sorted(pinned)})")
+            truth = pinned[str(rep.k)]
+            if rep.ci_low is not None:
+                assert rep.ci_low <= truth <= rep.ci_high, \
+                    (rep.k, truth, rep.ci_low, rep.ci_high)
+            else:
+                assert rep.count == truth, (rep.k, rep.count, truth)
+            print(f"golden ok: q_{rep.k}={truth} within reported bounds")
     print(json.dumps({"session": eng.session_stats()}, indent=1,
                      default=str))
     print(f"wall: {time.perf_counter() - t0:.2f}s "

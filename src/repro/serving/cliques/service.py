@@ -11,7 +11,10 @@ service extends that across a workload:
 - **coalescing** — identical in-flight queries (same fingerprint and
   :meth:`CountRequest.query_key`) collapse into one execution whose
   report fans out to every waiter; exact queries even coalesce across
-  users who picked different sampling seeds.
+  users who picked different sampling seeds, and adaptive
+  (accuracy-targeted) queries coalesce on the accuracy contract
+  ``(rel_error, confidence)`` — not on the seed or the sampling knobs
+  the controller escalates past anyway.
 - **batching** — a drain groups queued jobs by session so each engine
   answers its whole batch back-to-back, reusing cached plans, shard
   stacks, and compiled executables across users (``submit_many``
@@ -98,7 +101,9 @@ def _annotated_copy(report: CountReport, fanout: int,
         balance=dict(report.balance),
         per_round_bytes=dict(report.per_round_bytes),
         timings=dict(report.timings),
-        params=dict(report.params))
+        params=dict(report.params),
+        estimator=None if report.estimator is None
+        else dict(report.estimator))
 
 
 class _Job:
@@ -135,6 +140,9 @@ class CliqueService:
         self.coalesced = 0
         self.executed = 0
         self.failed = 0
+        self.adaptive_executed = 0     # accuracy-targeted queries served
+        self.adaptive_escalations = 0  # controller escalations across them
+        self.adaptive_fallthroughs = 0  # resolved exact by the work model
 
     # -- graph registry ----------------------------------------------------
 
@@ -254,6 +262,12 @@ class CliqueService:
             try:
                 report = engine.submit(job.request)
                 executed += 1
+                if report.estimator is not None:
+                    with self._lock:
+                        self.adaptive_executed += 1
+                        self.adaptive_escalations += report.escalations
+                        if report.estimator["resolved"] == "exact":
+                            self.adaptive_fallthroughs += 1
                 self._fulfill(job, report, session)
             except Exception as exc:
                 self._fulfill(job, None, session, exc)
@@ -351,5 +365,10 @@ class CliqueService:
                 "coalesce_rate": self.coalesced / max(self.submitted, 1),
                 "queue_depth": len(self._queue),
                 "registered_graphs": len(self._graphs),
+                "adaptive": {
+                    "executed": self.adaptive_executed,
+                    "escalations": self.adaptive_escalations,
+                    "fallthroughs": self.adaptive_fallthroughs,
+                },
                 "pool": self.pool.stats(),
             }

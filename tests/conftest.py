@@ -14,6 +14,22 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--stat", action="store_true", default=False,
+        help="run the full statistical-calibration sweeps (tier-1 runs "
+             "only the 20-seed smoke)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--stat"):
+        return
+    skip = pytest.mark.skip(reason="full calibration sweep; pass --stat")
+    for item in items:
+        if "stat" in item.keywords:
+            item.add_marker(skip)
+
+
 def run_with_devices(code: str, n_devices: int = 8,
                      timeout: int = 600) -> str:
     """Run a python snippet in a subprocess with N fake host devices."""

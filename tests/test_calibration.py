@@ -1,0 +1,99 @@
+"""Statistical calibration of the adaptive estimator: are the error
+bars honest?
+
+For each corpus case we run the auto controller over many fixed seeds
+and check two empirical guarantees against the golden (oracle) counts:
+
+- **coverage** — the fraction of runs whose reported CI contains the
+  true count must be ≥ the nominal confidence (the CI is conservative
+  by construction, so the observed coverage should sit well above it —
+  a dip below nominal is a real calibration bug, not noise);
+- **honesty** — ``achieved_rel_error`` must actually bound the realized
+  relative error at the same rate.
+
+Runs that resolve exact (work-model fall-through) count toward both —
+"exact, zero-width" is the honest answer for targets sampling cannot
+certify. Tier-1 runs the 20-seed smoke; the full ≥200-seed sweep is the
+``stat`` tier (``pytest --stat``).
+"""
+import json
+import os
+
+import pytest
+
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import conformance_corpus
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "golden_counts.json")
+
+# (graph name, k, rel_error, confidence): spans the regimes — the large
+# planted graph actually samples, the ER/BA controls mostly fall through
+# exact, the bipartite graph exercises the zero-count certificates
+CASES = [
+    ("planted_1200_12_16_40", 5, 0.05, 0.9),
+    ("planted_1200_12_16_40", 4, 0.10, 0.9),
+    ("er_n48_p0.25", 4, 0.10, 0.9),
+    ("ba_n64_k6", 5, 0.10, 0.9),
+    ("K12_12", 4, 0.05, 0.9),
+    ("planted_32_6_7", 5, 0.10, 0.9),
+]
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+@pytest.fixture(scope="module")
+def engines():
+    by_name = {g.name: g for g in conformance_corpus()}
+    cache = {}
+
+    def get(name: str) -> CliqueEngine:
+        if name not in cache:
+            cache[name] = CliqueEngine(by_name[name])
+        return cache[name]
+
+    return get
+
+
+def _run_case(engines, golden, name, k, rel, conf, seeds):
+    eng = engines(name)
+    truth = golden[name]["counts"][str(k)]
+    covered = honest = sampled = 0
+    for seed in seeds:
+        rep = eng.submit(CountRequest(k=k, method="auto", rel_error=rel,
+                                      confidence=conf, seed=seed))
+        covered += rep.ci_low <= truth <= rep.ci_high
+        err = abs(rep.estimate - truth)
+        honest += err <= rep.achieved_rel_error * max(abs(rep.estimate),
+                                                      1.0) + 1e-9
+        sampled += rep.params["resolved"] == "sampled"
+    n = len(seeds)
+    assert covered / n >= conf, \
+        (name, k, f"coverage {covered}/{n} below nominal {conf}")
+    assert honest / n >= conf, \
+        (name, k, f"achieved_rel_error dishonest {honest}/{n}")
+    return sampled
+
+
+@pytest.mark.parametrize("name,k,rel,conf", CASES)
+def test_calibration_smoke_20_seeds(engines, golden, name, k, rel, conf):
+    _run_case(engines, golden, name, k, rel, conf, range(20))
+
+
+def test_smoke_includes_a_genuinely_sampled_case(engines, golden):
+    """Guard against the smoke silently passing because every case fell
+    through to exact: the big planted graph must certify via sampling."""
+    sampled = _run_case(engines, golden, "planted_1200_12_16_40", 5,
+                        0.05, 0.9, range(5))
+    assert sampled == 5
+
+
+@pytest.mark.stat
+@pytest.mark.parametrize("name,k,rel,conf", CASES)
+def test_calibration_full_sweep(engines, golden, name, k, rel, conf):
+    """≥200 seeds per case (disjoint from the smoke's seed range)."""
+    _run_case(engines, golden, name, k, rel, conf, range(100, 300))

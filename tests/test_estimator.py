@@ -1,0 +1,267 @@
+"""Adaptive estimator (repro.estimator): controller behavior, the
+subset tile's unbiasedness, CI plumbing through engine and service,
+seed decorrelation in sweeps, and the Lemma 1 bound check."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clique_count_bruteforce
+from repro.core.count import subset_tile_values
+from repro.core.csr import build_oriented
+from repro.core.extract import to_device
+from repro.core.mrc import compute_stats
+from repro.core.plan import build_plan
+from repro.engine import CliqueEngine, CountRequest
+from repro.estimator import (empirical_bernstein, kruskal_katona_bound,
+                             run_adaptive)
+from repro.graphs import (barabasi_albert, complete_bipartite,
+                          conformance_corpus, erdos_renyi,
+                          planted_cliques)
+
+
+@pytest.fixture(scope="module")
+def big_planted():
+    return planted_cliques(1200, 0.02, [12, 16, 40], seed=9,
+                           name="planted_1200_12_16_40")
+
+
+# -- subset tile -----------------------------------------------------------
+
+def test_subset_tile_unbiased_and_exact_when_kept_covers():
+    """Fixed-size neighborhood subsampling is unbiased (mean over keys →
+    per-node exact counts) and degenerates to exact when kept ≥ d."""
+    g = erdos_renyi(40, 0.4, seed=2)
+    og = build_oriented(g)
+    csr = to_device(og)
+    plan = build_plan(og, 4)
+    bf, per_node = clique_count_bruteforce(g, 4, return_per_node=True)
+    r = 3
+    total_exact = 0.0
+    means = np.zeros(g.n)
+    for b in plan.buckets:
+        nodes = jnp.asarray(b.nodes)
+        # kept ≥ capacity ⇒ every neighborhood fully retained ⇒ exact
+        vals = subset_tile_values(csr, nodes, jax.random.PRNGKey(0),
+                                  capacity=b.capacity, kept=b.capacity,
+                                  n_iters=og.lookup_iters, r=r)
+        total_exact += float(np.asarray(vals).sum())
+        reps = np.stack([
+            np.asarray(subset_tile_values(
+                csr, nodes, jax.random.PRNGKey(s), capacity=b.capacity,
+                kept=8, n_iters=og.lookup_iters, r=r))
+            for s in range(300)])
+        sel = b.nodes >= 0
+        np.add.at(means, b.nodes[sel], reps.mean(axis=0)[sel])
+    assert total_exact == pytest.approx(bf)
+    heavy = og.out_deg > 8          # only these are actually subsampled
+    assert heavy.any()
+    rel = np.abs(means - per_node)[heavy] / np.maximum(per_node[heavy], 1)
+    assert rel.mean() < 0.15, rel    # 300 replicates → means converge
+
+
+def test_kruskal_katona_bound_matches_extremal_graphs():
+    # complete graphs: e = C(x,2) edges hold exactly C(x,r) r-cliques
+    for x, r in [(4, 3), (6, 3), (6, 4), (8, 5)]:
+        e = x * (x - 1) // 2
+        from math import comb
+        assert kruskal_katona_bound(np.array([e]), r)[0] == comb(x, r)
+    # below C(r,2) edges no r-clique fits
+    assert kruskal_katona_bound(np.array([2.0]), 3)[0] == 0
+
+
+def test_empirical_bernstein_zero_width_only_when_certified():
+    X = np.zeros((3, 10))
+    est, hw, _ = empirical_bernstein(X, 0.99, M=0.0)
+    assert est == 0.0 and hw == 0.0
+    # same observations, but a unit could still hide mass: hw must stay
+    # open — lucky all-zero replicates cannot fake certainty
+    est, hw, _ = empirical_bernstein(X, 0.99, M=5.0)
+    assert hw > 0.0
+
+
+# -- controller ------------------------------------------------------------
+
+def test_auto_small_graph_falls_through_to_exact():
+    g = barabasi_albert(64, 6, seed=3)
+    eng = CliqueEngine(g)
+    rep = eng.submit(CountRequest(k=5, method="auto", rel_error=0.05))
+    assert rep.params["resolved"] == "exact"
+    assert rep.count == clique_count_bruteforce(g, 5)
+    assert rep.ci_low == rep.ci_high == rep.estimate
+    assert rep.achieved_rel_error == 0.0
+    assert eng.session_stats()["estimator"]["fallthroughs"] == 1
+
+
+def test_auto_large_graph_samples_and_covers(big_planted):
+    eng = CliqueEngine(big_planted)
+    exact = eng.submit(CountRequest(k=5)).count
+    rep = eng.submit(CountRequest(k=5, method="auto", rel_error=0.05,
+                                  confidence=0.99, seed=3))
+    assert rep.params["resolved"] == "sampled"
+    assert rep.ci_low <= exact <= rep.ci_high
+    assert rep.achieved_rel_error <= 0.05
+    assert rep.estimator["replicates"] >= 2
+    # sampled work stayed below the exact work model
+    assert rep.estimator["spent_work"] < rep.estimator["exact_work"]
+
+
+def test_auto_zero_count_graph_reports_honest_zero():
+    """Bipartite ⇒ q_k = 0 for k ≥ 3: the zero-certificates collapse
+    every unit (no edges inside any Γ⁺), so the CI is exactly [0, 0]."""
+    g = complete_bipartite(12, 12)
+    eng = CliqueEngine(g)
+    for k in (3, 4):
+        rep = eng.submit(CountRequest(k=k, method="auto", rel_error=0.05))
+        assert rep.estimate == 0.0
+        assert rep.ci_low <= 0.0 <= rep.ci_high
+        assert rep.ci_high - rep.ci_low == 0.0
+
+
+def test_adaptive_mask_levers_stay_honest():
+    """edge/color with a rel_error target: tiny graph + tiny count ⇒ no
+    mask level can certify the bar, so the controller escalates its knob
+    and lands exact — never a lucky zero-width lie."""
+    g = erdos_renyi(48, 0.25, seed=11)
+    eng = CliqueEngine(g)
+    bf = clique_count_bruteforce(g, 4)
+    for method in ("edge", "color"):
+        rep = eng.submit(CountRequest(k=4, method=method, rel_error=0.1,
+                                      confidence=0.9))
+        assert rep.ci_low <= bf <= rep.ci_high, method
+        assert rep.estimator is not None    # report carries CI fields
+        assert rep.escalations > 0 or rep.params["resolved"] == "exact"
+
+
+def test_adaptive_rejects_shard_map_and_bad_targets():
+    g = erdos_renyi(30, 0.3, seed=1)
+    eng = CliqueEngine(g)
+    with pytest.raises(ValueError):
+        eng.submit(CountRequest(k=4, method="auto", rel_error=0.1,
+                                backend="shard_map"))
+    with pytest.raises(ValueError):
+        CountRequest(k=4, method="auto", rel_error=-0.1).validate()
+    with pytest.raises(ValueError):
+        CountRequest(k=4, method="exact", rel_error=0.1).validate()
+    with pytest.raises(ValueError):
+        CountRequest(k=4, method="auto", confidence=1.5).validate()
+    with pytest.raises(ValueError):
+        CountRequest(k=4, method="auto", rel_error=0.1,
+                     split_threshold=8).validate()
+    with pytest.raises(ValueError):
+        # split units would be sampled but never certified — the mask
+        # levers must refuse too, not just auto
+        CountRequest(k=4, method="edge", rel_error=0.1,
+                     split_threshold=8).validate()
+
+
+def test_auto_never_subsamples_below_clique_size():
+    """Regression: a start level with kept < r = k−1 destroys every
+    clique in the kept subgraphs and used to report a certified-zero
+    [0, 0] interval for deep k. The lever must clamp its start level to
+    ≥ r (exercised here by forcing init_kept below r, the cheap stand-in
+    for the k ≥ 10 case where r outgrows the default of 8)."""
+    from repro.estimator import EstimatorPolicy
+    g = erdos_renyi(40, 0.5, seed=1)
+    eng = CliqueEngine(g)
+    eng.estimator_policy = EstimatorPolicy(init_kept=2)
+    truth = clique_count_bruteforce(g, 5)
+    assert truth > 0
+    rep = eng.submit(CountRequest(k=5, method="auto", rel_error=0.1))
+    assert rep.estimator["level"] is None or rep.estimator["level"] >= 4
+    assert rep.ci_low <= truth <= rep.ci_high, \
+        (truth, rep.ci_low, rep.ci_high, rep.params["resolved"])
+
+
+def test_run_adaptive_reuses_certificates_and_exact_parts(big_planted):
+    """Second auto query on a session recomputes neither the density
+    certificates nor the key-independent exact bucket partials."""
+    eng = CliqueEngine(big_planted)
+    eng.submit(CountRequest(k=5, method="auto", rel_error=0.05, seed=0))
+    entry = eng._plans[(5, None, None)]
+    assert "certificates" in entry._aux
+    n_keys = len(entry._aux["subset_exact"])
+    h0 = eng.executables.hits
+    eng.submit(CountRequest(k=5, method="auto", rel_error=0.05, seed=1))
+    assert len(entry._aux["subset_exact"]) == n_keys
+    assert eng.executables.hits > h0          # compiled tiles reused
+    assert eng.executables.misses <= len(eng.executables)
+
+
+# -- report / service plumbing --------------------------------------------
+
+def test_auto_query_key_coalesces_on_target_not_seed():
+    a = CountRequest(k=5, method="auto", rel_error=0.05, seed=1)
+    b = CountRequest(k=5, method="auto", rel_error=0.05, seed=2,
+                     p=0.7, colors=3)
+    c = CountRequest(k=5, method="auto", rel_error=0.01, seed=1)
+    d = CountRequest(k=5, method="edge", rel_error=0.05)
+    assert a.query_key() == b.query_key()
+    assert a.query_key() != c.query_key()
+    assert a.query_key() != d.query_key()
+    # non-adaptive sampled requests still key on their knobs
+    e = CountRequest(k=5, method="edge", p=0.5, seed=1)
+    f = CountRequest(k=5, method="edge", p=0.5, seed=2)
+    assert e.query_key() != f.query_key()
+
+
+def test_service_coalesces_auto_and_reports_adaptive_stats():
+    from repro.serving.cliques import CliqueService
+    g = erdos_renyi(40, 0.3, seed=6)
+    svc = CliqueService(max_sessions=2)
+    t1 = svc.submit(g, CountRequest(k=4, method="auto", rel_error=0.1,
+                                    seed=1))
+    t2 = svc.submit(g, CountRequest(k=4, method="auto", rel_error=0.1,
+                                    seed=2))
+    r1, r2 = t1.result(), t2.result()
+    assert r1.count == r2.count == clique_count_bruteforce(g, 4)
+    stats = svc.stats()
+    assert stats["coalesced"] == 1
+    assert stats["adaptive"]["executed"] == 1
+    assert r1.cache["coalesced"] == 2
+
+
+# -- sweep seed plumbing (regression) -------------------------------------
+
+def test_submit_many_decorrelates_sampled_sweep_entries():
+    g = barabasi_albert(300, 8, seed=9)
+    eng = CliqueEngine(g)
+    req = CountRequest(k=4, method="color", colors=3, seed=0)
+    reps = eng.submit_many([req, req, req])
+    ests = [r.estimate for r in reps]
+    assert len(set(ests)) == 3, \
+        f"sweep replicates share one seed (correlated): {ests}"
+    # deterministic: the same sweep resubmitted reproduces bit-for-bit
+    again = [r.estimate for r in eng.submit_many([req, req, req])]
+    assert again == ests
+    # opt-out restores verbatim submission (all entries identical)
+    verbatim = [r.estimate
+                for r in eng.submit_many([req, req], decorrelate=False)]
+    assert verbatim[0] == verbatim[1]
+    # exact entries are untouched by decorrelation
+    ex = eng.submit_many([CountRequest(k=4), CountRequest(k=4)])
+    assert ex[0].estimate == ex[1].estimate
+
+
+# -- Lemma 1 ---------------------------------------------------------------
+
+def test_lemma1_bound_holds_on_corpus():
+    """Largest capacity class (max |Γ⁺(u)|) ≤ 2√m — paper Lemma 1, now
+    actually checked instead of stubbed True."""
+    for g in conformance_corpus():
+        og = build_oriented(g)
+        plan = build_plan(og, 4)
+        stats = compute_stats(og, plan)
+        assert stats.max_unit_size == int(og.out_deg.max())
+        checks = stats.check_bounds()
+        assert checks["lemma1"], (g.name, stats.max_unit_size, stats.m)
+
+
+def test_lemma1_check_detects_violation():
+    g = erdos_renyi(30, 0.3, seed=1)
+    og = build_oriented(g)
+    stats = compute_stats(og, build_plan(og, 4))
+    bad = dataclasses.replace(stats, max_unit_size=10 ** 6)
+    assert not bad.check_bounds()["lemma1"]

@@ -43,5 +43,13 @@ def test_erdos_renyi_m_seed_reproducible():
 def test_conformance_corpus_is_stable():
     names = [g.name for g in conformance_corpus()]
     assert names == ["K10", "er_n48_p0.25", "er_n40_m120", "ba_n64_k6",
-                     "planted_32_6_7"]
+                     "planted_32_6_7", "K12_12", "planted_1200_12_16_40"]
     assert len(set(names)) == len(names)
+
+
+def test_complete_bipartite_is_triangle_free():
+    from repro.core import clique_count_bruteforce
+    from repro.graphs import complete_bipartite
+    g = complete_bipartite(5, 7)
+    assert (g.n, g.m) == (12, 35)
+    assert clique_count_bruteforce(g, 3) == 0
