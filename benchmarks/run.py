@@ -1,7 +1,10 @@
 """Benchmark driver — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Select with --only substring;
---fast skips the multi-process scalability sweep.
+--fast skips the multi-process scalability sweep. The kernel-layer
+module additionally appends this run's packed-vs-dense rows to
+``BENCH_kernels.json`` at the repo root, so successive PRs accumulate
+a perf trajectory for the hot path.
 """
 import argparse
 import importlib

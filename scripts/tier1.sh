@@ -14,6 +14,11 @@ python -m pytest -x -q
 
 python -m repro.launch.count --graph rmat:8:4 --k 4 --method color
 
+# packed-bitset smoke: forced uint32 tile representation must reproduce
+# the pinned golden counts on a corpus graph
+python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5,6 \
+    --engine bitset --assert-golden
+
 # estimator smoke: accuracy-targeted auto query on the corpus benchmark
 # graph; --assert-golden checks the reported CI contains the golden count
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \

@@ -31,7 +31,8 @@ import numpy as np
 from ..graphs.formats import Graph
 from .csr import OrientedGraph
 from .extract import (DeviceCSR, edge_lookup, extract_adjacency,
-                      gather_neighbors)
+                      extract_adjacency_bits, gather_neighbors,
+                      pack_adjacency, packed_words)
 from .plan import Plan
 from . import mrc as mrc_mod
 
@@ -78,6 +79,76 @@ def _dag_count_engine(A: jax.Array, r: int, engine: str) -> jax.Array:
         from ..kernels.cliques import ops as cliques_ops
         return cliques_ops.dag_count_pallas(A, r)
     return dag_count(A, r)
+
+
+# --------------------------------------------------------------------------
+# counting identities, packed domain (uint32 bitset rows)
+# --------------------------------------------------------------------------
+
+def _unpack_bits(bits: jax.Array, D: int) -> jax.Array:
+    """(..., W) uint32 → (..., D) f32 indicator (in-register unpack)."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    b = (bits[..., None] >> shifts) & jnp.uint32(1)
+    return b.reshape(bits.shape[:-1] + (-1,))[..., :D].astype(jnp.float32)
+
+
+def dag_count_bits(bits: jax.Array, r: int) -> jax.Array:
+    """Number of r-cliques per packed DAG adjacency of the batch.
+
+    bits: (B, D, W) uint32 rows, W = ⌈D/32⌉, strictly upper-triangular.
+    Returns (B,) f32. Same pivot recursion as :func:`dag_count`, carried
+    out in the packed domain: the pivot mask is a row-broadcast AND plus
+    a row-bit select, and the innermost levels are pure AND+popcount —
+    32 adjacency entries per lane op, no multiplies.
+    """
+    assert r >= 2, "r=1 is a row popcount; handled by the split path"
+    D = bits.shape[1]
+    if r == 2:
+        return jnp.sum(jax.lax.population_count(bits).astype(jnp.float32),
+                       axis=(1, 2))
+    # init carry derived from bits so it inherits the varying-manual-axes
+    # type under shard_map (see dag_count)
+    init = jnp.sum(bits[:, 0, 0:1], axis=1).astype(jnp.float32) * 0.0
+    if r == 3:
+        def edge_level(i, acc):
+            row = jax.lax.dynamic_index_in_dim(bits, i, axis=1,
+                                               keepdims=False)  # (B, W)
+            inter = jnp.bitwise_and(bits, row[:, None, :])       # (B, D, W)
+            common = jnp.sum(jax.lax.population_count(inter)
+                             .astype(jnp.float32), axis=2)       # (B, D)
+            return acc + jnp.sum(common * _unpack_bits(row, D), axis=1)
+        return jax.lax.fori_loop(0, D, edge_level, init)
+
+    def pivot(v, acc):
+        row = jax.lax.dynamic_index_in_dim(bits, v, axis=1,
+                                           keepdims=False)       # (B, W)
+        colmask = jnp.bitwise_and(bits, row[:, None, :])         # (B, D, W)
+        sel = _unpack_bits(row, D) > 0.0                         # (B, D)
+        Bv = jnp.where(sel[:, :, None], colmask, jnp.uint32(0))
+        return acc + dag_count_bits(Bv, r - 1)
+
+    return jax.lax.fori_loop(0, D, pivot, init)
+
+
+def dag_count_bits_ops(D: int, B: int, r: int) -> float:
+    """Analytic VPU word-ops of ``dag_count_bits`` (roofline bookkeeping):
+    every AND / popcount / select touches W = ⌈D/32⌉ uint32 lanes per
+    row, so one packed level costs ~3·B·D·W word-ops per pivot."""
+    W = float(packed_words(D))
+    if r == 2:
+        return 2.0 * B * D * W
+    if r == 3:
+        return D * (3.0 * B * D * W + 2.0 * B * D)
+    return D * (3.0 * B * D * W + B * D + dag_count_bits_ops(D, B, r - 1))
+
+
+def _dag_count_bits_engine(bits: jax.Array, r: int,
+                           engine: str) -> jax.Array:
+    """Dispatch the packed identity to the jnp or Pallas implementation."""
+    if engine == "pallas":
+        from ..kernels.bitset import ops as bitset_ops
+        return bitset_ops.dag_count_bits_pallas(bits, r)
+    return dag_count_bits(bits, r)
 
 
 # --------------------------------------------------------------------------
@@ -149,6 +220,31 @@ def apply_sampling(A: jax.Array, nodes: jax.Array, out_deg: jax.Array,
     return A, scale
 
 
+def apply_sampling_bits(bits: jax.Array, nodes: jax.Array,
+                        out_deg: jax.Array, key: jax.Array, *, method: str,
+                        r: int, p, c) -> tuple[jax.Array, jax.Array]:
+    """Section-4 sampling for the packed tile path. The Bernoulli /
+    monochromatic masks are generated densely (O(D²) bools — the cheap
+    part) but packed before they touch the adjacency, so the dominant
+    O(D^{r−1}) counting cost stays in the 32×-smaller packed domain."""
+    D = bits.shape[1]
+    scale = jnp.ones((nodes.shape[0],), jnp.float32)
+    if method == "edge":
+        mask = pack_adjacency(edge_sample_mask(key, nodes, D, p))
+        bits = jnp.bitwise_and(bits, mask)
+        pf = jnp.asarray(p, jnp.float32)
+        scale = scale / pf ** np.float32(r * (r - 1) / 2.0)
+    elif method in ("color", "color_smooth"):
+        if method == "color_smooth":
+            ncol = smoothed_colors(out_deg, c, r + 1)
+        else:
+            ncol = jnp.full(nodes.shape, c, jnp.int32)
+        mask = pack_adjacency(color_mask(key, nodes, D, ncol))
+        bits = jnp.bitwise_and(bits, mask)
+        scale = scale * ncol.astype(jnp.float32) ** np.float32(r - 1)
+    return bits, scale
+
+
 # --------------------------------------------------------------------------
 # the shared tile path (every engine backend routes through these)
 # --------------------------------------------------------------------------
@@ -204,9 +300,48 @@ def split_tile_values(csr: DeviceCSR, nodes: jax.Array, pivots: jax.Array,
     return _dag_count_engine(Bv, r - 1, engine) * scale
 
 
+def bits_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
+                     capacity: int, n_iters: int, r: int, method: str,
+                     p, c, engine: str = "jnp") -> jax.Array:
+    """Packed twin of :func:`tile_values`: extract G⁺(u) straight into
+    uint32 bitset rows, mask in the packed domain, count with
+    AND+popcount. Bit-exact vs the dense path (both count integers in
+    f32); the tile it materializes is B·D²/8 bytes instead of 4·B·D²."""
+    bits, _ = extract_adjacency_bits(csr, nodes, capacity=capacity,
+                                     n_iters=n_iters)
+    deg = csr.out_deg[jnp.maximum(nodes, 0)]
+    bits, scale = apply_sampling_bits(bits, nodes, deg, key, method=method,
+                                      r=r, p=p, c=c)
+    return _dag_count_bits_engine(bits, r, engine) * scale
+
+
+def bits_split_tile_values(csr: DeviceCSR, nodes: jax.Array,
+                           pivots: jax.Array, key: jax.Array, *,
+                           capacity: int, n_iters: int, r: int, method: str,
+                           p, c, engine: str = "jnp") -> jax.Array:
+    """Packed twin of :func:`split_tile_values`: the §6 split round's
+    outer pivot level becomes one row gather + a row-broadcast AND."""
+    bits, _ = extract_adjacency_bits(csr, nodes, capacity=capacity,
+                                     n_iters=n_iters)
+    deg = csr.out_deg[jnp.maximum(nodes, 0)]
+    bits, scale = apply_sampling_bits(bits, nodes, deg, key, method=method,
+                                      r=r, p=p, c=c)
+    rows = jnp.take_along_axis(
+        bits, pivots[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    if r - 1 == 1:  # k=3: 1-cliques below pivot v = |Γ⁺(v) ∩ G⁺(u)|
+        return jnp.sum(jax.lax.population_count(rows)
+                       .astype(jnp.float32), axis=1) * scale
+    D = capacity
+    colmask = jnp.bitwise_and(bits, rows[:, None, :])
+    sel = _unpack_bits(rows, D) > 0.0
+    Bv = jnp.where(sel[:, :, None], colmask, jnp.uint32(0))
+    return _dag_count_bits_engine(Bv, r - 1, engine) * scale
+
+
 def subset_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
                        capacity: int, kept: int, n_iters: int, r: int,
-                       engine: str = "jnp") -> jax.Array:
+                       engine: str = "jnp",
+                       tile_repr: str = "bits") -> jax.Array:
     """Fixed-size neighborhood subsampling: the §5.1 smoothing idea taken
     to its compute-saving conclusion. Instead of masking pairs inside the
     full ``capacity``-wide adjacency (which leaves the dense tile cost
@@ -240,9 +375,13 @@ def subset_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
     x = jnp.broadcast_to(kept_nb[:, :, None], (B, S, S))
     y = jnp.broadcast_to(kept_nb[:, None, :], (B, S, S))
     tri = jnp.triu(jnp.ones((S, S), bool), 1)[None]
-    A = (edge_lookup(csr, jnp.where(tri, x, -1), y, n_iters)
-         & tri).astype(jnp.float32)
-    counts = _dag_count_engine(A, r, engine)
+    found = edge_lookup(csr, jnp.where(tri, x, -1), y, n_iters) & tri
+    if tile_repr == "bits":
+        # default: the compacted adjacency is counted fully packed,
+        # like every other tile path
+        counts = _dag_count_bits_engine(pack_adjacency(found), r, engine)
+    else:   # a request-forced engine="dense" applies here too
+        counts = _dag_count_engine(found.astype(jnp.float32), r, engine)
     d = csr.out_deg[jnp.maximum(nodes, 0)].astype(jnp.float32)
     s = jnp.minimum(d, np.float32(S))
     i = jnp.arange(r, dtype=jnp.float32)[None, :]
@@ -257,16 +396,97 @@ _count_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
     tile_values)
 _split_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
     split_tile_values)
+_bits_tile = functools.partial(jax.jit, static_argnames=_TILE_STATICS)(
+    bits_tile_values)
+_bits_split_tile = functools.partial(
+    jax.jit, static_argnames=_TILE_STATICS)(bits_split_tile_values)
 _subset_tile = functools.partial(
-    jax.jit, static_argnames=("capacity", "kept", "n_iters", "r", "engine"))(
-    subset_tile_values)
+    jax.jit, static_argnames=("capacity", "kept", "n_iters", "r", "engine",
+                              "tile_repr"))(subset_tile_values)
+
+
+# --------------------------------------------------------------------------
+# tile representation choice + byte-accounted batching
+# --------------------------------------------------------------------------
+
+TILE_REPRS = ("dense", "bits")
+
+
+def tile_unit_bytes(capacity: int, tile_repr: str = "dense") -> int:
+    """HBM bytes one work unit's adjacency occupies in a tile: 4·D² for
+    the dense f32 representation, 4·D·⌈D/32⌉ (= D²/8) packed."""
+    assert tile_repr in TILE_REPRS, tile_repr
+    if tile_repr == "bits":
+        return 4 * capacity * packed_words(capacity)
+    return 4 * capacity * capacity
+
+
+def pick_tile_repr(*, r: int, capacity: int, method: str = "exact",
+                   choice: str = "auto",
+                   elem_budget: int = 1 << 23) -> str:
+    """Bytes-based cost model for the packed-vs-dense tile choice.
+
+    ``choice`` is the request's ``engine`` knob: "dense"/"bitset" force a
+    representation; "auto" picks per (r, capacity) bucket. Packed wins
+    where the MXU has nothing to multiply — k=3 (r=2: the count is a row
+    popcount) and NI++'s triangle path — and wherever a minimal aligned
+    batch of 8 dense f32 units would blow the tile byte budget (the
+    huge-capacity buckets), where the 32× smaller packed tile keeps the
+    dispatch batched instead of degrading to single-unit tiles. The
+    dense matmul identity keeps r ≥ 3 buckets that fit: a 0/1 matmul on
+    the MXU still beats the VPU's D/32 popcount lanes there.
+    """
+    if choice == "dense":
+        return "dense"
+    if choice == "bitset":
+        return "bits"
+    if method == "ni++" or r <= 2:
+        return "bits"
+    if 8 * tile_unit_bytes(capacity, "dense") > 4 * elem_budget:
+        return "bits"
+    return "dense"
+
+
+def tile_batch_repr(tile_repr: str, method: str) -> str:
+    """Representation to *byte-account* a tile batch with. Sampled
+    methods materialize a transient dense mask before packing
+    (:func:`apply_sampling_bits`), so their packed tiles must batch at
+    dense sizes — only the exact path earns the 32× wider batch."""
+    if tile_repr == "bits" and method != "exact":
+        return "dense"
+    return tile_repr
+
+
+def subset_unit_bytes(capacity: int, kept: int) -> int:
+    """Byte-accounting for one ``subset_tile_values`` unit: the
+    compacted (S, S) adjacency plus the capacity-wide gather/score
+    transients — not the full D² the unit never materializes."""
+    return 4 * kept * kept + 16 * capacity
+
+
+def _pick_tile_b(n_avail: int, capacity: int, elem_budget: int,
+                 tile_repr: str = "dense",
+                 unit_bytes: Optional[int] = None) -> int:
+    """Largest batch whose tile fits the byte budget (4·elem_budget —
+    the budget is denominated in f32 elements), aligned down to 8 when
+    possible. Never exceeds the budget just to hit the alignment floor:
+    a D=4096 dense tile runs 1 unit at a time, not 8 (the seed's
+    ``max(8, …)`` silently shipped 512 MiB tiles there)."""
+    budget_bytes = 4 * elem_budget
+    if unit_bytes is None:
+        unit_bytes = tile_unit_bytes(capacity, tile_repr)
+    B = max(1, min(n_avail, budget_bytes // unit_bytes))
+    if B >= 8:
+        B -= B % 8
+    return B
 
 
 def _tile_batches(nodes: np.ndarray, capacity: int,
-                  elem_budget: int = 1 << 23):
-    """Split a bucket's node list into tiles with B·D² ≤ budget."""
-    B = max(8, min(len(nodes), elem_budget // (capacity * capacity)))
-    B += (-B) % 8
+                  elem_budget: int = 1 << 23, tile_repr: str = "dense",
+                  unit_bytes: Optional[int] = None):
+    """Split a bucket's node list into tiles within the byte budget."""
+    B = _pick_tile_b(len(nodes), capacity, elem_budget, tile_repr,
+                     unit_bytes)
     for i in range(0, len(nodes), B):
         tile = nodes[i:i + B]
         if len(tile) < B:
@@ -276,10 +496,9 @@ def _tile_batches(nodes: np.ndarray, capacity: int,
 
 
 def _split_batches(nodes: np.ndarray, pivots: np.ndarray, capacity: int,
-                   elem_budget: int = 1 << 23):
+                   elem_budget: int = 1 << 23, tile_repr: str = "dense"):
     """Tile a split plan's (node, pivot) unit lists the same way."""
-    B = max(8, min(len(nodes), elem_budget // (capacity * capacity)))
-    B += (-B) % 8
+    B = _pick_tile_b(len(nodes), capacity, elem_budget, tile_repr)
     for i in range(0, len(nodes), B):
         tn, tp = nodes[i:i + B], pivots[i:i + B]
         if len(tn) < B:
@@ -312,7 +531,8 @@ def count_cliques(g: Graph, k: int, method: str = "exact",
       "color"        — SIC_k with c = ``colors`` (Section 4)
       "color_smooth" — SIC_k with degree-smoothed color counts (Section 5)
       "ni++"         — Node Iterator++ [34]; k must be 3 (2-round baseline)
-    engine: "jnp" reference path or "pallas" (interpret on CPU, MXU on TPU).
+    engine: "jnp" reference path, "pallas" (interpret on CPU, MXU on TPU),
+    or "bitset" (packed uint32 tiles + popcount counting).
     """
     from ..engine import CliqueEngine, CountRequest
     t0 = time.perf_counter()
@@ -322,6 +542,8 @@ def count_cliques(g: Graph, k: int, method: str = "exact",
         eng.warm_plan(plan)
     rep = eng.submit(CountRequest(k=k, method=method, p=p, colors=colors,
                                   seed=seed,
+                                  engine=("bitset" if engine == "bitset"
+                                          else "auto"),
                                   return_per_node=return_per_node))
     timings = dict(rep.timings)
     timings["total_s"] = time.perf_counter() - t0

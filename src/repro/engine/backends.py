@@ -7,7 +7,11 @@
 All three consume the same plan, the same device CSR, and the same
 sampling/count math from ``repro.core.count`` — the collapse of the
 seed's duplicated ``_count_tile`` vs ``_apply_sampling``/
-``_worker_bucket_sum`` forks.
+``_worker_bucket_sum`` forks. Orthogonal to the backend, every bucket
+picks a tile *representation* (dense f32 vs packed uint32 bitset) via
+``repro.core.count.pick_tile_repr`` — forced by the request's
+``engine`` knob or chosen per (r, capacity) by the bytes-based cost
+model (see ``docs/kernels.md``).
 
 The engine's ExecutableCache keys by ``(kind, capacity, r, method, …)``.
 For the shard_map backend it caches the actual ``jit(shard_map(...))``
@@ -31,8 +35,11 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map
-from ..core.count import (_count_tile, _split_batches, _split_tile,
-                          _tile_batches, split_tile_values, tile_values)
+from ..core.count import (_bits_split_tile, _bits_tile, _count_tile,
+                          _split_batches, _split_tile, _tile_batches,
+                          bits_split_tile_values, bits_tile_values,
+                          pick_tile_repr, split_tile_values,
+                          tile_batch_repr, tile_values)
 
 
 class ExecutableCache:
@@ -74,6 +81,30 @@ class Backend(abc.ABC):
         """Returns (estimate, per_node or None)."""
 
 
+def tile_executable(eng, kind: str, tile_repr: str, capacity: int, r: int,
+                    method: str):
+    """Session-cached per-node tile executable for one (representation,
+    capacity, r, method) combination — shared by the local backend and
+    the adaptive estimator so both hit the same cache entries."""
+    fn = _bits_tile if tile_repr == "bits" else _count_tile
+    return eng.executables.get(
+        ("tile", kind, tile_repr, capacity, r, method),
+        lambda: functools.partial(
+            fn, capacity=capacity, n_iters=eng.og.lookup_iters, r=r,
+            method=method, engine=kind))
+
+
+def split_executable(eng, kind: str, tile_repr: str, capacity: int, r: int,
+                     method: str):
+    """Same, for the §6 split-unit tile path."""
+    fn = _bits_split_tile if tile_repr == "bits" else _split_tile
+    return eng.executables.get(
+        ("split", kind, tile_repr, capacity, r, method),
+        lambda: functools.partial(
+            fn, capacity=capacity, n_iters=eng.og.lookup_iters, r=r,
+            method=method, engine=kind))
+
+
 # --------------------------------------------------------------------------
 # local (single-device) backend: jnp or pallas round-3 kernel
 # --------------------------------------------------------------------------
@@ -107,24 +138,24 @@ class LocalBackend(Backend):
                 np.add.at(per_node, ids[sel], vals[sel])
 
         for b in entry.plan.buckets:
-            fn = eng.executables.get(
-                ("tile", self.kind, b.capacity, r, method),
-                lambda cap=b.capacity: functools.partial(
-                    _count_tile, capacity=cap,
-                    n_iters=eng.og.lookup_iters, r=r, method=method,
-                    engine=self.kind))
-            for tile in _tile_batches(b.nodes, b.capacity, self.budget):
+            repr_ = pick_tile_repr(r=r, capacity=b.capacity,
+                                   method=req.method, choice=req.engine,
+                                   elem_budget=self.budget)
+            fn = tile_executable(eng, self.kind, repr_, b.capacity, r,
+                                 method)
+            for tile in _tile_batches(b.nodes, b.capacity, self.budget,
+                                      tile_batch_repr(repr_, method)):
                 accumulate(fn(eng.csr, jnp.asarray(tile), key, p=p, c=c),
                            tile)
         for sp in entry.splits:
-            fn = eng.executables.get(
-                ("split", self.kind, sp.capacity, r, method),
-                lambda cap=sp.capacity: functools.partial(
-                    _split_tile, capacity=cap,
-                    n_iters=eng.og.lookup_iters, r=r, method=method,
-                    engine=self.kind))
+            repr_ = pick_tile_repr(r=r, capacity=sp.capacity,
+                                   method=req.method, choice=req.engine,
+                                   elem_budget=self.budget)
+            fn = split_executable(eng, self.kind, repr_, sp.capacity, r,
+                                  method)
             for tn, tp in _split_batches(sp.nodes, sp.pivots, sp.capacity,
-                                         self.budget):
+                                         self.budget,
+                                         tile_batch_repr(repr_, method)):
                 accumulate(fn(eng.csr, jnp.asarray(tn), jnp.asarray(tp),
                               key, p=p, c=c), tn)
         return total, per_node
@@ -135,38 +166,42 @@ class LocalBackend(Backend):
 # --------------------------------------------------------------------------
 
 def _worker_bucket_sum(csr, nodes_shard, key, p, c, *, capacity, n_iters,
-                       r, method, tile_b, axis):
+                       r, method, tile_b, axis, tile_repr="dense"):
     """Runs on each worker: count its shard of one capacity class.
 
     nodes_shard: (1, T·tile_b) on this device — reshaped to tiles and
     folded with `lax.map` so the compiled program is one tile body —
-    the same ``tile_values`` body the local backend jits.
+    the same ``tile_values``/``bits_tile_values`` body the local
+    backend jits (``tile_repr`` picks the representation).
     """
     nodes = nodes_shard.reshape(-1, tile_b)
+    tv = bits_tile_values if tile_repr == "bits" else tile_values
 
     def one_tile(tile_nodes):
-        return jnp.sum(tile_values(csr, tile_nodes, key, p=p, c=c,
-                                   capacity=capacity, n_iters=n_iters,
-                                   r=r, method=method))
+        return jnp.sum(tv(csr, tile_nodes, key, p=p, c=c,
+                          capacity=capacity, n_iters=n_iters,
+                          r=r, method=method))
 
     local = jnp.sum(jax.lax.map(one_tile, nodes))
     return jax.lax.psum(local, axis)
 
 
 def _worker_split_sum(csr, nodes_shard, pivots_shard, key, p, c, *,
-                      capacity, n_iters, r, method, tile_b, axis):
+                      capacity, n_iters, r, method, tile_b, axis,
+                      tile_repr="dense"):
     """§6 split units: one (node, pivot) per unit; counts (k−2)-cliques in
-    A_u masked by pivot row v — ``split_tile_values``, the dense analogue
-    of replicating G⁺(u) to reducer (u, v)."""
+    A_u masked by pivot row v — ``split_tile_values`` (or its packed
+    twin), the dense analogue of replicating G⁺(u) to reducer (u, v)."""
     nodes = nodes_shard.reshape(-1, tile_b)
     pivots = pivots_shard.reshape(-1, tile_b)
+    tv = bits_split_tile_values if tile_repr == "bits" else \
+        split_tile_values
 
     def one_tile(args):
         tile_nodes, tile_pivots = args
-        return jnp.sum(split_tile_values(csr, tile_nodes, tile_pivots,
-                                         key, p=p, c=c, capacity=capacity,
-                                         n_iters=n_iters, r=r,
-                                         method=method))
+        return jnp.sum(tv(csr, tile_nodes, tile_pivots,
+                          key, p=p, c=c, capacity=capacity,
+                          n_iters=n_iters, r=r, method=method))
 
     local = jnp.sum(jax.lax.map(one_tile, (nodes, pivots)))
     return jax.lax.psum(local, axis)
@@ -198,27 +233,44 @@ class ShardMapBackend(Backend):
 
     def run(self, eng, entry, req, key):
         W = self.n_workers
-        sharded = entry.sharded(eng.og, W, self.budget)
         r = req.k - 1
+
         method = req.effective_method
+
+        def repr_of(capacity: int) -> tuple[str, str]:
+            """(counting repr, byte-accounting repr) per capacity."""
+            tr = pick_tile_repr(r=r, capacity=capacity,
+                                method=req.method, choice=req.engine,
+                                elem_budget=self.budget)
+            return tr, tile_batch_repr(tr, method)
+
+        reprs = tuple(sorted(
+            {(b.capacity,) + repr_of(b.capacity)
+             for b in entry.plan.buckets} |
+            {(sp.capacity,) + repr_of(sp.capacity)
+             for sp in entry.splits}))
+        sharded = entry.sharded(eng.og, W, self.budget, reprs)
         p = jnp.float32(req.p)
         c = jnp.int32(req.colors)
         total = 0.0
         for sb in sharded.buckets:
             fn = eng.executables.get(
-                ("wsum", sb.capacity, sb.tile_b, r, method, W, self.axis),
+                ("wsum", sb.capacity, sb.tile_repr, sb.tile_b, r, method,
+                 W, self.axis),
                 lambda sb=sb: self._wrap(functools.partial(
                     _worker_bucket_sum, capacity=sb.capacity,
                     n_iters=eng.og.lookup_iters, r=r, method=method,
-                    tile_b=sb.tile_b, axis=self.axis), n_arrays=1))
+                    tile_b=sb.tile_b, axis=self.axis,
+                    tile_repr=sb.tile_repr), n_arrays=1))
             total += float(fn(eng.csr, sb.nodes, key, p, c))
         for ss in sharded.splits:
             fn = eng.executables.get(
-                ("wsplit", ss.capacity, ss.tile_b, r, method, W,
-                 self.axis),
+                ("wsplit", ss.capacity, ss.tile_repr, ss.tile_b, r,
+                 method, W, self.axis),
                 lambda ss=ss: self._wrap(functools.partial(
                     _worker_split_sum, capacity=ss.capacity,
                     n_iters=eng.og.lookup_iters, r=r, method=method,
-                    tile_b=ss.tile_b, axis=self.axis), n_arrays=2))
+                    tile_b=ss.tile_b, axis=self.axis,
+                    tile_repr=ss.tile_repr), n_arrays=2))
             total += float(fn(eng.csr, ss.nodes, ss.pivots, key, p, c))
         return total, None

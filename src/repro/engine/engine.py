@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import mrc as mrc_mod
+from ..core.count import _pick_tile_b
 from ..core.csr import OrientedGraph, build_oriented
 from ..core.extract import DeviceCSR, to_device
 from ..core.plan import (Plan, balance_report, build_plan,
@@ -66,6 +67,7 @@ def graph_fingerprint(graph: Graph) -> str:
 class _ShardBucket:
     capacity: int
     tile_b: int
+    tile_repr: str            # "dense" f32 or "bits" packed uint32
     nodes: jax.Array          # (W, width) int32, −1 padding
 
 
@@ -73,6 +75,7 @@ class _ShardBucket:
 class _ShardSplit:
     capacity: int
     tile_b: int
+    tile_repr: str
     nodes: jax.Array          # (W, width) int32, −1 padding
     pivots: jax.Array         # (W, width) int32
 
@@ -98,11 +101,19 @@ class PlanEntry:
     _aux: dict = dataclasses.field(default_factory=dict)
 
     def sharded(self, og: OrientedGraph, n_workers: int,
-                tile_elem_budget: int) -> _ShardedPlan:
-        key = (n_workers, tile_elem_budget)
+                tile_elem_budget: int,
+                reprs: tuple = ()) -> _ShardedPlan:
+        """``reprs`` is a sorted tuple of (capacity, tile_repr,
+        batch_repr) triples — the per-bucket representation choice, part
+        of the cache key because it sets each bucket's tile batch
+        (exact packed tiles are 32× smaller, so their tile_b grows
+        accordingly; sampled packed tiles batch at dense sizes since
+        their transient mask is dense)."""
+        key = (n_workers, tile_elem_budget, reprs)
         if key not in self._sharded:
             self._sharded[key] = _stack_for_workers(
-                self.plan, self.splits, og, n_workers, tile_elem_budget)
+                self.plan, self.splits, og, n_workers, tile_elem_budget,
+                {cap: (tr, br) for cap, tr, br in reprs})
         return self._sharded[key]
 
     def balance(self, og: OrientedGraph, n_workers: int) -> dict:
@@ -125,11 +136,15 @@ class PlanEntry:
 
 
 def _stack_for_workers(plan: Plan, splits: Sequence[SplitPlan],
-                       og: OrientedGraph, W: int,
-                       tile_elem_budget: int) -> _ShardedPlan:
+                       og: OrientedGraph, W: int, tile_elem_budget: int,
+                       repr_of: Optional[dict] = None) -> _ShardedPlan:
     """LPT-partition the plan and stack each capacity class into one
     (W, width) array — identical static shapes on every device, so the
-    shard_map sees no stragglers by construction."""
+    shard_map sees no stragglers by construction. ``repr_of`` maps each
+    capacity to its (counting, byte-accounting) representation pair;
+    tile batches are byte-accounted per representation (exact packed
+    tiles batch up to 32× wider)."""
+    repr_of = repr_of or {}
     worker_plans = partition_for_workers(plan, og, W)
     buckets = []
     caps = sorted({b.capacity for wp in worker_plans for b in wp.buckets})
@@ -140,13 +155,14 @@ def _stack_for_workers(plan: Plan, splits: Sequence[SplitPlan],
             per_w.append(np.concatenate(arrs) if arrs
                          else np.zeros(0, np.int32))
         width = max(len(a) for a in per_w)
-        tile_b = max(8, min(width, tile_elem_budget // (cap * cap)))
-        tile_b += (-tile_b) % 8
+        repr_, batch_repr = repr_of.get(cap, ("dense", "dense"))
+        tile_b = _pick_tile_b(width, cap, tile_elem_budget, batch_repr)
         width += (-width) % tile_b
         stacked = np.full((W, width), -1, np.int32)
         for i, a in enumerate(per_w):
             stacked[i, :len(a)] = a
         buckets.append(_ShardBucket(capacity=cap, tile_b=tile_b,
+                                    tile_repr=repr_,
                                     nodes=jnp.asarray(stacked)))
     split_stacks = []
     for sp in splits:
@@ -155,8 +171,9 @@ def _stack_for_workers(plan: Plan, splits: Sequence[SplitPlan],
         units = np.concatenate(
             [units, np.tile([[-1, 0]], (pad, 1)).astype(np.int32)])
         per = len(units) // W
-        tile_b = max(8, min(per, tile_elem_budget // (sp.capacity ** 2)))
-        tile_b += (-tile_b) % 8
+        repr_, batch_repr = repr_of.get(sp.capacity, ("dense", "dense"))
+        tile_b = _pick_tile_b(per, sp.capacity, tile_elem_budget,
+                              batch_repr)
         per += (-per) % tile_b
         stacked_n = np.full((W, per), -1, np.int32)
         stacked_p = np.zeros((W, per), np.int32)
@@ -165,6 +182,7 @@ def _stack_for_workers(plan: Plan, splits: Sequence[SplitPlan],
             w, j = i % W, i // W
             stacked_n[w, j], stacked_p[w, j] = units[i]
         split_stacks.append(_ShardSplit(capacity=sp.capacity, tile_b=tile_b,
+                                        tile_repr=repr_,
                                         nodes=jnp.asarray(stacked_n),
                                         pivots=jnp.asarray(stacked_p)))
     return _ShardedPlan(buckets=buckets, splits=split_stacks)

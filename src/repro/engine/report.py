@@ -16,6 +16,7 @@ from ..core import mrc as mrc_mod
 METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "auto")
 BACKENDS = ("local", "pallas", "shard_map")
 ADAPTIVE_METHODS = ("auto", "edge", "color")   # may carry a rel_error target
+TILE_ENGINES = ("auto", "dense", "bitset")     # tile representation choice
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,6 +26,13 @@ class CountRequest:
     ``backend=None`` uses the engine's default; any request may override
     it, so one session can serve e.g. exact shard_map sweeps and quick
     local sampled probes side by side.
+
+    ``engine`` picks the tile *representation* (orthogonal to the
+    backend): ``"dense"`` is the f32 adjacency + matmul-pivot path,
+    ``"bitset"`` the packed uint32 + AND/popcount path (32× smaller
+    tiles, bit-exact counts), and ``"auto"`` (default) lets a per-bucket
+    bytes-based cost model choose — see
+    :func:`repro.core.count.pick_tile_repr` and ``docs/kernels.md``.
 
     Accuracy-targeted queries: ``method="auto"`` (or ``"edge"``/``"color"``
     with ``rel_error`` set) hands the query to the adaptive controller in
@@ -40,6 +48,7 @@ class CountRequest:
     colors: int = 10                     # SIC_k color count c
     seed: int = 0
     backend: Optional[str] = None        # None → engine default
+    engine: str = "auto"                 # tile repr: auto | dense | bitset
     return_per_node: bool = False        # local/pallas backends only
     split_threshold: Optional[int] = None  # §6 split round for |Γ⁺|>thr
     max_capacity: Optional[int] = None   # clamp the planner's classes
@@ -55,6 +64,9 @@ class CountRequest:
             raise ValueError("NI++ is a triangle-counting baseline (k=3)")
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
+        if self.engine not in TILE_ENGINES:
+            raise ValueError(f"unknown tile engine {self.engine!r}; "
+                             f"one of {TILE_ENGINES}")
         if not 0.0 < self.confidence < 1.0:
             raise ValueError(f"confidence must be in (0, 1), "
                              f"got {self.confidence}")
@@ -116,7 +128,7 @@ class CountRequest:
             p, colors, seed = self.p, self.colors, self.seed
             target = None
         return (self.k, self.method, p, colors, seed, backend,
-                self.return_per_node, self.split_threshold,
+                self.engine, self.return_per_node, self.split_threshold,
                 self.max_capacity, target)
 
 

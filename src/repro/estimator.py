@@ -69,8 +69,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .core.count import (_count_tile, _subset_tile, _tile_batches,
-                         dag_count_flops)
+from .core.count import (_subset_tile, _tile_batches, dag_count_flops,
+                         pick_tile_repr, subset_unit_bytes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,10 +168,16 @@ class _Certificates:
             edges[self.stochastic], r)
 
 
-def _certificates(eng, backend, entry, r: int) -> _Certificates:
+def _certificates(eng, backend, entry, r: int,
+                  choice: str = "auto") -> _Certificates:
     """Compute (once per plan entry per backend kind) each unit's
     out-neighborhood edge count via the exact r=2 tile — one extraction
-    pass, no counting recursion — and derive the certificates."""
+    pass, no counting recursion — and derive the certificates.
+
+    ``choice`` is the request's forced tile representation; the cached
+    certificate *values* are representation-independent (both paths are
+    bit-exact), so the cache key deliberately omits it."""
+    from .engine.backends import tile_executable
     kind = backend.kind
     cache = entry._aux.setdefault("certificates", {})
     cert = cache.get((kind, r))
@@ -181,12 +187,13 @@ def _certificates(eng, backend, entry, r: int) -> _Certificates:
     edges = np.zeros(n, np.float64)
     in_plan = np.zeros(n, bool)
     for b in entry.plan.buckets:
-        fn = eng.executables.get(
-            ("tile", kind, b.capacity, 2, "exact"),
-            lambda cap=b.capacity: functools.partial(
-                _count_tile, capacity=cap, n_iters=eng.og.lookup_iters,
-                r=2, method="exact", engine=kind))
-        for tile in _tile_batches(b.nodes, b.capacity, backend.budget):
+        # r=2 is a pure popcount — the packed representation always wins
+        # (unless the request forces dense)
+        repr_ = pick_tile_repr(r=2, capacity=b.capacity, choice=choice,
+                               elem_budget=backend.budget)
+        fn = tile_executable(eng, kind, repr_, b.capacity, 2, "exact")
+        for tile in _tile_batches(b.nodes, b.capacity, backend.budget,
+                                  repr_):
             vals = np.asarray(jax.block_until_ready(
                 fn(eng.csr, jnp.asarray(tile), jax.random.PRNGKey(0),
                    p=1.0, c=1)), np.float64)
@@ -215,11 +222,12 @@ class _SubsetLever:
     name = "subset"
 
     def __init__(self, eng, backend, entry, r: int, cert: _Certificates,
-                 policy: EstimatorPolicy) -> None:
+                 policy: EstimatorPolicy, choice: str = "auto") -> None:
         self.eng, self.backend, self.entry, self.r = eng, backend, entry, r
         self.kind = backend.kind
         self.cert = cert
         self.policy = policy
+        self.choice = choice          # request-forced tile representation
         deg = eng.og.out_deg
         self.dmax = max((int(deg[b.nodes[b.nodes >= 0]].max())
                          for b in entry.plan.buckets if b.n_real), default=0)
@@ -314,6 +322,7 @@ class _SubsetLever:
                    for b in self.entry.plan.buckets)
 
     def replicate(self, S: int, key: jax.Array) -> np.ndarray:
+        from .engine.backends import tile_executable
         eng, r, kind = self.eng, self.r, self.kind
         exact_parts = self.entry._aux.setdefault("subset_exact", {})
         per_node = np.zeros(eng.og.n, np.float64)
@@ -322,14 +331,13 @@ class _SubsetLever:
                 part = exact_parts.get((kind, r, bi))
                 if part is None:
                     part = np.zeros(eng.og.n, np.float64)
-                    fn = eng.executables.get(
-                        ("tile", kind, b.capacity, r, "exact"),
-                        lambda cap=b.capacity: functools.partial(
-                            _count_tile, capacity=cap,
-                            n_iters=eng.og.lookup_iters, r=r,
-                            method="exact", engine=kind))
+                    repr_ = pick_tile_repr(r=r, capacity=b.capacity,
+                                           choice=self.choice,
+                                           elem_budget=self.backend.budget)
+                    fn = tile_executable(eng, kind, repr_, b.capacity, r,
+                                         "exact")
                     for tile in _tile_batches(b.nodes, b.capacity,
-                                              self.backend.budget):
+                                              self.backend.budget, repr_):
                         _accumulate(part, fn(eng.csr, jnp.asarray(tile),
                                              key, p=1.0, c=1), tile)
                     exact_parts[(kind, r, bi)] = part
@@ -339,13 +347,19 @@ class _SubsetLever:
                 nodes = self._stoch_nodes[bi]
                 if not len(nodes):
                     continue
+                repr_ = "dense" if self.choice == "dense" else "bits"
                 fn = eng.executables.get(
-                    ("subset", kind, b.capacity, S, r),
-                    lambda cap=b.capacity, S=S: functools.partial(
+                    ("subset", kind, repr_, b.capacity, S, r),
+                    lambda cap=b.capacity, S=S, repr_=repr_:
+                    functools.partial(
                         _subset_tile, capacity=cap, kept=S,
-                        n_iters=eng.og.lookup_iters, r=r, engine=kind))
-                for tile in _tile_batches(nodes, b.capacity,
-                                          self.backend.budget):
+                        n_iters=eng.og.lookup_iters, r=r, engine=kind,
+                        tile_repr=repr_))
+                # subset units never materialize D² — account the (S, S)
+                # compacted tile + capacity-wide gather, not capacity²
+                for tile in _tile_batches(
+                        nodes, b.capacity, self.backend.budget,
+                        unit_bytes=subset_unit_bytes(b.capacity, S)):
                     _accumulate(per_node,
                                 fn(eng.csr, jnp.asarray(tile), key), tile)
         return per_node
@@ -451,9 +465,10 @@ def run_adaptive(eng, backend, entry, req,
     conf = req.confidence
     r = req.k - 1
     L = math.log(3.0 / max(1.0 - conf, 1e-12))
-    cert = _certificates(eng, backend, entry, r)
+    cert = _certificates(eng, backend, entry, r, req.engine)
     if req.method == "auto":
-        lever = _SubsetLever(eng, backend, entry, r, cert, policy)
+        lever = _SubsetLever(eng, backend, entry, r, cert, policy,
+                             req.engine)
     else:
         lever = _MaskLever(eng, backend, entry, req, cert, policy)
     exact_work = lever.exact_work()

@@ -1,4 +1,5 @@
-from .ops import triangles_bitset
-from .ref import pack_rows, triangles_bitset_ref
+from .ops import dag_count_bits_pallas, triangles_bitset
+from .ref import pack_rows, triangles_bitset_ref, unpack_rows
 
-__all__ = ["triangles_bitset", "pack_rows", "triangles_bitset_ref"]
+__all__ = ["dag_count_bits_pallas", "pack_rows", "triangles_bitset",
+           "triangles_bitset_ref", "unpack_rows"]

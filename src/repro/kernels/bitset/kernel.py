@@ -1,16 +1,21 @@
-"""Pallas TPU kernel: bitset AND+popcount triangle counting (NI++ path).
+"""Pallas TPU kernel: packed AND+popcount clique counting, every r.
 
-The k=3 fast path of the engine — and the NI++ baseline's inner loop
-([34]) — reduces to: for every oriented edge (i, j), |Γ⁺(i) ∩ Γ⁺(j)|.
-With rows bit-packed into uint32 lanes this is pure VPU integer work
-(AND + population_count), 32 adjacency entries per lane op, no MXU
-involvement — the right trade for k=3 where the matmul identity wastes
-multiplies on a 0/1 matrix.
+The round-3 reducer is pure 0/1 adjacency work, so the packed tile
+pipeline hands this kernel (TB, D, W) uint32 row tiles (W = ⌈D/32⌉) and
+it evaluates the pivot recursion without ever unpacking the matrix:
 
-Layout: (TB, D, W) uint32 row tiles in VMEM, W = D/32 words. Per grid
-step the kernel loops rows i, ANDs row i against all rows, popcounts,
-and dots the result with the *unpacked* indicator of row i (recovered
-in-register from the packed row, no second input needed).
+  r=2 :  Σ popcount(rows)                       — the packed edge count
+  r=3 :  Σ_i Σ_j A[i,j]·popcount(row_i & row_j) — AND+popcount per edge
+  r≥4 :  pivot v: rows AND row_v, select rows where bit i of row_v is
+         set (recovered in-register — no second input), recurse
+
+Everything is VPU integer work, 32 adjacency entries per lane op, no
+MXU involvement — the right trade for small r (the matmul identity
+wastes multiplies on a 0/1 matrix) and for huge capacities (the packed
+tile is 32× smaller in VMEM, so the batch stays wide).
+
+The kernel runs under ``interpret=True`` on CPU (this container) and
+compiles to Mosaic on real TPUs.
 """
 from __future__ import annotations
 
@@ -29,37 +34,60 @@ def _unpack_row(row_bits: jax.Array, D: int) -> jax.Array:
     return bits.reshape(W * 32)[:D].astype(jnp.float32)
 
 
-def _bitset_kernel(bits_ref, out_ref, *, D: int):
-    tb, _, W = bits_ref.shape
-
-    def per_mat(b, _):
-        mat = bits_ref[b]  # (D, W) uint32
-
-        def per_row(i, acc):
+def _count_one_bits(mat: jax.Array, r: int, D: int) -> jax.Array:
+    """r-clique count of one (D, W) packed adjacency."""
+    if r == 2:
+        return jnp.sum(jax.lax.population_count(mat).astype(jnp.float32))
+    if r == 3:
+        def edge_level(i, acc):
             row = jax.lax.dynamic_slice_in_dim(mat, i, 1, axis=0)  # (1, W)
             inter = jnp.bitwise_and(mat, row)                      # (D, W)
-            pc = jax.lax.population_count(inter)
-            common = jnp.sum(pc.astype(jnp.float32), axis=1)       # (D,)
-            ind = _unpack_row(row[0], D)                           # (D,)
-            return acc + jnp.sum(common * ind)
+            common = jnp.sum(jax.lax.population_count(inter)
+                             .astype(jnp.float32), axis=1)         # (D,)
+            return acc + jnp.sum(common * _unpack_row(row[0], D))
 
-        out_ref[b] = jax.lax.fori_loop(0, D, per_row, jnp.float32(0.0))
+        return jax.lax.fori_loop(0, D, edge_level, jnp.float32(0.0))
+
+    def pivot(v, acc):
+        row = jax.lax.dynamic_slice_in_dim(mat, v, 1, axis=0)      # (1, W)
+        colmask = jnp.bitwise_and(mat, row)                        # (D, W)
+        sel = _unpack_row(row[0], D) > 0.0                         # (D,)
+        bv = jnp.where(sel[:, None], colmask, jnp.uint32(0))
+        return acc + _count_one_bits(bv, r - 1, D)
+
+    return jax.lax.fori_loop(0, D, pivot, jnp.float32(0.0))
+
+
+def _bits_kernel(bits_ref, out_ref, *, r: int, D: int):
+    tb = bits_ref.shape[0]
+
+    def per_mat(b, _):
+        out_ref[b] = _count_one_bits(bits_ref[b], r, D)
         return 0
 
     jax.lax.fori_loop(0, tb, per_mat, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
-def triangles_bitset_kernel(bits: jax.Array, tile_b: int,
-                            interpret: bool = False) -> jax.Array:
-    """bits: (B, D, W) uint32 packed rows → (B,) f32 triangle counts."""
+@functools.partial(jax.jit, static_argnames=("r", "tile_b", "interpret"))
+def count_bits_kernel(bits: jax.Array, r: int, tile_b: int,
+                      interpret: bool = False) -> jax.Array:
+    """bits: (B, D, W) uint32 packed rows → (B,) f32 r-clique counts.
+
+    B must be a multiple of tile_b (ops.py pads).
+    """
     B, D, W = bits.shape
-    assert B % tile_b == 0
+    assert B % tile_b == 0, (B, tile_b)
     return pl.pallas_call(
-        functools.partial(_bitset_kernel, D=D),
+        functools.partial(_bits_kernel, r=r, D=D),
         grid=(B // tile_b,),
         in_specs=[pl.BlockSpec((tile_b, D, W), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
         interpret=interpret,
     )(bits)
+
+
+def triangles_bitset_kernel(bits: jax.Array, tile_b: int,
+                            interpret: bool = False) -> jax.Array:
+    """Back-compat alias: the original triangles-only entry point."""
+    return count_bits_kernel(bits, 3, tile_b, interpret=interpret)

@@ -1,28 +1,49 @@
-"""Jitted wrapper for the bitset triangle kernel."""
+"""Jitted public wrappers for the packed bitset counting kernel.
+
+Chooses the batch tile so the VMEM working set fits (packed tiles are
+D·W·4 = D²/8 bytes per matrix — 32× smaller than the dense f32 kernel's,
+so the batch stays wide even at D = 4096), pads the batch, and falls
+back to interpret mode off-TPU.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from .kernel import triangles_bitset_kernel
+from ...core.extract import packed_words
+from .kernel import count_bits_kernel
 from .ref import pack_rows
 
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
 
 
-def triangles_bitset(A: jax.Array) -> jax.Array:
-    """(B, D, D) 0/1 f32 adjacencies → (B,) f32 triangle counts."""
-    B, D, _ = A.shape
-    bits = pack_rows(A)
-    W = bits.shape[-1]
-    per_mat = D * W * 4
-    tb = max(1, min(256, VMEM_BUDGET_BYTES // max(per_mat, 1)))
+def pick_tile_bits(D: int) -> int:
+    per_mat = D * packed_words(D) * 4
+    tb = max(1, (VMEM_BUDGET_BYTES - 2 * per_mat) // max(per_mat, 1))
+    # power-of-two, capped: huge tiles don't help once the VPU is busy
     t = 1
-    while t * 2 <= tb:
+    while t * 2 <= min(tb, 256):
         t *= 2
-    pad = (-B) % t
+    return t
+
+
+def dag_count_bits_pallas(bits: jax.Array, r: int) -> jax.Array:
+    """(B, D, W) uint32 packed adjacencies → (B,) f32 r-clique counts."""
+    B, D, _ = bits.shape
+    interpret = jax.default_backend() != "tpu"
+    tb = pick_tile_bits(D)
+    pad = (-B) % tb
     if pad:
         bits = jnp.concatenate(
-            [bits, jnp.zeros((pad, D, W), bits.dtype)], axis=0)
-    interpret = jax.default_backend() != "tpu"
-    return triangles_bitset_kernel(bits, t, interpret=interpret)[:B]
+            [bits, jnp.zeros((pad,) + bits.shape[1:], bits.dtype)], axis=0)
+    return count_bits_kernel(bits, r, tb, interpret=interpret)[:B]
+
+
+def triangles_bitset(A: jax.Array) -> jax.Array:
+    """(B, D, D) 0/1 f32 adjacencies → (B,) f32 triangle counts (the
+    original triangles-only entry point, now a pack + r=3 call).
+
+    Analytic op/byte bookkeeping for this kernel lives with the shared
+    identity: ``repro.core.count.dag_count_bits_ops`` /
+    ``tile_unit_bytes`` — no duplicate copies here."""
+    return dag_count_bits_pallas(pack_rows(A), 3)

@@ -1,4 +1,9 @@
-"""Pure-jnp oracle for the bitset triangle kernel."""
+"""Pure-jnp oracle for the bitset kernel.
+
+``pack_rows``/``unpack_rows`` here are written independently of the
+engine's :func:`repro.core.extract.pack_adjacency` on purpose, so the
+round-trip and conformance tests compare two implementations.
+"""
 from __future__ import annotations
 
 import jax
@@ -16,6 +21,14 @@ def pack_rows(A: jax.Array) -> jax.Array:
     shifts = jnp.arange(32, dtype=jnp.uint32)
     return jnp.sum(a << shifts[None, None, None, :], axis=-1,
                    dtype=jnp.uint32)
+
+
+def unpack_rows(bits: jax.Array, D: int) -> jax.Array:
+    """Inverse of :func:`pack_rows`: (B, D, W) uint32 → (B, D, D) f32."""
+    B, D_rows, W = bits.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    a = (bits[:, :, :, None] >> shifts) & jnp.uint32(1)
+    return a.reshape(B, D_rows, W * 32)[:, :, :D].astype(jnp.float32)
 
 
 def triangles_bitset_ref(A: jax.Array) -> jax.Array:

@@ -136,9 +136,12 @@ def main() -> int:
                     choices=["local", "pallas", "shard_map"],
                     help="engine backend (default local; --distributed/"
                          "--devices imply shard_map)")
-    ap.add_argument("--engine", default="jnp", choices=["jnp", "pallas"],
-                    help="deprecated alias: --engine pallas ≡ "
-                         "--backend pallas")
+    ap.add_argument("--engine", default="jnp",
+                    choices=["jnp", "pallas", "bitset", "dense"],
+                    help="--engine pallas ≡ --backend pallas (deprecated "
+                         "alias); --engine bitset/dense force the packed "
+                         "uint32 / dense f32 tile representation (default: "
+                         "per-bucket auto-pick)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--split-threshold", type=int, default=0)
     ap.add_argument("--distributed", action="store_true")
@@ -183,8 +186,11 @@ def main() -> int:
     if args.per_node and backend == "shard_map":
         print("warning: --per-node is a local/pallas feature; ignored "
               "on the shard_map backend", file=sys.stderr)
+    tile_engine = (args.engine if args.engine in ("bitset", "dense")
+                   else "auto")
     reqs = [CountRequest(
         k=k, method=m, p=args.p, colors=args.colors, seed=args.seed,
+        engine=tile_engine,
         # the accuracy target rides only the methods that can adapt, so
         # e.g. --method auto,exact --rel-error 0.05 compares the
         # controller against the exact baseline in one sweep

@@ -1,0 +1,255 @@
+"""Packed-bitset tile pipeline: conformance, round-trip, budgets.
+
+The packed uint32 representation must be *bit-exact* against the
+brute-force oracle on the whole conformance corpus (k ∈ 3..6, local and
+shard_map backends), `pack_rows`/`unpack_rows` must round-trip any 0/1
+adjacency, the byte-accounted tile batching must never exceed the
+budget (the seed's `max(8, …)` floor shipped 512 MiB tiles at D=4096),
+and `engine="bitset"` must reproduce the golden fixture.
+"""
+import json
+import math
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import clique_count_bruteforce
+from repro.core.count import (_pick_tile_b, _tile_batches, dag_count,
+                              dag_count_bits, pick_tile_repr,
+                              subset_unit_bytes, tile_batch_repr,
+                              tile_unit_bytes)
+from repro.core.extract import pack_adjacency
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import conformance_corpus
+from repro.kernels.bitset import (dag_count_bits_pallas, pack_rows,
+                                  unpack_rows)
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "golden_counts.json")
+
+# the large planted graph is oracle-tractable only up to k=5 (its 40-clique
+# alone holds C(40,6) ≈ 3.8M 6-cliques); golden pins it the same way
+BIG = "planted_1200_12_16_40"
+KS = (3, 4, 5, 6)
+
+
+def _random_dag(rng, B, D, density):
+    return np.triu((rng.random((B, D, D)) < density), 1).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return conformance_corpus()
+
+
+# --------------------------------------------------------------------------
+# kernel-level: packed identities vs the dense reference
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("D", [8, 40, 64, 128])
+@pytest.mark.parametrize("r", [2, 3, 4, 5])
+def test_dag_count_bits_matches_dense(D, r):
+    rng = np.random.default_rng(D * 10 + r)
+    A = jnp.asarray(_random_dag(rng, 5, D, 0.3))
+    bits = pack_adjacency(A)
+    want = np.asarray(dag_count(A, r))
+    np.testing.assert_array_equal(np.asarray(dag_count_bits(bits, r)),
+                                  want)
+    np.testing.assert_array_equal(np.asarray(dag_count_bits_pallas(bits,
+                                                                   r)),
+                                  want)
+
+
+@pytest.mark.parametrize("r", [3, 4, 5, 6])
+def test_bits_complete_graph_closed_form(r):
+    D = 12
+    A = jnp.asarray(np.triu(np.ones((2, D, D), np.float32), 1))
+    got = np.asarray(dag_count_bits(pack_adjacency(A), r))
+    assert got[0] == got[1] == math.comb(D, r)
+
+
+# --------------------------------------------------------------------------
+# engine-level: bitset engine vs the brute-force oracle, all backends
+# --------------------------------------------------------------------------
+
+def test_bitset_engine_matches_bruteforce(corpus):
+    for g in corpus:
+        eng = CliqueEngine(g)
+        for k in KS:
+            if g.name == BIG and k > 5:
+                continue
+            expected = clique_count_bruteforce(g, k)
+            for backend in ("local", "shard_map"):
+                rep = eng.submit(CountRequest(k=k, backend=backend,
+                                              engine="bitset"))
+                assert rep.count == expected, (g.name, k, backend)
+
+
+def test_bitset_per_node_bit_for_bit(corpus):
+    """Packed per-node attributions must equal the oracle's ≺-minimum
+    responsibility assignment exactly (local + pallas backends)."""
+    for g in corpus[:5]:
+        eng = CliqueEngine(g)
+        _, per_node = clique_count_bruteforce(g, 4, return_per_node=True)
+        for backend in ("local", "pallas"):
+            rep = eng.submit(CountRequest(k=4, backend=backend,
+                                          engine="bitset",
+                                          return_per_node=True))
+            got = np.round(rep.per_node).astype(np.int64)
+            np.testing.assert_array_equal(got, per_node,
+                                          err_msg=f"{g.name} {backend}")
+
+
+def test_bitset_split_round_conformance(corpus):
+    for g in corpus[:5]:
+        eng = CliqueEngine(g)
+        for k in (3, 4):
+            expected = clique_count_bruteforce(g, k)
+            for backend in ("local", "shard_map"):
+                rep = eng.submit(CountRequest(k=k, backend=backend,
+                                              engine="bitset",
+                                              split_threshold=8))
+                assert rep.count == expected, (g.name, k, backend)
+
+
+def test_sampled_estimates_identical_across_reprs(corpus):
+    """Masks are packed before counting, so a sampled estimate is the
+    same number on the dense and packed paths (same seed, same mask)."""
+    eng = CliqueEngine(corpus[1])
+    for method, kw in [("edge", {"p": 0.5}), ("color", {"colors": 3})]:
+        ests = {e: eng.submit(CountRequest(k=4, method=method, seed=7,
+                                           engine=e, **kw)).estimate
+                for e in ("dense", "bitset")}
+        assert round(ests["dense"], 6) == round(ests["bitset"], 6), ests
+
+
+def test_bitset_engine_matches_golden():
+    with open(FIXTURE) as f:
+        golden = json.load(f)
+    for g in conformance_corpus():
+        eng = CliqueEngine(g)
+        for k_str, expected in golden[g.name]["counts"].items():
+            rep = eng.submit(CountRequest(k=int(k_str), engine="bitset"))
+            assert rep.count == expected, (g.name, k_str)
+
+
+def test_nipp_rides_the_bitset_path(corpus):
+    """method="ni++" (k=3) must resolve to the packed representation it
+    was written for, report 2-round MRC stats, and stay exact."""
+    assert pick_tile_repr(r=2, capacity=64, method="ni++",
+                          choice="auto") == "bits"
+    g = corpus[3]
+    eng = CliqueEngine(g)
+    rep = eng.submit(CountRequest(k=3, method="ni++"))
+    assert rep.count == clique_count_bruteforce(g, 3)
+    assert rep.mrc.rounds == 2
+    assert any(key[0] == "tile" and key[2] == "bits"
+               for key in eng.executables._fns), \
+        "ni++ did not touch a packed tile executable"
+
+
+# --------------------------------------------------------------------------
+# representation cost model + byte-accounted tile batching
+# --------------------------------------------------------------------------
+
+def test_tile_unit_bytes_ratio():
+    for D in (32, 128, 256, 1024, 4096):
+        assert tile_unit_bytes(D, "dense") == 4 * D * D
+        assert tile_unit_bytes(D, "dense") == 32 * tile_unit_bytes(D,
+                                                                   "bits")
+
+
+def test_pick_tile_repr_policy():
+    budget = 1 << 23
+    # k=3 (r=2) and ni++ are popcount work at any capacity
+    assert pick_tile_repr(r=2, capacity=8, elem_budget=budget) == "bits"
+    # mid-size r>=3 buckets keep the MXU matmul identity
+    assert pick_tile_repr(r=3, capacity=256, elem_budget=budget) == "dense"
+    assert pick_tile_repr(r=4, capacity=1024, elem_budget=budget) == "dense"
+    # huge-capacity buckets: a minimal dense batch blows the byte budget
+    assert pick_tile_repr(r=4, capacity=2048, elem_budget=budget) == "bits"
+    assert pick_tile_repr(r=4, capacity=4096, elem_budget=budget) == "bits"
+    # forced choices override the model
+    assert pick_tile_repr(r=4, capacity=64, choice="bitset") == "bits"
+    assert pick_tile_repr(r=2, capacity=64, choice="dense") == "dense"
+
+
+def test_tile_batches_respect_byte_budget():
+    """The seed's `B = max(8, budget // D²)` exceeded the budget for
+    D ≥ 2048 (8 units at D=4096 is a 512 MiB f32 tile). Pin the fixed
+    sizes: bytes per tile ≤ 4·elem_budget for every representation."""
+    budget = 1 << 23                      # f32 elements → 32 MiB
+    expect = {("dense", 1024): 8, ("dense", 2048): 2, ("dense", 4096): 1,
+              ("bits", 1024): 256, ("bits", 2048): 64, ("bits", 4096): 16}
+    nodes = np.arange(4096, dtype=np.int32)
+    for (repr_, D), want_b in expect.items():
+        got_b = _pick_tile_b(len(nodes), D, budget, repr_)
+        assert got_b == want_b, (repr_, D, got_b, want_b)
+        tiles = list(_tile_batches(nodes, D, budget, repr_))
+        assert all(len(t) == want_b for t in tiles)
+        if want_b > 1:  # a single unit is the floor — can't split further
+            assert want_b * tile_unit_bytes(D, repr_) <= 4 * budget
+        assert sum((t >= 0).sum() for t in tiles) == len(nodes)
+
+
+def test_sampled_packed_tiles_batch_at_dense_sizes():
+    """Sampled methods materialize a transient dense mask before
+    packing, so their packed tiles must not claim the 32× batch."""
+    assert tile_batch_repr("bits", "exact") == "bits"
+    assert tile_batch_repr("dense", "exact") == "dense"
+    for method in ("edge", "color", "color_smooth"):
+        assert tile_batch_repr("bits", method) == "dense"
+        assert tile_batch_repr("dense", method) == "dense"
+
+
+def test_subset_units_not_accounted_at_full_capacity():
+    """The subset lever's units build an (S, S) compacted tile, not a
+    D² one — a capacity-4096 bucket must still batch many units."""
+    budget = 1 << 23
+    b = _pick_tile_b(10_000, 4096, budget,
+                     unit_bytes=subset_unit_bytes(4096, 8))
+    assert b >= 8, b
+    assert b * subset_unit_bytes(4096, 8) <= 4 * budget
+
+
+def test_tile_batches_small_caps_unchanged():
+    """Buckets whose dense tiles already fit keep the seed's sizes (no
+    recompile churn for existing sessions)."""
+    nodes = np.arange(100, dtype=np.int32)
+    assert _pick_tile_b(len(nodes), 512, 1 << 23, "dense") == 32
+    assert _pick_tile_b(len(nodes), 1024, 1 << 23, "dense") == 8
+
+
+# --------------------------------------------------------------------------
+# pack/unpack round-trip (hypothesis)
+# --------------------------------------------------------------------------
+
+def test_pack_rows_agrees_with_core_packer():
+    rng = np.random.default_rng(3)
+    A = jnp.asarray(_random_dag(rng, 2, 40, 0.5))   # D=40: ragged word
+    np.testing.assert_array_equal(np.asarray(pack_rows(A)),
+                                  np.asarray(pack_adjacency(A)))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # pragma: no cover
+    given = None
+
+
+if given is not None:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), B=st.integers(1, 4),
+           D=st.integers(1, 70), density=st.floats(0.0, 1.0))
+    def test_pack_unpack_roundtrip(seed, B, D, density):
+        rng = np.random.default_rng(seed)
+        A = (rng.random((B, D, D)) < density).astype(np.float32)  # any 0/1
+        Aj = jnp.asarray(A)
+        for packer in (pack_rows, pack_adjacency):
+            bits = packer(Aj)
+            assert bits.shape == (B, D, (D + 31) // 32)
+            assert bits.dtype == jnp.uint32
+            np.testing.assert_array_equal(np.asarray(unpack_rows(bits, D)),
+                                          A)
