@@ -15,7 +15,7 @@ import subprocess
 import sys
 
 from repro.core import build_oriented, build_plan
-from repro.core.plan import balance_report, unit_cost
+from repro.core.plan import balance_report
 from repro.graphs import rmat
 
 from .common import emit

@@ -28,8 +28,8 @@ print(f"q_4 = {res.count} on {res.n_workers} workers "
 # --- §6 split round: cap the heaviest reducer -----------------------------
 res_split = eng.submit(CountRequest(k=4, split_threshold=64))
 assert res_split.count == res.count
-print(f"split round (threshold 64): same count, "
-      f"heavy subgraphs rerouted as (node, pivot) units")
+print("split round (threshold 64): same count, "
+      "heavy subgraphs rerouted as (node, pivot) units")
 
 # --- sampled, bit-identical under any worker count ------------------------
 e = eng.submit(CountRequest(k=5, method="color_smooth", colors=8, seed=5))

@@ -8,6 +8,7 @@ on this 1-core CPU container expect ~1-2 steps/s at seq 256.)
 """
 import argparse
 import dataclasses
+import json
 import tempfile
 
 import jax
@@ -47,8 +48,7 @@ if start:
     print(f"resuming from checkpoint at step {start}")
 params2, opt2, end = tr.fit(params2, opt2, args.steps, start_step=start)
 
-import json
-losses = [json.loads(l)["loss"] for l in open(tr.metrics_path)]
+losses = [json.loads(line)["loss"] for line in open(tr.metrics_path)]
 print(f"steps {start}..{end}: loss {losses[0]:.3f} → {losses[-1]:.3f}")
 print(f"checkpoints + metrics under {workdir}")
 assert losses[-1] < losses[0], "loss should decrease"

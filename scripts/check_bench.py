@@ -1,0 +1,149 @@
+#!/usr/bin/env python
+"""Kernel-perf regression gate over the BENCH_kernels.json trajectory.
+
+``benchmarks/kernels_bench.py`` appends one record per run (rows keyed
+by (D, r) with wall times and per-tile bytes for the dense f32 and
+packed uint32 paths). This script turns that log into a gate:
+
+  PYTHONPATH=src python scripts/check_bench.py --run     # nightly CI
+  PYTHONPATH=src python scripts/check_bench.py           # compare last 2
+
+``--run`` executes a fresh benchmark (appending the new record), then
+compares it against the latest *prior* record. Failure conditions, per
+matching (D, r) row:
+
+- wall-clock regression: ``dense_us`` or ``bits_us`` grew by more than
+  ``--ratio`` (default 1.5×) — loose enough to ride out shared-runner
+  noise, tight enough to catch an accidentally serialized kernel;
+- per-tile-byte regression: ``dense_tile_bytes / B`` or
+  ``bits_tile_bytes / B`` grew *at all*. Tile bytes are analytic, not
+  measured, so any increase is a real representation regression (e.g.
+  losing the 32× packed shrink), never noise.
+
+Wall-clock is only comparable between runs of the same provenance: each
+record carries ``(backend, host)`` (``host`` is "ci" under ``$CI``,
+else "dev"), and a provenance change skips the wall gate for that one
+comparison — the byte gate always applies. The nightly workflow
+persists the trajectory across runs via ``actions/cache``, so after the
+first nightly bootstraps a ci-provenance baseline, every later nightly
+compares ci-vs-ci and the wall gate is armed; it never compares a
+GitHub runner against the committed dev-container record.
+
+Rows present only on one side are reported but don't fail the gate
+(benchmark coverage may grow); a trajectory with fewer than two records
+passes vacuously so the first CI run on a fresh fork bootstraps itself.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TRAJECTORY = os.path.join(REPO, "BENCH_kernels.json")
+
+
+def row_key(row: dict) -> tuple:
+    return (row["D"], row["r"])
+
+
+def per_unit(row: dict, field: str) -> float:
+    """Per-unit tile bytes: the B chosen per run can legitimately vary
+    (budget tuning), so the gate compares bytes per work unit."""
+    return row[field] / max(row["B"], 1)
+
+
+def compare(prev: dict, new: dict, ratio: float) -> list:
+    """Return a list of human-readable regression strings."""
+    regressions = []
+    prev_rows = {row_key(r): r for r in prev["rows"]}
+    new_rows = {row_key(r): r for r in new["rows"]}
+    for key in sorted(prev_rows.keys() | new_rows.keys()):
+        if key not in new_rows:
+            print(f"  note: row {key} vanished from the new run")
+            continue
+        if key not in prev_rows:
+            print(f"  note: row {key} is new in this run")
+            continue
+        p, n = prev_rows[key], new_rows[key]
+        for field in ("dense_us", "bits_us"):
+            if n[field] > ratio * p[field]:
+                regressions.append(
+                    f"(D={key[0]}, r={key[1]}) {field}: "
+                    f"{p[field]:.0f}us -> {n[field]:.0f}us "
+                    f"({n[field] / p[field]:.2f}x > {ratio}x)")
+        for field in ("dense_tile_bytes", "bits_tile_bytes"):
+            pu_p, pu_n = per_unit(p, field), per_unit(n, field)
+            if pu_n > pu_p:
+                regressions.append(
+                    f"(D={key[0]}, r={key[1]}) {field}/unit: "
+                    f"{pu_p:.0f} -> {pu_n:.0f} bytes (any growth fails)")
+    return regressions
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--run", action="store_true",
+                    help="run benchmarks/kernels_bench.py first (appends "
+                         "a fresh record to the trajectory)")
+    ap.add_argument("--ratio", type=float, default=1.5,
+                    help="wall-clock regression threshold (default 1.5x)")
+    args = ap.parse_args()
+
+    if args.run:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
+            env.get("PYTHONPATH", "")
+        print("running benchmarks.kernels_bench ...", flush=True)
+        subprocess.run([sys.executable, "-m", "benchmarks.kernels_bench"],
+                       cwd=REPO, env=env, check=True)
+
+    if not os.path.exists(TRAJECTORY):
+        print(f"no trajectory at {TRAJECTORY}; run with --run first")
+        return 1
+    with open(TRAJECTORY) as f:
+        history = json.load(f)
+    if len(history) < 2:
+        print(f"only {len(history)} record(s) in the trajectory — "
+              "nothing to compare against; passing (bootstrap)")
+        return 0
+    prev, new = history[-2], history[-1]
+    same_machine = (prev.get("backend") == new.get("backend")
+                    and prev.get("host", "dev") == new.get("host", "dev"))
+    if not same_machine:
+        print(f"note: provenance changed "
+              f"({prev.get('host', 'dev')}/{prev.get('backend')!r} -> "
+              f"{new.get('host', 'dev')}/{new.get('backend')!r}); "
+              "wall-clock gate skipped (apples-to-oranges), per-tile "
+              "bytes still enforced. In CI the trajectory is persisted "
+              "via actions/cache, so the next nightly compares ci-vs-ci "
+              "and the wall gate re-arms.")
+    print(f"comparing run {new.get('ran_at')} against "
+          f"{prev.get('ran_at')} ({len(new['rows'])} rows)")
+    regressions = compare(prev, new,
+                          args.ratio if same_machine else float("inf"))
+    if regressions:
+        print("PERF REGRESSION:")
+        for r in regressions:
+            print(f"  - {r}")
+        if args.run:
+            # drop the regressed record so it can never become the next
+            # run's baseline: the gate must keep failing against the
+            # last *good* record until the regression is actually fixed,
+            # not alarm once and silently ratchet the baseline down.
+            # tmp + replace, like append_trajectory: a kill mid-write
+            # must not corrupt the whole history
+            tmp = TRAJECTORY + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(history[:-1], f, indent=1)
+            os.replace(tmp, TRAJECTORY)
+            print(f"regressed record dropped from {TRAJECTORY}; baseline "
+                  f"stays at {prev.get('ran_at')}")
+        return 1
+    print("perf gate ok: no wall-clock regression over "
+          f"{args.ratio}x, no per-tile-byte growth")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,13 +1,19 @@
 #!/usr/bin/env python
-"""Regenerate tests/fixtures/golden_counts.json — the checked-in exact
-clique counts for the conformance corpus.
+"""Regenerate — or drift-check — tests/fixtures/golden_counts.json, the
+checked-in exact clique counts for the conformance corpus.
 
-  PYTHONPATH=src python scripts/regen_golden.py
+  PYTHONPATH=src python scripts/regen_golden.py            # rewrite
+  PYTHONPATH=src python scripts/regen_golden.py --check    # CI guard
 
 Counts come from the brute-force oracle (never from the engine under
-test), so the fixture is an independent regression anchor: rerun this
-only when the corpus itself changes deliberately, and review the diff —
-a changed count means changed semantics, not a refresh.
+test), so the fixture is an independent regression anchor: rerun the
+writer only when the corpus itself changes deliberately, and review the
+diff — a changed count means changed semantics, not a refresh.
+
+``--check`` regenerates in memory and diffs against the checked-in
+fixture without touching it, exiting non-zero on any mismatch. CI runs
+it on every push/PR, so a corpus or oracle edit that silently shifts a
+count (or forgets to regenerate the fixture) fails before review.
 
 Coverage: k = 3..7 on the small corpus graphs (the deep-k regression —
 planted_32_6_7 pins nonzero q_6/q_7, the bipartite graph pins the
@@ -15,6 +21,7 @@ all-zero column); the large estimator-benchmark graph stops at k = 5,
 where both the oracle and the engine's exact path stay test-budget
 friendly (its q_6/q_7 work grows as D^{k-1} on 32-wide units).
 """
+import argparse
 import json
 import os
 import sys
@@ -35,15 +42,63 @@ def ks_for(n: int):
     return [k for k in KS if k <= 5 or n <= DEEP_K_MAX_NODES]
 
 
-def main() -> int:
-    golden = {}
-    for g in conformance_corpus():
-        golden[g.name] = {
+def compute_golden() -> dict:
+    return {
+        g.name: {
             "n": g.n,
             "m": g.m,
             "counts": {str(k): int(clique_count_bruteforce(g, k))
                        for k in ks_for(g.n)},
         }
+        for g in conformance_corpus()
+    }
+
+
+def check(golden: dict) -> int:
+    """Diff the freshly computed golden dict against the fixture."""
+    if not os.path.exists(OUT):
+        print(f"DRIFT: fixture {OUT} is missing; run "
+              f"scripts/regen_golden.py and commit it")
+        return 1
+    with open(OUT) as f:
+        pinned = json.load(f)
+    problems = []
+    for name in sorted(set(golden) | set(pinned)):
+        if name not in pinned:
+            problems.append(f"corpus graph {name!r} is not in the fixture")
+            continue
+        if name not in golden:
+            problems.append(f"fixture entry {name!r} is not in the corpus")
+            continue
+        for field in ("n", "m", "counts"):
+            got, want = golden[name][field], pinned[name][field]
+            if got != want:
+                problems.append(f"{name}.{field}: corpus says {got!r}, "
+                                f"fixture pins {want!r}")
+    if problems:
+        print(f"DRIFT between conformance_corpus() and {OUT}:")
+        for p in problems:
+            print(f"  - {p}")
+        print("If the corpus change is deliberate, regenerate with "
+              "`PYTHONPATH=src python scripts/regen_golden.py`, review "
+              "the diff, and commit the fixture.")
+        return 1
+    print(f"golden fixture is in sync ({len(golden)} graphs, "
+          f"{sum(len(e['counts']) for e in golden.values())} pinned "
+          f"counts)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check", action="store_true",
+                    help="regenerate in memory and diff against the "
+                         "checked-in fixture (exit 1 on drift) instead "
+                         "of rewriting it")
+    args = ap.parse_args()
+    golden = compute_golden()
+    if args.check:
+        return check(golden)
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:
         json.dump(golden, f, indent=1, sort_keys=True)

@@ -19,6 +19,12 @@ python -m repro.launch.count --graph rmat:8:4 --k 4 --method color
 python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5,6 \
     --engine bitset --assert-golden
 
+# listing smoke: the streamed enumeration must reproduce the exact
+# count on the same session (asserted by --list itself) and the pinned
+# golden counts; the tiny --chunk forces the overflow drain path
+python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5 \
+    --list --chunk 16 --list-show 2 --assert-golden
+
 # estimator smoke: accuracy-targeted auto query on the corpus benchmark
 # graph; --assert-golden checks the reported CI contains the golden count
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \

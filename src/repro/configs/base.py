@@ -8,8 +8,6 @@ they key jit caches safely.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional
 
 
 def round_up(x: int, mult: int) -> int:

@@ -8,15 +8,17 @@ Public API:
 """
 from .count import CountResult, count_cliques, dag_count, dag_count_flops
 from .csr import OrientedGraph, build_oriented
-from .oracle import (clique_count_bruteforce, complete_graph_cliques,
-                     er_expected_cliques, triangle_count_matrix)
+from .oracle import (clique_count_bruteforce, clique_list_bruteforce,
+                     complete_graph_cliques, er_expected_cliques,
+                     triangle_count_matrix)
 from .order import check_lemma1, ranks
 from .plan import Plan, balance_report, build_plan, partition_for_workers
 
 __all__ = [
     "CountResult", "count_cliques", "dag_count", "dag_count_flops",
     "OrientedGraph", "build_oriented",
-    "clique_count_bruteforce", "complete_graph_cliques",
+    "clique_count_bruteforce", "clique_list_bruteforce",
+    "complete_graph_cliques",
     "er_expected_cliques", "triangle_count_matrix",
     "check_lemma1", "ranks",
     "Plan", "balance_report", "build_plan", "partition_for_workers",

@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -149,6 +149,175 @@ def _dag_count_bits_engine(bits: jax.Array, r: int,
         from ..kernels.bitset import ops as bitset_ops
         return bitset_ops.dag_count_bits_pallas(bits, r)
     return dag_count_bits(bits, r)
+
+
+# --------------------------------------------------------------------------
+# emit variants: streaming k-clique enumeration (repro.listing)
+# --------------------------------------------------------------------------
+#
+# The paper's exact algorithm "counts (and lists)" k-cliques: the pivot
+# recursion that sums 1 per increasing tuple can just as well *emit* the
+# tuple. The emit variants below walk the identical recursion but carry a
+# fixed-capacity (chunk, r+1) int32 row buffer plus a running stream
+# counter, and materialize only the cliques whose global stream position
+# falls in the window [start, start + chunk). Enumeration order is
+# deterministic (batch-major, then pivot-major, then row-major over the
+# innermost pair mask), so a caller drains an overflowing tile by
+# re-running the same compiled executable with start advanced by chunk —
+# host and device memory stay O(chunk) no matter how many cliques the
+# tile holds. ``start`` is traced; one executable per
+# (capacity, r, chunk, representation) serves every chunk of every tile.
+
+
+def _scatter_rows(flat_fn: Callable[[], jax.Array], cnt: jax.Array,
+                  shape: tuple, prefix: tuple, start, chunk: int, carry):
+    """Shared emit step: write the set elements of one innermost pair
+    mask into the row buffer.
+
+    ``flat_fn()`` materializes the (B·D·D,) bool mask of valid (i, j)
+    pairs given ``prefix`` (traced tile-local pivot indices shared
+    across the batch); ``cnt`` is its precomputed popcount, so a mask
+    whose stream span is disjoint from [start, start+chunk) never runs
+    ``flat_fn`` or the scatters (the packed path exploits this to stay
+    in the uint32 domain on drained-past windows). carry is
+    (counter, rows): the stream position before this mask and the
+    (chunk, r+1) int32 buffer. Rows are [b, *prefix, i, j]; positions
+    outside the window land on the out-of-range slot ``chunk`` and are
+    dropped by the scatter.
+    """
+    counter, rows = carry
+    B, D = shape
+
+    def do_emit(rows):
+        flat = flat_fn()
+        pos = counter + jnp.cumsum(flat.astype(jnp.int32)) - 1
+        write = flat & (pos >= start) & (pos < start + chunk)
+        slot = jnp.where(write, pos - start, chunk)   # chunk → dropped
+        idx = jnp.arange(B * D * D, dtype=jnp.int32)
+        cols = (idx // (D * D),) + tuple(
+            jnp.full(idx.shape, v, jnp.int32) for v in prefix) + \
+            ((idx // D) % D, idx % D)
+        # one row-wise scatter: the loop-carried buffer is rewritten
+        # once per emitting step, not once per column
+        return rows.at[slot].set(jnp.stack(cols, axis=1), mode="drop")
+
+    overlap = (counter < start + chunk) & (counter + cnt > start)
+    rows = jax.lax.cond(overlap, do_emit, lambda r: r, rows)
+    return counter + cnt, rows
+
+
+def _list_rec(A: jax.Array, r: int, prefix: tuple, start, chunk: int,
+              carry):
+    """Dense emit recursion — the pivot recursion of :func:`dag_count`
+    with the innermost two levels emitted instead of summed."""
+    B, D = A.shape[0], A.shape[1]
+    if r == 2:
+        flat = A.reshape(-1) > 0.0
+        return _scatter_rows(lambda: flat,
+                             jnp.sum(flat.astype(jnp.int32)), (B, D),
+                             prefix, start, chunk, carry)
+
+    def body(v, carry):
+        row = jax.lax.dynamic_index_in_dim(A, v, axis=1, keepdims=False)
+        Bv = A * row[:, :, None] * row[:, None, :]
+        return _list_rec(Bv, r - 1, prefix + (v,), start, chunk, carry)
+
+    return jax.lax.fori_loop(0, D, body, carry)
+
+
+def _list_rec_bits(bits: jax.Array, r: int, prefix: tuple, start,
+                   chunk: int, carry):
+    """Packed emit recursion — pivot masking stays in the uint32 domain
+    (row-broadcast AND + row-bit select, exactly :func:`dag_count_bits`);
+    only the innermost pair mask is unpacked, and only when its count
+    overlaps the chunk window (window-disjoint masks cost one popcount)."""
+    B, D = bits.shape[0], bits.shape[1]
+    if r == 2:
+        cnt = jnp.sum(jax.lax.population_count(bits).astype(jnp.int32))
+        return _scatter_rows(
+            lambda: _unpack_bits(bits, D).reshape(-1) > 0.0, cnt,
+            (B, D), prefix, start, chunk, carry)
+
+    def body(v, carry):
+        row = jax.lax.dynamic_index_in_dim(bits, v, axis=1, keepdims=False)
+        colmask = jnp.bitwise_and(bits, row[:, None, :])
+        sel = _unpack_bits(row, D) > 0.0
+        Bv = jnp.where(sel[:, :, None], colmask, jnp.uint32(0))
+        return _list_rec_bits(Bv, r - 1, prefix + (v,), start, chunk, carry)
+
+    return jax.lax.fori_loop(0, D, body, carry)
+
+
+def dag_list_cliques(A: jax.Array, r: int, *, chunk: int,
+                     start) -> tuple[jax.Array, jax.Array]:
+    """Enumerate the r-cliques of each dense DAG adjacency in the batch.
+
+    A: (B, D, D) f32 strictly upper-triangular. Returns
+    (rows (chunk, r+1) int32, total int32): ``rows[s]`` is the clique at
+    stream position ``start + s`` as tile-local indices [b, i₁ < … < i_r]
+    (unwritten slots stay −1); ``total`` is the full per-tile clique
+    count — the emit twin of :func:`dag_count`, so ``total`` always
+    equals ``dag_count(A, r)`` and the caller drains an overflow by
+    re-running with ``start += chunk`` while ``start < total``.
+    """
+    assert r >= 2, "listing bottoms out at the pair mask (k ≥ 3)"
+    rows = jnp.full((chunk, r + 1), -1, jnp.int32)
+    counter, rows = _list_rec(A, r, (), jnp.int32(start), chunk,
+                              (jnp.int32(0), rows))
+    return rows, counter
+
+
+def dag_list_bits(bits: jax.Array, r: int, *, chunk: int,
+                  start) -> tuple[jax.Array, jax.Array]:
+    """Packed twin of :func:`dag_list_cliques` for (B, D, W) uint32
+    bitset adjacencies — same stream order, same chunk contract."""
+    assert r >= 2, "listing bottoms out at the pair mask (k ≥ 3)"
+    rows = jnp.full((chunk, r + 1), -1, jnp.int32)
+    counter, rows = _list_rec_bits(bits, r, (), jnp.int32(start), chunk,
+                                   (jnp.int32(0), rows))
+    return rows, counter
+
+
+def list_tile_rows(csr: DeviceCSR, nodes: jax.Array, start, *,
+                   capacity: int, n_iters: int, r: int, chunk: int,
+                   tile_repr: str = "dense",
+                   engine: str = "jnp") -> tuple[jax.Array, jax.Array]:
+    """Extract + enumerate one tile's chunk window, translated to global
+    vertex ids.
+
+    The emit twin of :func:`tile_values`/:func:`bits_tile_values`:
+    extracts each G⁺(u) (dense or packed per ``tile_repr``), enumerates
+    the (k−1)-cliques inside it, and gathers the tile-local row indices
+    back through the extraction's neighbor map — so each returned row is
+    the full k-clique [u, v₁, …, v_{k−1}] in *global* node ids, with u
+    the ≺-minimum (responsible) vertex and v_i its rank-sorted
+    out-neighbors. Returns (rows (chunk, r+1) int32, total int32);
+    unfilled slots are −1. ``engine="pallas"`` routes the packed path
+    through :func:`repro.kernels.bitset.ops.dag_list_bits_pallas` (the
+    emission itself stays XLA scatter work on every backend — see that
+    wrapper's docstring for why).
+    """
+    if tile_repr == "bits":
+        bits, nb = extract_adjacency_bits(csr, nodes, capacity=capacity,
+                                          n_iters=n_iters)
+        if engine == "pallas":
+            from ..kernels.bitset import ops as bitset_ops
+            local, total = bitset_ops.dag_list_bits_pallas(
+                bits, r, chunk=chunk, start=start)
+        else:
+            local, total = dag_list_bits(bits, r, chunk=chunk, start=start)
+    else:
+        A, nb = extract_adjacency(csr, nodes, capacity=capacity,
+                                  n_iters=n_iters)
+        local, total = dag_list_cliques(A, r, chunk=chunk, start=start)
+    b = local[:, 0]
+    ok = b >= 0
+    safe_b = jnp.maximum(b, 0)
+    cols = [jnp.where(ok, nodes[safe_b], -1)]
+    for c in range(1, r + 1):
+        i = jnp.maximum(local[:, c], 0)
+        cols.append(jnp.where(ok, nb[safe_b, i], -1))
+    return jnp.stack(cols, axis=1), total
 
 
 # --------------------------------------------------------------------------
@@ -403,6 +572,9 @@ _bits_split_tile = functools.partial(
 _subset_tile = functools.partial(
     jax.jit, static_argnames=("capacity", "kept", "n_iters", "r", "engine",
                               "tile_repr"))(subset_tile_values)
+_list_tile = functools.partial(
+    jax.jit, static_argnames=("capacity", "n_iters", "r", "chunk",
+                              "tile_repr", "engine"))(list_tile_rows)
 
 
 # --------------------------------------------------------------------------

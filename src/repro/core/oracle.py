@@ -14,18 +14,26 @@ from ..graphs.formats import Graph
 from .order import ranks
 
 
-def clique_count_bruteforce(g: Graph, k: int,
-                            return_per_node: bool = False):
-    """Exact k-clique count by ordered recursion (host, tiny graphs only)."""
-    assert k >= 2
+def _oriented_rank_sets(g: Graph):
+    """Shared oracle setup: (nplus, node_of_rank) where nplus[u] is
+    Γ⁺(u) as a python set of *ranks* — one definition of the ≺
+    orientation for both the counting and the listing oracle, so they
+    can never silently disagree on tie-breaking or edge direction."""
     r = ranks(g.degrees)
-    # out-neighbors in ≺ order, as python sets of *ranks*
     nplus: list[set[int]] = [set() for _ in range(g.n)]
     for u, v in g.edges:
         a, b = (u, v) if r[u] < r[v] else (v, u)
         nplus[int(a)].add(int(r[int(b)]))
     node_of_rank = np.empty(g.n, dtype=np.int64)
     node_of_rank[r] = np.arange(g.n)
+    return nplus, node_of_rank
+
+
+def clique_count_bruteforce(g: Graph, k: int,
+                            return_per_node: bool = False):
+    """Exact k-clique count by ordered recursion (host, tiny graphs only)."""
+    assert k >= 2
+    nplus, node_of_rank = _oriented_rank_sets(g)
 
     def count_in(cand: set[int], depth: int) -> int:
         if depth == 0:
@@ -47,6 +55,37 @@ def clique_count_bruteforce(g: Graph, k: int,
     if return_per_node:
         return total, per_node
     return total
+
+
+def clique_list_bruteforce(g: Graph, k: int) -> np.ndarray:
+    """Every k-clique of ``g`` as an (N, k) int64 array (host, tiny
+    graphs only) — the listing oracle behind ``tests/test_listing.py``.
+
+    Rows are [u, v₁, …, v_{k−1}]: the ≺-minimum (responsible) node
+    first, then the remaining members in ≺ order — the same
+    responsibility assignment and emission order convention as the
+    engine's streaming enumeration, so sorted-row set comparison is all
+    a test needs.
+    """
+    assert k >= 2
+    nplus, node_of_rank = _oriented_rank_sets(g)
+    out: list[list[int]] = []
+
+    def emit_in(cand: set[int], depth: int, prefix: list[int]) -> None:
+        if depth == 0:
+            out.append(prefix)
+            return
+        for rv in sorted(cand):
+            v = int(node_of_rank[rv])
+            if depth == 1:
+                out.append(prefix + [v])
+            else:
+                emit_in(cand & nplus[v], depth - 1, prefix + [v])
+
+    for u in range(g.n):
+        emit_in(nplus[u], k - 1, [u])
+    return (np.asarray(out, dtype=np.int64) if out
+            else np.empty((0, k), np.int64))
 
 
 def complete_graph_cliques(n: int, k: int) -> int:

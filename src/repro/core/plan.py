@@ -14,7 +14,6 @@ factor of the mean — the framework's straggler mitigation.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Sequence
 
 import numpy as np

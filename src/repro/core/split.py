@@ -20,7 +20,7 @@ import dataclasses
 import numpy as np
 
 from .csr import OrientedGraph
-from .plan import Bucket, Plan, unit_cost
+from .plan import Bucket, Plan
 
 
 @dataclasses.dataclass(frozen=True)

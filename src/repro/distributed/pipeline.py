@@ -13,7 +13,6 @@ numerical equivalence with the non-pipelined forward at smoke scale.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -13,12 +13,12 @@ entry points are thin deprecated wrappers over this engine.
 from .backends import Backend, ExecutableCache, LocalBackend, ShardMapBackend
 from .engine import (CliqueEngine, PlanEntry, derive_sweep_seed,
                      graph_fingerprint)
-from .report import (ADAPTIVE_METHODS, BACKENDS, METHODS, TILE_ENGINES,
-                     CountReport, CountRequest)
+from .report import (ADAPTIVE_METHODS, BACKENDS, METHODS, MODES,
+                     TILE_ENGINES, CountReport, CountRequest)
 
 __all__ = [
     "CliqueEngine", "CountRequest", "CountReport", "PlanEntry",
     "Backend", "LocalBackend", "ShardMapBackend", "ExecutableCache",
-    "ADAPTIVE_METHODS", "BACKENDS", "METHODS", "TILE_ENGINES",
+    "ADAPTIVE_METHODS", "BACKENDS", "METHODS", "MODES", "TILE_ENGINES",
     "derive_sweep_seed", "graph_fingerprint",
 ]

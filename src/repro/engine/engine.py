@@ -329,7 +329,12 @@ class CliqueEngine:
         h0, m0 = self.executables.snapshot()
         t1 = time.perf_counter()
         adaptive_info = None
-        if req.is_adaptive:
+        cliques = listing_stats = None
+        if req.mode == "list":
+            from ..listing import collect_cliques
+            cliques, listing_stats = collect_cliques(self, req)
+            estimate, per_node = float(len(cliques)), None
+        elif req.is_adaptive:
             from ..estimator import run_adaptive
             estimate, per_node, adaptive_info = run_adaptive(
                 self, backend, entry, req, self.estimator_policy)
@@ -362,6 +367,11 @@ class CliqueEngine:
             n_workers=W,
             params={"p": req.p, "colors": req.colors, "seed": req.seed,
                     "backend": backend.name})
+        if cliques is not None:
+            report.cliques = cliques
+            report.listing = dict(listing_stats,
+                                  chunk_capacity=req.chunk,
+                                  limit=req.limit)
         if adaptive_info is not None:
             report.ci_low = adaptive_info["ci_low"]
             report.ci_high = adaptive_info["ci_high"]
@@ -372,6 +382,28 @@ class CliqueEngine:
                                  confidence=req.confidence,
                                  resolved=adaptive_info["resolved"])
         return report
+
+    def stream(self, req: CountRequest):
+        """Stream a listing query as :class:`repro.listing.CliqueBatch`
+        chunks — the bounded-memory consumption path (host memory stays
+        O(``req.chunk``) no matter how many cliques the graph holds).
+        ``submit`` on the same request instead materializes the full
+        array on the report. See ``docs/listing.md``.
+
+        Validation and the closed-session check run *here*, not at first
+        iteration, so a bad request fails at the call site like
+        ``submit`` does (``stream_cliques`` itself is a generator).
+        """
+        from ..listing import stream_cliques
+        if req.mode != "list":
+            req = dataclasses.replace(req, mode="list")
+        if self._closed:
+            raise RuntimeError(
+                "CliqueEngine session is closed (evicted from its pool); "
+                "build a new session for this graph")
+        req.validate()
+        self.n_queries += 1
+        return stream_cliques(self, req)
 
     def submit_many(self, reqs: Iterable[CountRequest], *,
                     decorrelate: bool = True) -> list[CountReport]:

@@ -7,7 +7,7 @@ answer to the seed API's fork into ``CountResult`` (single host) vs
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -17,6 +17,7 @@ METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "auto")
 BACKENDS = ("local", "pallas", "shard_map")
 ADAPTIVE_METHODS = ("auto", "edge", "color")   # may carry a rel_error target
 TILE_ENGINES = ("auto", "dense", "bitset")     # tile representation choice
+MODES = ("count", "list")                      # scalar answer vs enumeration
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,6 +34,16 @@ class CountRequest:
     tiles, bit-exact counts), and ``"auto"`` (default) lets a per-bucket
     bytes-based cost model choose — see
     :func:`repro.core.count.pick_tile_repr` and ``docs/kernels.md``.
+
+    Listing queries: ``mode="list"`` asks for the cliques themselves
+    instead of a count — the exact tile pipeline with the emit kernels
+    (:mod:`repro.listing`). ``chunk`` bounds the per-chunk buffer (and
+    the stream's host memory), ``limit`` early-stops after that many
+    cliques, and ``predicate`` (a vectorized host callable
+    ``(n, k) int rows → (n,) bool``) filters each chunk before it
+    counts toward the limit. Listing is exact-method only; consume it
+    via ``CliqueEngine.stream`` (bounded memory) or ``submit``
+    (materialized ``report.cliques``).
 
     Accuracy-targeted queries: ``method="auto"`` (or ``"edge"``/``"color"``
     with ``rel_error`` set) hands the query to the adaptive controller in
@@ -54,6 +65,11 @@ class CountRequest:
     max_capacity: Optional[int] = None   # clamp the planner's classes
     rel_error: Optional[float] = None    # accuracy target (adaptive only)
     confidence: float = 0.99             # CI level for rel_error
+    # listing (mode="list") — streaming enumeration; see repro.listing
+    mode: str = "count"                  # "count" | "list"
+    limit: Optional[int] = None          # stop after this many cliques
+    chunk: int = 1 << 16                 # listing buffer rows per chunk
+    predicate: Optional[Callable[[np.ndarray], np.ndarray]] = None
 
     def validate(self) -> None:
         if self.k < 3:
@@ -78,6 +94,33 @@ class CountRequest:
                 raise ValueError(
                     f"rel_error targets need an adaptive method "
                     f"{ADAPTIVE_METHODS}, got {self.method!r}")
+        if self.mode not in MODES:
+            raise ValueError(f"unknown mode {self.mode!r}; one of {MODES}")
+        if self.mode == "list":
+            if self.method != "exact":
+                raise ValueError(
+                    "listing is an exact-path feature: a sampled tile has "
+                    "no witnesses to emit for the cliques it skipped "
+                    f"(got method={self.method!r})")
+            if self.rel_error is not None:
+                raise ValueError("rel_error targets are a counting "
+                                 "(mode='count') feature")
+            if self.return_per_node:
+                raise ValueError("per-node attribution of a listing is "
+                                 "the listing itself; drop "
+                                 "return_per_node")
+            if self.split_threshold is not None:
+                raise ValueError(
+                    "the §6 split round re-partitions one unit across "
+                    "pivot lanes; its emission path is not implemented "
+                    "(ROADMAP) — drop split_threshold for mode='list'")
+            if self.chunk < 1:
+                raise ValueError(f"chunk must be ≥ 1, got {self.chunk}")
+            if self.limit is not None and self.limit < 1:
+                raise ValueError(f"limit must be ≥ 1, got {self.limit}")
+        elif self.limit is not None or self.predicate is not None:
+            raise ValueError("limit/predicate are listing knobs; set "
+                             "mode='list'")
         if self.is_adaptive and self.split_threshold is not None:
             # the estimator's density certificates (and hence the CI's
             # certified range term) only cover plan buckets; §6 split
@@ -127,9 +170,17 @@ class CountRequest:
         else:
             p, colors, seed = self.p, self.colors, self.seed
             target = None
+        # listing: the answer is the clique set up to (limit, predicate).
+        # chunk is pure batching (same cliques at any chunk) and stays
+        # out; predicates coalesce by identity — the same callable object
+        # filters to the same rows, distinct objects never coalesce.
+        listing = (None if self.mode == "count"
+                   else ("list", self.limit,
+                         None if self.predicate is None
+                         else id(self.predicate)))
         return (self.k, self.method, p, colors, seed, backend,
                 self.engine, self.return_per_node, self.split_threshold,
-                self.max_capacity, target)
+                self.max_capacity, target, listing)
 
 
 @dataclasses.dataclass
@@ -155,6 +206,12 @@ class CountReport:
     achieved_rel_error: Optional[float] = None
     escalations: int = 0
     estimator: Optional[dict] = None  # controller telemetry (see docs)
+    # listing (mode="list") queries only; estimate is then the number of
+    # cliques listed (post predicate/limit). For unbounded streams use
+    # CliqueEngine.stream — a materialized report is O(#cliques) host
+    # memory by construction.
+    cliques: Optional[np.ndarray] = None   # (N, k) int32 global node ids
+    listing: Optional[dict] = None         # stream telemetry (see docs)
 
     @property
     def count(self) -> int:

@@ -39,6 +39,26 @@ def dag_count_bits_pallas(bits: jax.Array, r: int) -> jax.Array:
     return count_bits_kernel(bits, r, tb, interpret=interpret)[:B]
 
 
+def dag_list_bits_pallas(bits: jax.Array, r: int, *, chunk: int,
+                         start) -> tuple[jax.Array, jax.Array]:
+    """Emit variant of :func:`dag_count_bits_pallas` — the packed
+    listing path for the pallas backend.
+
+    The pivot masking (row-broadcast AND + row-bit select) is the same
+    packed recursion the count kernel runs, but per-clique emission is a
+    dynamic-index scatter into a shared row buffer, which has no
+    efficient Mosaic lowering today (a VMEM-compacting emit kernel is on
+    the ROADMAP). So the enumeration itself runs as the XLA recursion
+    from :func:`repro.core.count.dag_list_bits` on every backend; this
+    wrapper only pins the pallas-path entry point; no batch padding is
+    applied (the XLA recursion has no tile-shape constraint — the
+    Mosaic kernel, when it lands, should pad with all-zero matrices,
+    which contribute no cliques and leave stream positions intact).
+    """
+    from ...core.count import dag_list_bits
+    return dag_list_bits(bits, r, chunk=chunk, start=start)
+
+
 def triangles_bitset(A: jax.Array) -> jax.Array:
     """(B, D, D) 0/1 f32 adjacencies → (B,) f32 triangle counts (the
     original triangles-only entry point, now a pack + r=3 call).

@@ -6,7 +6,6 @@ plus ~2 D×D f32 temps must fit in ~12 MB of the 16 MB VMEM.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

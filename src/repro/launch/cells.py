@@ -9,22 +9,18 @@ scale, with real arrays) the integration tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding
-from jax.sharding import PartitionSpec as P
+from jax.sharding import Mesh
 
 from ..configs import get_config, get_shape
 from ..configs.base import (ModelConfig, ParallelConfig, ShapeConfig,
                             cell_is_runnable)
 from ..distributed.sharding import (batch_sharding, cache_shardings,
                                     param_shardings, replicated)
-from ..models import (abstract_params, decode_step, forward_train,
-                      init_cache, kv_capacity, prefill)
+from ..models import abstract_params, decode_step, init_cache, prefill
 from ..models.layers import ShardCtx
 from ..training.optimizer import OptConfig, OptState
 from ..training.train_step import make_train_step

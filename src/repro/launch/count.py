@@ -10,6 +10,8 @@ query, and ``--k`` accepts a comma list for a batched session sweep.
   PYTHONPATH=src python -m repro.launch.count \
       --graph corpus:planted_1200_12_16_40 --k 5 --rel-error 0.05 \
       --assert-golden                  # accuracy-targeted (repro.estimator)
+  PYTHONPATH=src python -m repro.launch.count --graph rmat:10:8 --k 4 \
+      --list --limit 20               # enumerate cliques (repro.listing)
 
 ``--serve`` drives the multi-graph :class:`CliqueService` instead:
 ``--graph`` takes a comma list of specs, ``--repeat R`` submits the
@@ -147,6 +149,21 @@ def main() -> int:
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--per-node", action="store_true",
                     help="report top per-node clique attribution")
+    ap.add_argument("--list", action="store_true", dest="list_cliques",
+                    help="enumerate the cliques themselves (mode='list', "
+                         "exact method only): streams CliqueBatch chunks, "
+                         "prints the first --list-show rows per k, and "
+                         "cross-checks the streamed total against an "
+                         "exact count on the same session unless --limit "
+                         "cuts the stream short")
+    ap.add_argument("--limit", type=int, default=None,
+                    help="--list: stop after this many cliques (early-"
+                         "stops the remaining device work)")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="--list: listing buffer rows per chunk (bounds "
+                         "stream memory; default %d)" % (1 << 16))
+    ap.add_argument("--list-show", type=int, default=3,
+                    help="--list: cliques to print per query (default 3)")
     ap.add_argument("--serve", action="store_true",
                     help="drive a CliqueService over a comma list of "
                          "--graph specs (multi-graph pool + coalescing)")
@@ -186,9 +203,27 @@ def main() -> int:
     if args.per_node and backend == "shard_map":
         print("warning: --per-node is a local/pallas feature; ignored "
               "on the shard_map backend", file=sys.stderr)
+    if args.list_cliques:
+        if methods != ["exact"]:
+            ap.error("--list is exact-only: sampled estimators have no "
+                     "witnesses to emit for the cliques they skip")
+        if args.rel_error is not None:
+            ap.error("--list and --rel-error are mutually exclusive")
+        if args.limit is not None and args.assert_golden:
+            ap.error("--assert-golden pins the *full* count; a --limit-"
+                     "truncated listing can never match it")
+    elif args.limit is not None or args.chunk is not None:
+        ap.error("--limit/--chunk are --list knobs")
+
     tile_engine = (args.engine if args.engine in ("bitset", "dense")
                    else "auto")
+    listing_kw = {}
+    if args.list_cliques:
+        listing_kw = dict(mode="list", limit=args.limit,
+                          chunk=(args.chunk if args.chunk is not None
+                                 else 1 << 16))
     reqs = [CountRequest(
+        **listing_kw,
         k=k, method=m, p=args.p, colors=args.colors, seed=args.seed,
         engine=tile_engine,
         # the accuracy target rides only the methods that can adapt, so
@@ -237,6 +272,18 @@ def main() -> int:
             row["achieved_rel_error"] = rep.achieved_rel_error
             row["escalations"] = rep.escalations
             row["resolved"] = rep.params["resolved"]
+        if rep.cliques is not None:
+            row["listing"] = rep.listing
+            row["cliques_head"] = \
+                rep.cliques[:max(args.list_show, 0)].tolist()
+            if args.limit is None:
+                # the streamed enumeration must agree with the counting
+                # identity on the same session — a free exactness smoke
+                check = eng.submit(CountRequest(k=rep.k,
+                                                engine=tile_engine))
+                assert rep.count == check.count, \
+                    (rep.k, rep.count, check.count)
+                row["count_check"] = "ok"
         if rep.per_node is not None:
             top = rep.per_node.argsort()[-3:][::-1]
             row["top_nodes"] = top.tolist()

@@ -28,7 +28,6 @@ import traceback
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
              out_dir: str, force: bool = False,
              par=None, tag_suffix: str = "") -> dict:
-    import jax
 
     from ..configs import get_config, get_shape
     from ..configs.base import ParallelConfig, cell_is_runnable

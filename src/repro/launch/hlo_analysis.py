@@ -33,7 +33,6 @@ bf16 parameter` chains in command-r-35b/train_4k.)
 from __future__ import annotations
 
 import dataclasses
-import json
 import math
 import re
 from collections import defaultdict

@@ -7,7 +7,6 @@ smoke tests must keep seeing the single real device.
 """
 from __future__ import annotations
 
-import jax
 
 from ..core.compat import make_mesh as _compat_make_mesh
 

@@ -15,9 +15,6 @@ compute.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
-from typing import Optional
 
 from ..configs.base import ModelConfig, ShapeConfig
 from .hlo_analysis import HLOStats

@@ -20,7 +20,6 @@ def main() -> int:
     import time
 
     import jax
-    import numpy as np
 
     from ..configs import get_config, get_smoke_config
     from ..configs.base import ShapeConfig

@@ -1,0 +1,219 @@
+"""Streaming k-clique enumeration through the tile pipeline.
+
+The paper's exact algorithm is for "counting (and listing) k-cliques";
+this module is the listing half. It drives the emit variants of the
+counting recursions (:func:`repro.core.count.dag_list_cliques` /
+``dag_list_bits``) through the same plan buckets, tile batches, and
+representation cost model every counting backend uses, and streams the
+result to the caller as :class:`CliqueBatch` chunks:
+
+- **bounded memory** — each tile is enumerated into a fixed-capacity
+  device buffer of ``req.chunk`` rows; a tile holding more cliques than
+  one chunk is *drained*: the same compiled executable re-runs with the
+  stream window advanced by ``chunk`` until the tile is exhausted. Host
+  and device memory stay O(chunk + tile), never O(#cliques).
+- **global ids** — tile-local indices are translated back through the
+  extraction's neighbor map on device, so each row is a full k-clique
+  ``[u, v₁, …, v_{k−1}]`` in graph node ids, ``u`` the ≺-minimum
+  (responsible) vertex.
+- **predicate / limit** — an optional vectorized host predicate filters
+  each chunk before it is yielded (e.g. "cliques containing node 17" —
+  see :func:`containing`), and ``limit`` stops the stream — and all
+  remaining device work — as soon as that many cliques have been
+  yielded (top-t queries).
+
+Use it through the engine::
+
+    from repro.engine import CliqueEngine, CountRequest
+    eng = CliqueEngine(graph)
+    for batch in eng.stream(CountRequest(k=4, mode="list", chunk=8192)):
+        process(batch.cliques)                  # (≤ chunk, k) int32
+
+or materialized (small results / service tickets)::
+
+    rep = eng.submit(CountRequest(k=4, mode="list", limit=100))
+    rep.cliques                                 # (≤ 100, 4) int32
+
+See ``docs/listing.md`` for the full design.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .core.count import (_list_tile, _tile_batches, pick_tile_repr,
+                         tile_unit_bytes)
+from .core.plan import partition_for_workers
+from .engine.backends import tile_executable
+
+
+@dataclasses.dataclass
+class CliqueBatch:
+    """One streamed chunk of enumerated k-cliques.
+
+    ``cliques`` is (n, k) int32 global node ids, n ≤ the request's
+    ``chunk`` — the bounded-memory contract. ``chunk_index`` counts
+    chunks within the owning tile (> 0 means the tile overflowed the
+    buffer and is being drained)."""
+    k: int
+    cliques: np.ndarray
+    tile_index: int
+    chunk_index: int
+    truncated: bool = False     # the stream's limit was hit in this batch
+
+
+def containing(*nodes: int) -> Callable[[np.ndarray], np.ndarray]:
+    """Predicate factory: keep cliques containing every given node —
+    the "top-t cliques by node" query of social-network analytics,
+    usually paired with ``limit``::
+
+        CountRequest(k=4, mode="list", predicate=containing(17), limit=10)
+    """
+    want = np.asarray(nodes, np.int32)
+
+    def pred(rows: np.ndarray) -> np.ndarray:
+        return np.all((rows[:, :, None] == want[None, None, :]).any(axis=1),
+                      axis=1)
+
+    return pred
+
+
+def _listing_batch_bytes(capacity: int, r: int) -> int:
+    """Byte-accounting for one listing work unit. An *emitting* step of
+    the recursion materializes dense-sized transients regardless of the
+    tile representation: the bool pair mask, the int32 idx/pos/cumsum
+    arrays (~4 dense planes), and the stacked (B·D², r+1) scatter
+    payload — ~(r+5) dense f32 planes at peak, vs the single plane the
+    counting path budgets. Fold that into the unit size so the batch
+    sizing bounds *listing's* peak working set, not counting's; a
+    packed tile accordingly never earns the 32×-wider batch here."""
+    return (r + 5) * tile_unit_bytes(capacity, "dense")
+
+
+def stream_cliques(eng, req, *, stats: Optional[dict] = None
+                   ) -> Iterator[CliqueBatch]:
+    """Stream every k-clique of the engine's graph as CliqueBatch chunks.
+
+    ``eng`` is a :class:`repro.engine.CliqueEngine`; ``req`` a validated
+    ``CountRequest(mode="list")``. Pass ``stats`` (a dict) to receive
+    telemetry: tiles / chunks / drained tiles / enumerated / listed /
+    truncated.
+
+    The stream is deterministic for a fixed (graph, request): plan
+    buckets in capacity order, tiles in plan order, chunks in stream
+    order. Under the shard_map backend the buckets are walked in the
+    same LPT per-worker partition the counting path shards by — the
+    enumerated *set* is identical on every backend (witness emission
+    cannot ride a ``psum``, so the dispatches themselves stay
+    single-device; per-worker device-side draining is a ROADMAP item).
+    """
+    if eng.closed:
+        raise RuntimeError(
+            "CliqueEngine session is closed (evicted from its pool); "
+            "build a new session for this graph")
+    req.validate()
+    if req.mode != "list":
+        raise ValueError("stream_cliques needs a mode='list' request")
+    backend = eng._backend(req.backend or eng.default_backend)
+    entry, _ = eng._plan_entry(req)
+    r, chunk = req.k - 1, req.chunk
+    s = stats if stats is not None else {}
+    s.update(tiles=0, skipped_tiles=0, chunks=0, drained_tiles=0,
+             enumerated=0, listed=0, truncated=False)
+    remaining = req.limit
+    zero_key = jax.random.PRNGKey(0)   # exact count path ignores the key
+
+    # shard_map walks its per-worker LPT partition (same work, same
+    # set); single-device backends walk the plan directly
+    W = backend.n_workers
+    plans = ([entry.plan] if W == 1
+             else partition_for_workers(entry.plan, eng.og, W))
+    tile_index = 0
+    for plan in plans:
+        for b in plan.buckets:
+            repr_ = pick_tile_repr(r=r, capacity=b.capacity,
+                                   method="exact", choice=req.engine,
+                                   elem_budget=backend.budget)
+            kind = "pallas" if backend.name == "pallas" else "jnp"
+            fn = eng.executables.get(
+                ("list", kind, repr_, b.capacity, r, chunk),
+                lambda: functools.partial(
+                    _list_tile, capacity=b.capacity,
+                    n_iters=eng.og.lookup_iters, r=r, chunk=chunk,
+                    tile_repr=repr_, engine=kind))
+            # count-first sizing pass: the counting identity (matmul /
+            # popcount — far cheaper than the emit recursion) decides
+            # whether the tile holds any cliques at all, so clique-free
+            # tiles (most of a sparse background at large k) never pay
+            # for emission. It shares the counting path's session cache.
+            count_fn = tile_executable(eng, kind, repr_, b.capacity, r,
+                                       "exact")
+            for tile in _tile_batches(
+                    b.nodes, b.capacity, backend.budget, "dense",
+                    unit_bytes=_listing_batch_bytes(b.capacity, r)):
+                s["tiles"] += 1
+                tile_dev = jnp.asarray(tile)
+                sized = float(jnp.sum(count_fn(eng.csr, tile_dev,
+                                               zero_key, p=1.0, c=1)))
+                if not sized:
+                    s["skipped_tiles"] += 1
+                    tile_index += 1
+                    continue
+                if sized >= 2.0 ** 31:
+                    # stream positions are int32 on device; refuse to
+                    # wrap silently (f32 sizing is imprecise at this
+                    # magnitude but its order of magnitude is exact)
+                    raise OverflowError(
+                        f"one tile holds ~{sized:.3g} cliques, beyond "
+                        "the int32 stream counter; lower max_capacity "
+                        "so the planner splits this bucket further")
+                start, n_chunks, total = 0, 0, None
+                while total is None or start < total:
+                    rows, tile_total = fn(eng.csr, tile_dev,
+                                          jnp.int32(start))
+                    if total is None:
+                        total = int(tile_total)
+                        s["enumerated"] += total
+                    got = np.asarray(rows[:max(0, min(total - start,
+                                                      chunk))])
+                    if req.predicate is not None and len(got):
+                        got = got[np.asarray(req.predicate(got), bool)]
+                    truncated = (remaining is not None
+                                 and len(got) >= remaining)
+                    if truncated:
+                        got = got[:remaining]
+                    if len(got):
+                        s["chunks"] += 1
+                        s["listed"] += len(got)
+                        if remaining is not None:
+                            remaining -= len(got)
+                        yield CliqueBatch(k=req.k, cliques=got,
+                                          tile_index=tile_index,
+                                          chunk_index=n_chunks,
+                                          truncated=truncated)
+                    if truncated:
+                        s["truncated"] = True
+                        return
+                    n_chunks += 1
+                    start += chunk
+                if n_chunks > 1:
+                    s["drained_tiles"] += 1
+                tile_index += 1
+
+
+def collect_cliques(eng, req) -> tuple[np.ndarray, dict]:
+    """Materialize a listing query: (cliques (N, k) int32, stats).
+
+    This is what ``CliqueEngine.submit(CountRequest(mode="list"))`` and
+    CliqueService listing tickets call; memory is O(N), so cap unbounded
+    queries with ``limit`` (or use :func:`stream_cliques` directly)."""
+    stats: dict = {}
+    batches = [b.cliques for b in stream_cliques(eng, req, stats=stats)]
+    cliques = (np.concatenate(batches) if batches
+               else np.empty((0, req.k), np.int32))
+    return cliques, stats

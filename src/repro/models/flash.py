@@ -43,7 +43,7 @@ def _fwd_scan(q, k, v, causal, window, chunk, q_offset):
     q_pos = q_offset + jnp.arange(Sq)
 
     def step(carry, xs):
-        acc, m, l = carry
+        acc, m, lsum = carry
         kj, vj, j = xs
         kv_pos = j * chunk + jnp.arange(chunk)
         s = dot_f32("bqhgd,bkhd->bqhgk", q, kj)
@@ -55,17 +55,17 @@ def _fwd_scan(q, k, v, causal, window, chunk, q_offset):
         corr = jnp.exp(m - m_new)
         acc = acc * corr[..., None] + dot_f32(
             "bqhgk,bkhd->bqhgd", p.astype(vj.dtype), vj)
-        l = l * corr + jnp.sum(p, axis=-1)
-        return (acc, m_new, l), ()
+        lsum = lsum * corr + jnp.sum(p, axis=-1)
+        return (acc, m_new, lsum), ()
 
     acc0 = vzeros((B, Sq, Hkv, g, dv), q)
     m0 = vzeros((B, Sq, Hkv, g), q) + NEG_INF / 2
     l0 = vzeros((B, Sq, Hkv, g), q)
-    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0),
+    (acc, m, lsum), _ = jax.lax.scan(step, (acc0, m0, l0),
                                   (kc, vc, jnp.arange(nc)))
-    l = jnp.maximum(l, 1e-30)
-    out = acc / l[..., None]
-    lse = m + jnp.log(l)            # logsumexp per (b, q, hkv, g)
+    lsum = jnp.maximum(lsum, 1e-30)
+    out = acc / lsum[..., None]
+    lse = m + jnp.log(lsum)         # logsumexp per (b, q, hkv, g)
     return out, lse
 
 

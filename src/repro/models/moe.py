@@ -114,7 +114,6 @@ def moe_apply(cfg: ModelConfig, p: dict, x: jax.Array,
     # zero3: every axis carries batch; expert weights replicate inside
     # the shard_map (the outer ZeRO gather pays for them once per layer)
     tp = None if ctx.mode == "zero3" else ctx._tp()
-    mesh_axes = tuple(ctx.mesh.axis_names)
     B = x.shape[0]
     dp_used = tuple(a for a in (dp or ())) if dp else ()
     # batch must divide the dp extent for the local view; else drop axes

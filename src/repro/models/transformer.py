@@ -16,7 +16,6 @@ Entry points:
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

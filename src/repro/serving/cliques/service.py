@@ -11,10 +11,13 @@ service extends that across a workload:
 - **coalescing** — identical in-flight queries (same fingerprint and
   :meth:`CountRequest.query_key`) collapse into one execution whose
   report fans out to every waiter; exact queries even coalesce across
-  users who picked different sampling seeds, and adaptive
+  users who picked different sampling seeds, adaptive
   (accuracy-targeted) queries coalesce on the accuracy contract
   ``(rel_error, confidence)`` — not on the seed or the sampling knobs
-  the controller escalates past anyway.
+  the controller escalates past anyway — and listing queries
+  (``mode="list"``, see ``docs/listing.md``) coalesce on
+  ``(k, limit, predicate identity)`` with the ``chunk`` batching knob
+  normalized away (fan-out copies the ``cliques`` array).
 - **batching** — a drain groups queued jobs by session so each engine
   answers its whole batch back-to-back, reusing cached plans, shard
   stacks, and compiled executables across users (``submit_many``
@@ -39,8 +42,7 @@ import dataclasses
 import threading
 from typing import Iterable, Optional, Union
 
-from ...engine import CliqueEngine, CountReport, CountRequest, \
-    graph_fingerprint
+from ...engine import CountReport, CountRequest, graph_fingerprint
 from ...graphs.formats import Graph
 from .pool import EngineFactory, EnginePool
 
@@ -103,7 +105,9 @@ def _annotated_copy(report: CountReport, fanout: int,
         timings=dict(report.timings),
         params=dict(report.params),
         estimator=None if report.estimator is None
-        else dict(report.estimator))
+        else dict(report.estimator),
+        cliques=None if report.cliques is None else report.cliques.copy(),
+        listing=None if report.listing is None else dict(report.listing))
 
 
 class _Job:

@@ -5,8 +5,6 @@ the serving analogue of the clique planner's capacity buckets.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,6 @@ training parity within tolerance on a smoke config.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +75,6 @@ def make_compressed_dp_step(cfg, oc, mesh, axis: str = "data",
         mets.update(onorm)
         return params, opt_state, residuals, (loss, mets)
 
-    pspec = jax.tree.map(lambda _: P(), {"p": 0})["p"]
     from ..core.compat import shard_map_unchecked
     step = shard_map_unchecked(
         sharded_step, mesh=mesh,

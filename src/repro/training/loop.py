@@ -21,7 +21,6 @@ import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..data.pipeline import PipelineState, SyntheticLM
-from .optimizer import OptConfig, init_opt_state
 
 
 class Trainer:

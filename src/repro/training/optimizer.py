@@ -9,7 +9,6 @@ to keep consistent.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import NamedTuple
 
 import jax

@@ -10,13 +10,11 @@ than hand-scheduling. The int8-compressed DP variant lives in
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, ParallelConfig
+from ..configs.base import ModelConfig
 from ..models import forward_train
 from ..models.layers import NO_SHARD, ShardCtx
 from .optimizer import OptConfig, OptState, adamw_update
@@ -43,10 +41,10 @@ def make_train_step(cfg: ModelConfig, oc: OptConfig,
 
             def micro(carry, mb):
                 acc = carry
-                (l, m), g = jax.value_and_grad(
+                (lv, m), g = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, mb)
                 acc = jax.tree.map(jnp.add, acc, g)
-                return acc, (l, m)
+                return acc, (lv, m)
 
             zero = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params)

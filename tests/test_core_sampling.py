@@ -4,7 +4,7 @@ import pytest
 
 from repro.core import count_cliques
 from repro.core.mrc import theorem2_min_p, theorem3_max_colors
-from repro.graphs import barabasi_albert, complete_graph, erdos_renyi
+from repro.graphs import barabasi_albert, complete_graph
 
 
 @pytest.fixture(scope="module")

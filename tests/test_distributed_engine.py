@@ -9,7 +9,7 @@ from conftest import run_with_devices
 from repro.core import clique_count_bruteforce, count_cliques
 from repro.core.distributed import count_cliques_distributed
 from repro.core.plan import balance_report, build_plan, partition_for_workers
-from repro.core.split import split_cost_model, split_heavy
+from repro.core.split import split_cost_model
 from repro.core import build_oriented
 from repro.graphs import barabasi_albert, erdos_renyi
 

@@ -15,8 +15,7 @@ from repro.core.extract import to_device
 from repro.core.mrc import compute_stats
 from repro.core.plan import build_plan
 from repro.engine import CliqueEngine, CountRequest
-from repro.estimator import (empirical_bernstein, kruskal_katona_bound,
-                             run_adaptive)
+from repro.estimator import empirical_bernstein, kruskal_katona_bound
 from repro.graphs import (barabasi_albert, complete_bipartite,
                           conformance_corpus, erdos_renyi,
                           planted_cliques)

@@ -1,0 +1,274 @@
+"""Listing conformance: the streamed enumeration must reproduce the
+brute-force oracle's clique *sets* — not just its counts.
+
+Coverage map (the acceptance contract of the listing subsystem):
+
+- every conformance-corpus graph, k ∈ 3..5: the streamed set from both
+  tile representations (dense f32 / packed uint32) equals the oracle's
+  set. The full 3-backend × 2-repr cross product runs on the small
+  corpus graphs; the large estimator-benchmark graph (663k 5-cliques)
+  runs both reprs on the local backend at every k plus a cross-backend
+  spot check — the stream compiles to the same tile executables on
+  every backend, so the extra combos would re-run identical device code
+  for minutes of CI time.
+- bounded memory: a deliberately undersized chunk buffer must drain
+  tiles in ≤-chunk batches (asserted per batch) and still reproduce the
+  exact set.
+- len(list) == count whenever no limit is hit (hypothesis property).
+- limit early-stop, predicate filtering, validation, service tickets.
+"""
+import numpy as np
+import pytest
+
+from repro.core import clique_count_bruteforce, clique_list_bruteforce
+from repro.engine import BACKENDS, CliqueEngine, CountRequest
+from repro.graphs import complete_graph, conformance_corpus
+from repro.listing import CliqueBatch, containing, stream_cliques
+
+KS = (3, 4, 5)
+REPRS = ("dense", "bitset")
+BIG = 100    # corpus graphs above this n get the reduced combo matrix
+
+
+def canon(rows: np.ndarray) -> np.ndarray:
+    """Canonical set form: sort within each clique, then lexsort rows."""
+    rows = np.sort(np.asarray(rows, np.int64), axis=1)
+    return rows[np.lexsort(rows.T[::-1])] if len(rows) else rows
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return conformance_corpus()
+
+
+@pytest.fixture(scope="module")
+def oracle_sets(corpus):
+    return {g.name: {k: canon(clique_list_bruteforce(g, k)) for k in KS}
+            for g in corpus}
+
+
+def assert_valid_cliques(g, rows: np.ndarray) -> None:
+    """Independent validity check: distinct rows, distinct members,
+    every pair adjacent (doesn't rely on the oracle)."""
+    rows = np.asarray(rows, np.int64)
+    srt = np.sort(rows, axis=1)
+    assert (np.diff(srt, axis=1) > 0).all(), "repeated member in a clique"
+    as_tuples = {tuple(r) for r in srt}
+    assert len(as_tuples) == len(rows), "duplicate clique emitted"
+    edges = {(int(u), int(v)) for u, v in g.edges}
+    edges |= {(v, u) for u, v in edges}
+    for r in srt[:256]:     # spot-check adjacency on a bounded sample
+        for i in range(len(r)):
+            for j in range(i + 1, len(r)):
+                assert (int(r[i]), int(r[j])) in edges, r
+
+
+def test_listing_matches_oracle_sets_small(corpus, oracle_sets):
+    """Small corpus graphs: full backend × representation × k matrix."""
+    for g in corpus:
+        if g.n > BIG:
+            continue
+        eng = CliqueEngine(g)
+        for k in KS:
+            want = oracle_sets[g.name][k]
+            for backend in BACKENDS:
+                for engine in REPRS:
+                    rep = eng.submit(CountRequest(
+                        k=k, mode="list", backend=backend, engine=engine))
+                    got = canon(rep.cliques)
+                    assert rep.count == len(want), \
+                        (g.name, k, backend, engine)
+                    assert np.array_equal(got, want), \
+                        (g.name, k, backend, engine)
+
+
+def test_listing_matches_oracle_sets_large(corpus, oracle_sets):
+    """The big graph: both reprs at every k on local (the executables
+    are backend-shared), plus a cross-backend spot check at k=4."""
+    g = next(g for g in corpus if g.n > BIG)
+    eng = CliqueEngine(g)
+    for k in KS:
+        want = oracle_sets[g.name][k]
+        for engine in REPRS:
+            rep = eng.submit(CountRequest(k=k, mode="list", engine=engine))
+            assert rep.count == len(want), (k, engine)
+            assert np.array_equal(canon(rep.cliques), want), (k, engine)
+    for backend in ("pallas", "shard_map"):
+        for engine in REPRS:
+            rep = eng.submit(CountRequest(k=4, mode="list",
+                                          backend=backend, engine=engine))
+            assert np.array_equal(canon(rep.cliques),
+                                  oracle_sets[g.name][4]), (backend, engine)
+    assert_valid_cliques(g, rep.cliques)
+
+
+def test_undersized_buffer_drains_and_bounds_memory(corpus, oracle_sets):
+    """A chunk far smaller than the clique count must (a) bound every
+    yielded batch by the chunk size — the peak-host-memory contract —
+    (b) actually exercise the overflow drain, (c) lose nothing."""
+    g = corpus[0]            # K10: 120 triangles in one 8-wide bucket
+    eng = CliqueEngine(g)
+    for engine in REPRS:
+        stats: dict = {}
+        req = CountRequest(k=3, mode="list", chunk=7, engine=engine)
+        batches = list(stream_cliques(eng, req, stats=stats))
+        assert all(isinstance(b, CliqueBatch) for b in batches)
+        assert all(len(b.cliques) <= 7 for b in batches), \
+            "a batch exceeded the chunk capacity"
+        assert stats["drained_tiles"] >= 1, \
+            "undersized buffer never hit the drain path"
+        assert max(b.chunk_index for b in batches) >= 1
+        got = canon(np.concatenate([b.cliques for b in batches]))
+        assert np.array_equal(got, oracle_sets[g.name][3])
+        assert stats["listed"] == len(got)
+
+
+def test_stream_order_is_deterministic(corpus):
+    g = corpus[3]            # the BA graph
+    eng = CliqueEngine(g)
+    req = CountRequest(k=4, mode="list", chunk=13)
+    a = np.concatenate([b.cliques for b in eng.stream(req)])
+    b = np.concatenate([b.cliques for b in eng.stream(req)])
+    np.testing.assert_array_equal(a, b)
+
+
+def test_limit_early_stops(corpus):
+    g = next(g for g in corpus if g.n > BIG)   # 663k 5-cliques available
+    eng = CliqueEngine(g)
+    rep = eng.submit(CountRequest(k=5, mode="list", limit=50, chunk=32))
+    assert rep.count == 50 and len(rep.cliques) == 50
+    assert rep.listing["truncated"]
+    # early-stop must leave device work on the table, not enumerate
+    # everything and slice: far fewer cliques materialized than exist
+    assert rep.listing["listed"] == 50
+    assert rep.listing["tiles"] <= 2, \
+        "limit did not stop the tile loop early"
+    assert_valid_cliques(g, rep.cliques)
+
+
+def test_predicate_filters_and_composes_with_limit():
+    g = complete_graph(10)
+    eng = CliqueEngine(g)
+    # cliques through node 0: C(9, 2) = 36 triangles
+    rep = eng.submit(CountRequest(k=3, mode="list",
+                                  predicate=containing(0)))
+    assert rep.count == 36
+    assert (np.sort(rep.cliques, axis=1)[:, 0] == 0).all()
+    rep = eng.submit(CountRequest(k=3, mode="list", chunk=8,
+                                  predicate=containing(0), limit=10))
+    assert rep.count == 10 and rep.listing["truncated"]
+    assert (np.sort(rep.cliques, axis=1)[:, 0] == 0).all()
+
+
+def test_per_node_attribution_header(corpus, oracle_sets):
+    """Column 0 of each row is the ≺-minimum responsible node: the
+    per-node listing histogram must match the exact per-node counts."""
+    g = corpus[4]            # planted_32_6_7
+    eng = CliqueEngine(g)
+    _, per_node = clique_count_bruteforce(g, 4, return_per_node=True)
+    rep = eng.submit(CountRequest(k=4, mode="list"))
+    hist = np.bincount(rep.cliques[:, 0], minlength=g.n)
+    np.testing.assert_array_equal(hist, per_node)
+
+
+def test_listing_request_validation():
+    with pytest.raises(ValueError, match="exact"):
+        CountRequest(k=4, mode="list", method="color").validate()
+    with pytest.raises(ValueError, match="mode"):
+        CountRequest(k=4, mode="enumerate").validate()
+    with pytest.raises(ValueError, match="list"):
+        CountRequest(k=4, limit=5).validate()
+    with pytest.raises(ValueError, match="split"):
+        CountRequest(k=4, mode="list", split_threshold=8).validate()
+    with pytest.raises(ValueError, match="chunk"):
+        CountRequest(k=4, mode="list", chunk=0).validate()
+    with pytest.raises(ValueError, match="rel_error"):
+        CountRequest(k=4, mode="list", rel_error=0.1).validate()
+    CountRequest(k=4, mode="list", limit=5, chunk=2).validate()
+
+
+def test_listing_query_key_coalescing_identity():
+    base = CountRequest(k=4, mode="list")
+    assert base.query_key() != CountRequest(k=4).query_key()
+    assert base.query_key() == \
+        CountRequest(k=4, mode="list", seed=99).query_key()   # seed moot
+    assert base.query_key() == \
+        CountRequest(k=4, mode="list", chunk=7).query_key()   # batching
+    assert base.query_key() != \
+        CountRequest(k=4, mode="list", limit=5).query_key()
+    pred = containing(3)
+    a = CountRequest(k=4, mode="list", predicate=pred)
+    b = CountRequest(k=4, mode="list", predicate=pred)
+    assert a.query_key() == b.query_key()                     # same object
+    c = CountRequest(k=4, mode="list", predicate=containing(3))
+    assert a.query_key() != c.query_key()                     # distinct fn
+
+
+def test_service_listing_tickets(corpus):
+    from repro.serving.cliques import CliqueService
+    g = corpus[0]
+    svc = CliqueService(max_sessions=2)
+    t1 = svc.submit(g, CountRequest(k=3, mode="list"))
+    t2 = svc.submit(g, CountRequest(k=3, mode="list", seed=5))  # coalesces
+    t3 = svc.submit(g, CountRequest(k=3, mode="list", limit=5))
+    r1, r2, r3 = t1.result(), t2.result(), t3.result()
+    assert r1.count == r2.count == 120
+    np.testing.assert_array_equal(r1.cliques, r2.cliques)
+    assert r1.cliques is not r2.cliques, \
+        "coalesced waiters must not share the mutable cliques array"
+    assert r3.count == 5 and r3.listing["truncated"]
+    assert svc.stats()["coalesced"] == 1
+
+
+@pytest.mark.slow
+def test_multiworker_shard_map_listing_matches_oracle():
+    """W > 1 takes the partition_for_workers walk in stream_cliques —
+    unreachable on the single in-process device — so run it under fake
+    host devices in a subprocess and pin the streamed set to the
+    oracle there."""
+    from conftest import run_with_devices
+    run_with_devices("""
+import numpy as np
+from repro.core import clique_count_bruteforce, clique_list_bruteforce
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import barabasi_albert
+g = barabasi_albert(96, 6, seed=3)
+eng = CliqueEngine(g, backend="shard_map")
+assert eng._backend("shard_map").n_workers == 4
+def canon(rows):
+    rows = np.sort(np.asarray(rows, np.int64), axis=1)
+    return rows[np.lexsort(rows.T[::-1])]
+for k in (3, 4):
+    for engine in ("dense", "bitset"):
+        rep = eng.submit(CountRequest(k=k, mode="list", engine=engine,
+                                      chunk=64))
+        assert rep.count == clique_count_bruteforce(g, k), (k, engine)
+        want = canon(clique_list_bruteforce(g, k))
+        assert np.array_equal(canon(rep.cliques), want), (k, engine)
+print("OK")
+""", n_devices=4)
+
+
+def test_len_list_equals_count_property():
+    """Hypothesis: on random graphs, len(listing) == exact count for
+    random (k, chunk) whenever no limit is set — the counting identity
+    and the emit recursion are the same recursion."""
+    hyp = pytest.importorskip("hypothesis")
+    given, settings, st = hyp.given, hyp.settings, hyp.strategies
+    from repro.graphs import random_graph_for_tests
+
+    @settings(max_examples=12, deadline=None)
+    @given(seed=st.integers(0, 10_000), k=st.integers(3, 5),
+           chunk=st.integers(1, 64),
+           engine=st.sampled_from(REPRS))
+    def inner(seed, k, chunk, engine):
+        g = random_graph_for_tests(seed, max_n=24)
+        eng = CliqueEngine(g)
+        rep = eng.submit(CountRequest(k=k, mode="list", chunk=chunk,
+                                      engine=engine))
+        assert rep.count == clique_count_bruteforce(g, k)
+        assert len(rep.cliques) == rep.count
+        if len(rep.cliques):
+            assert_valid_cliques(g, rep.cliques)
+
+    inner()

@@ -11,9 +11,8 @@ from repro.core import (build_oriented, check_lemma1,
 from repro.core.oracle import complete_graph_cliques
 from repro.core.order import ranks
 from repro.engine import CliqueEngine, CountRequest
-from repro.graphs import (complete_graph, erdos_renyi, erdos_renyi_m,
-                          from_edges, relabel, union,
-                          random_graph_for_tests)
+from repro.graphs import (complete_graph, erdos_renyi_m, from_edges, relabel,
+                          union, random_graph_for_tests)
 
 
 graphs = st.integers(min_value=0, max_value=10_000)

@@ -1,12 +1,10 @@
 """Sharding rules + cell construction + multi-device lowering (subprocess)."""
-import numpy as np
 import pytest
-import jax
 
 from conftest import run_with_devices
 
-from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ParallelConfig, SHAPES
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
 
 
 def test_param_spec_rules():

@@ -10,8 +10,8 @@ from repro.data.pipeline import make_pipeline
 from repro.models import init_params
 from repro.training.compression import (dequantize_int8, init_residuals,
                                         quantize_int8, wire_bytes_saved)
-from repro.training.optimizer import (OptConfig, adamw_update, global_norm,
-                                      init_opt_state, schedule)
+from repro.training.optimizer import (OptConfig, adamw_update, init_opt_state,
+                                      schedule)
 from repro.training.train_step import make_train_step
 
 CFG = get_smoke_config("tinyllama-1.1b")
