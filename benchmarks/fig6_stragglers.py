@@ -8,7 +8,21 @@
 (c) the §6 split round applied with a worker-count-aware threshold
     (max unit cost ≤ total/W): imbalance returns to ~1, global work
     unchanged — the paper's space-for-time trade, executed.
+
+``--scheduler`` adds the *runtime* counterpart on the out-of-core
+backend (``repro.scheduler``): wall-clock with and without straggler
+speculation under an injected 10×-task-time straggler, asserting that
+speculation recovers at least 2× of the penalty, plus the out-of-core
+memory claim (largest shard slice ≪ the single-host CSR footprint).
+One record per run is appended to ``BENCH_scheduler.json`` — the
+trajectory ``scripts/check_bench.py --scheduler`` gates.
 """
+import json
+import os
+import sys
+import tempfile
+import time
+
 import numpy as np
 
 from repro.core import build_oriented, build_plan
@@ -16,6 +30,9 @@ from repro.core.plan import balance_report, unit_cost
 from repro.core.split import split_heavy
 
 from .common import bench_suite, emit
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_scheduler.json")
 
 
 def _split_imbalance(og, k: int, n_workers: int) -> tuple[float, int]:
@@ -45,7 +62,129 @@ def _split_imbalance(og, k: int, n_workers: int) -> tuple[float, int]:
     return float(loads.max() / max(loads.mean(), 1e-9)), n_split_units
 
 
-def main() -> None:
+def _ooc_run(g, spill: str, *, straggle_s: float = 0.0,
+             speculate: bool = True, hot: str = "") -> dict:
+    """One fresh ooc query; returns the scheduler telemetry. A non-zero
+    ``straggle_s`` delays the first execution of task ``hot`` only —
+    the injected straggler speculative re-execution must route around."""
+    from repro.engine import CliqueEngine, CountRequest
+    from repro.scheduler import SchedulerConfig
+
+    hook = None
+    if straggle_s > 0:
+        def hook(tid, ei, _hot=hot, _d=straggle_s):
+            return _d if (tid == _hot and ei == 0) else 0.0
+    eng = CliqueEngine(g, ooc=SchedulerConfig(
+        n_workers=4, spill_dir=spill, target_tasks=24,
+        speculate=speculate, speculation_factor=2.0,
+        speculation_min_s=0.1, poll_s=0.005, delay_hook=hook))
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    tel["count"] = rep.count
+    return tel
+
+
+def scheduler_section() -> None:
+    """Wall-clock with/without speculation under an injected straggler,
+    on the planted benchmark graph, via the real ooc backend."""
+    from repro.graphs import planted_cliques
+    from repro.scheduler import compile_tasks
+    from repro.engine import CliqueEngine, CountRequest
+
+    g = planted_cliques(2500, 0.008, [14, 12, 12, 10], seed=3,
+                        name="planted-ooc")
+    spill = tempfile.mkdtemp(prefix="bench-ooc-")
+
+    # warm pass: compiles every tile size class, spills the shards, and
+    # gives the clean-run baseline the two chaos runs are judged against
+    warm = _ooc_run(g, spill)
+    base = _ooc_run(g, spill)
+    base_wall = base["wall_s"]
+    assert base["count"] == warm["count"]
+
+    # the injected straggler: 10× a typical task of the clean run
+    task_s = base_wall * base["n_workers"] / max(base["tasks"], 1)
+    straggle = max(10.0 * task_s, 1.0)
+    probe = CliqueEngine(g)
+    req = CountRequest(k=4)
+    entry, _ = probe._plan_entry(req)
+    from repro.scheduler import SchedulerConfig as _SC
+    hot = compile_tasks(entry, probe.og, req,
+                        elem_budget=_SC().tile_elem_budget,
+                        target_tasks=24)[0].task_id
+
+    nospec = _ooc_run(g, spill, straggle_s=straggle, speculate=False,
+                      hot=hot)
+    spec = _ooc_run(g, spill, straggle_s=straggle, speculate=True,
+                    hot=hot)
+    assert spec["count"] == base["count"] == nospec["count"]
+    assert spec["speculated"] >= 1, spec
+
+    penalty_nospec = max(nospec["wall_s"] - base_wall, 1e-9)
+    penalty_spec = max(spec["wall_s"] - base_wall, 1e-9)
+    recovery = penalty_nospec / penalty_spec
+    # the satellite's contract: speculation must claw back ≥2× of the
+    # straggler penalty (first-result-wins routes around the slow copy)
+    assert recovery >= 2.0, (
+        f"speculation recovered only {recovery:.2f}x of the straggler "
+        f"penalty (base={base_wall:.2f}s nospec={nospec['wall_s']:.2f}s "
+        f"spec={spec['wall_s']:.2f}s)")
+
+    # the out-of-core memory claim: the largest slice any worker holds
+    # is well below the single-host CSR footprint
+    slice_frac = base["max_slice_bytes"] / base["csr_bytes"]
+    assert slice_frac < 0.5, (
+        f"largest shard slice is {slice_frac:.2f} of the full CSR — "
+        "not meaningfully out-of-core")
+
+    emit(f"fig6d/{g.name}/speculation", spec["wall_s"],
+         f"base={base_wall:.3f}s;nospec={nospec['wall_s']:.3f}s;"
+         f"straggle={straggle:.2f}s;recovery={recovery:.1f}x")
+    emit(f"fig6d/{g.name}/memory", 0.0,
+         f"max_slice_bytes={base['max_slice_bytes']};"
+         f"csr_bytes={base['csr_bytes']};frac={slice_frac:.3f}")
+
+    row = {"graph": g.name, "k": 4, "tasks": base["tasks"],
+           "n_workers": base["n_workers"],
+           "base_wall_us": base_wall * 1e6,
+           "nospec_wall_us": nospec["wall_s"] * 1e6,
+           "spec_wall_us": spec["wall_s"] * 1e6,
+           "straggle_us": straggle * 1e6,
+           "recovery_ratio": recovery,
+           "stolen": base["stolen"],
+           "max_slice_bytes": base["max_slice_bytes"],
+           "csr_bytes": base["csr_bytes"],
+           "slice_frac": slice_frac}
+    _append_trajectory([row])
+
+
+def _append_trajectory(rows: list) -> None:
+    """Same atomic accumulate-across-PRs idiom as kernels_bench."""
+    import jax
+    history = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                history = json.load(f)
+        except ValueError:
+            os.replace(TRAJECTORY, TRAJECTORY + ".corrupt")
+            print(f"# unreadable {TRAJECTORY} moved aside; starting a "
+                  f"fresh trajectory", file=sys.stderr, flush=True)
+    history.append({
+        "ran_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend": jax.default_backend(),
+        "host": "ci" if os.environ.get("CI") else "dev",
+        "rows": rows,
+    })
+    tmp = TRAJECTORY + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, TRAJECTORY)
+    print(f"# scheduler trajectory appended to {TRAJECTORY} "
+          f"({len(history)} records)", file=sys.stderr, flush=True)
+
+
+def main(scheduler: bool = False) -> None:
     for g in bench_suite():
         og = build_oriented(g)
         k = 5
@@ -63,7 +202,15 @@ def main() -> None:
                  f"imbalance_no_split={rep['imbalance']:.2f};"
                  f"imbalance_with_split={post:.2f};"
                  f"split_units={n_units}")
+    if scheduler:
+        scheduler_section()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scheduler", action="store_true",
+                    help="also run the out-of-core scheduler section "
+                         "(appends to BENCH_scheduler.json)")
+    args = ap.parse_args()
+    main(scheduler=args.scheduler)

@@ -1,12 +1,16 @@
 #!/usr/bin/env python
-"""Kernel-perf regression gate over the BENCH_kernels.json trajectory.
+"""Perf regression gate over the benchmark trajectories.
 
 ``benchmarks/kernels_bench.py`` appends one record per run (rows keyed
 by (D, r) with wall times and per-tile bytes for the dense f32 and
-packed uint32 paths). This script turns that log into a gate:
+packed uint32 paths) to ``BENCH_kernels.json``;
+``benchmarks/fig6_stragglers.py --scheduler`` appends the out-of-core
+scheduler's speculation-recovery and memory-footprint record to
+``BENCH_scheduler.json``. This script turns those logs into gates:
 
   PYTHONPATH=src python scripts/check_bench.py --run     # nightly CI
   PYTHONPATH=src python scripts/check_bench.py           # compare last 2
+  PYTHONPATH=src python scripts/check_bench.py --scheduler --run
 
 ``--run`` executes a fresh benchmark (appending the new record), then
 compares it against the latest *prior* record. Failure conditions, per
@@ -41,6 +45,7 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TRAJECTORY = os.path.join(REPO, "BENCH_kernels.json")
+SCHED_TRAJECTORY = os.path.join(REPO, "BENCH_scheduler.json")
 
 
 def row_key(row: dict) -> tuple:
@@ -81,27 +86,74 @@ def compare(prev: dict, new: dict, ratio: float) -> list:
     return regressions
 
 
+def compare_scheduler(prev: dict, new: dict, ratio: float) -> list:
+    """Scheduler-trajectory gate, per graph row:
+
+    - ``base_wall_us`` (the clean ooc run) may not regress past
+      ``ratio`` — same provenance rules as the kernel wall gate;
+    - ``slice_frac`` (largest shard slice / full CSR footprint) is
+      analytic and may not grow at all: growth means slices stopped
+      being meaningfully out-of-core;
+    - ``recovery_ratio`` must stay ≥ 2.0 — the benchmark asserts this
+      before appending, so tripping it here means the record was edited
+      by hand or the contract was weakened.
+    """
+    regressions = []
+    prev_rows = {r["graph"]: r for r in prev["rows"]}
+    new_rows = {r["graph"]: r for r in new["rows"]}
+    for key in sorted(prev_rows.keys() | new_rows.keys()):
+        if key not in new_rows:
+            print(f"  note: row {key} vanished from the new run")
+            continue
+        if key not in prev_rows:
+            print(f"  note: row {key} is new in this run")
+            continue
+        p, n = prev_rows[key], new_rows[key]
+        if n["base_wall_us"] > ratio * p["base_wall_us"]:
+            regressions.append(
+                f"({key}) base_wall_us: {p['base_wall_us']:.0f} -> "
+                f"{n['base_wall_us']:.0f} "
+                f"({n['base_wall_us'] / p['base_wall_us']:.2f}x "
+                f"> {ratio}x)")
+        if n["slice_frac"] > p["slice_frac"]:
+            regressions.append(
+                f"({key}) slice_frac: {p['slice_frac']:.3f} -> "
+                f"{n['slice_frac']:.3f} (any growth fails)")
+        if n["recovery_ratio"] < 2.0:
+            regressions.append(
+                f"({key}) recovery_ratio: {n['recovery_ratio']:.2f} "
+                f"< 2.0 (speculation contract)")
+    return regressions
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--run", action="store_true",
-                    help="run benchmarks/kernels_bench.py first (appends "
-                         "a fresh record to the trajectory)")
+                    help="run the benchmark first (appends a fresh "
+                         "record to the trajectory)")
     ap.add_argument("--ratio", type=float, default=1.5,
                     help="wall-clock regression threshold (default 1.5x)")
+    ap.add_argument("--scheduler", action="store_true",
+                    help="gate BENCH_scheduler.json (the out-of-core "
+                         "scheduler trajectory) instead of the kernel "
+                         "one")
     args = ap.parse_args()
 
+    trajectory = SCHED_TRAJECTORY if args.scheduler else TRAJECTORY
     if args.run:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
             env.get("PYTHONPATH", "")
-        print("running benchmarks.kernels_bench ...", flush=True)
-        subprocess.run([sys.executable, "-m", "benchmarks.kernels_bench"],
-                       cwd=REPO, env=env, check=True)
+        cmd = (["-m", "benchmarks.fig6_stragglers", "--scheduler"]
+               if args.scheduler else ["-m", "benchmarks.kernels_bench"])
+        print(f"running {cmd[1]} ...", flush=True)
+        subprocess.run([sys.executable] + cmd, cwd=REPO, env=env,
+                       check=True)
 
-    if not os.path.exists(TRAJECTORY):
-        print(f"no trajectory at {TRAJECTORY}; run with --run first")
+    if not os.path.exists(trajectory):
+        print(f"no trajectory at {trajectory}; run with --run first")
         return 1
-    with open(TRAJECTORY) as f:
+    with open(trajectory) as f:
         history = json.load(f)
     if len(history) < 2:
         print(f"only {len(history)} record(s) in the trajectory — "
@@ -120,8 +172,9 @@ def main() -> int:
               "and the wall gate re-arms.")
     print(f"comparing run {new.get('ran_at')} against "
           f"{prev.get('ran_at')} ({len(new['rows'])} rows)")
-    regressions = compare(prev, new,
-                          args.ratio if same_machine else float("inf"))
+    gate = compare_scheduler if args.scheduler else compare
+    regressions = gate(prev, new,
+                       args.ratio if same_machine else float("inf"))
     if regressions:
         print("PERF REGRESSION:")
         for r in regressions:
@@ -133,15 +186,15 @@ def main() -> int:
             # not alarm once and silently ratchet the baseline down.
             # tmp + replace, like append_trajectory: a kill mid-write
             # must not corrupt the whole history
-            tmp = TRAJECTORY + ".tmp"
+            tmp = trajectory + ".tmp"
             with open(tmp, "w") as f:
                 json.dump(history[:-1], f, indent=1)
-            os.replace(tmp, TRAJECTORY)
-            print(f"regressed record dropped from {TRAJECTORY}; baseline "
+            os.replace(tmp, trajectory)
+            print(f"regressed record dropped from {trajectory}; baseline "
                   f"stays at {prev.get('ran_at')}")
         return 1
     print("perf gate ok: no wall-clock regression over "
-          f"{args.ratio}x, no per-tile-byte growth")
+          f"{args.ratio}x, no analytic-metric growth")
     return 0
 
 

@@ -30,5 +30,14 @@ python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5 \
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
     --rel-error 0.1 --assert-golden
 
+# out-of-core scheduler smoke: 4 workers over spilled shard slices with
+# an injected task fault (retried) AND a forced straggler (speculated —
+# both asserted by the launcher), still reproducing the golden count
+ooc_spill="$(mktemp -d)"
+trap 'rm -rf "$ooc_spill"' EXIT
+python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 4 \
+    --backend ooc --workers 4 --spill-dir "$ooc_spill" \
+    --inject-fault 1 --inject-straggler 4 --assert-golden
+
 python -m repro.launch.count --serve --graph rmat:7:4,er:60:150 \
     --k 3,4 --repeat 2 --max-sessions 1

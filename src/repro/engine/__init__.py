@@ -13,12 +13,13 @@ entry points are thin deprecated wrappers over this engine.
 from .backends import Backend, ExecutableCache, LocalBackend, ShardMapBackend
 from .engine import (CliqueEngine, PlanEntry, derive_sweep_seed,
                      graph_fingerprint)
-from .report import (ADAPTIVE_METHODS, BACKENDS, METHODS, MODES,
-                     TILE_ENGINES, CountReport, CountRequest)
+from .report import (ADAPTIVE_METHODS, BACKENDS, LISTING_BACKENDS,
+                     METHODS, MODES, TILE_ENGINES, CountReport,
+                     CountRequest)
 
 __all__ = [
     "CliqueEngine", "CountRequest", "CountReport", "PlanEntry",
     "Backend", "LocalBackend", "ShardMapBackend", "ExecutableCache",
-    "ADAPTIVE_METHODS", "BACKENDS", "METHODS", "MODES", "TILE_ENGINES",
-    "derive_sweep_seed", "graph_fingerprint",
+    "ADAPTIVE_METHODS", "BACKENDS", "LISTING_BACKENDS", "METHODS",
+    "MODES", "TILE_ENGINES", "derive_sweep_seed", "graph_fingerprint",
 ]

@@ -80,6 +80,11 @@ class Backend(abc.ABC):
     def run(self, eng, entry, req, key) -> tuple[float, Optional[np.ndarray]]:
         """Returns (estimate, per_node or None)."""
 
+    def pop_telemetry(self) -> Optional[dict]:
+        """Backend-specific telemetry of the last ``run`` (consumed by
+        ``CliqueEngine.submit`` into ``report.cache``), or None."""
+        return None
+
 
 def tile_executable(eng, kind: str, tile_repr: str, capacity: int, r: int,
                     method: str):

@@ -194,10 +194,15 @@ class CliqueEngine:
     Parameters
     ----------
     graph: the input graph (undirected edge list container).
-    backend: default execution backend — "local" (jnp), "pallas", or
-        "shard_map"; any :class:`CountRequest` may override per query.
+    backend: default execution backend — "local" (jnp), "pallas",
+        "shard_map", or "ooc" (out-of-core partitioned execution, see
+        :mod:`repro.scheduler`); any :class:`CountRequest` may override
+        per query.
     mesh/axis: mesh for the shard_map backend (default: 1-D mesh over
         all local devices).
+    ooc: a :class:`repro.scheduler.SchedulerConfig` for the "ooc"
+        backend (worker count, spill dir, resume, speculation knobs);
+        None uses the scheduler defaults.
     og: precomputed oriented CSR (skips round 1 — used by the legacy
         wrappers; normal callers let the engine build it).
     """
@@ -207,7 +212,8 @@ class CliqueEngine:
                  axis: str = "workers",
                  og: Optional[OrientedGraph] = None,
                  local_tile_budget: int = 1 << 23,
-                 dist_tile_budget: int = 1 << 22) -> None:
+                 dist_tile_budget: int = 1 << 22,
+                 ooc=None) -> None:
         t0 = time.perf_counter()
         self.graph = graph
         self.og = og if og is not None else build_oriented(graph)
@@ -220,6 +226,7 @@ class CliqueEngine:
         self._mesh, self._axis = mesh, axis
         self._local_budget = local_tile_budget
         self._dist_budget = dist_tile_budget
+        self._ooc_cfg = ooc        # scheduler.SchedulerConfig or None
         self._plans: dict[tuple, PlanEntry] = {}
         self._plan_hits = 0
         self._plan_misses = 0
@@ -281,6 +288,9 @@ class CliqueEngine:
             elif name == "shard_map":
                 b = ShardMapBackend(self._mesh, self._axis,
                                     self._dist_budget)
+            elif name == "ooc":
+                from ..scheduler import OocBackend
+                b = OocBackend(self._ooc_cfg)
             else:
                 raise ValueError(f"unknown backend {name!r}")
             self._backends[name] = b
@@ -367,6 +377,9 @@ class CliqueEngine:
             n_workers=W,
             params={"p": req.p, "colors": req.colors, "seed": req.seed,
                     "backend": backend.name})
+        tel = backend.pop_telemetry()
+        if tel is not None:
+            report.cache["scheduler"] = tel
         if cliques is not None:
             report.cliques = cliques
             report.listing = dict(listing_stats,

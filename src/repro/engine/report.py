@@ -14,7 +14,10 @@ import numpy as np
 from ..core import mrc as mrc_mod
 
 METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "auto")
-BACKENDS = ("local", "pallas", "shard_map")
+BACKENDS = ("local", "pallas", "shard_map", "ooc")
+# listing streams tiles through in-memory emit kernels; the ooc backend
+# trades that residency away for bounded memory, so it only counts
+LISTING_BACKENDS = ("local", "pallas", "shard_map")
 ADAPTIVE_METHODS = ("auto", "edge", "color")   # may carry a rel_error target
 TILE_ENGINES = ("auto", "dense", "bitset")     # tile representation choice
 MODES = ("count", "list")                      # scalar answer vs enumeration
@@ -96,6 +99,16 @@ class CountRequest:
                     f"{ADAPTIVE_METHODS}, got {self.method!r}")
         if self.mode not in MODES:
             raise ValueError(f"unknown mode {self.mode!r}; one of {MODES}")
+        if self.backend == "ooc":
+            if self.mode == "list":
+                raise ValueError(
+                    "listing needs the in-memory emit path; the ooc "
+                    f"backend only counts (backends: {LISTING_BACKENDS})")
+            if self.is_adaptive:
+                raise ValueError(
+                    "adaptive (accuracy-targeted) queries probe "
+                    "interactively; run them on local/pallas and save "
+                    "the ooc backend for the full-size exact pass")
         if self.mode == "list":
             if self.method != "exact":
                 raise ValueError(

@@ -456,7 +456,7 @@ def run_adaptive(eng, backend, entry, req,
     ``(estimate, per_node, info)``; ``info`` carries the CI fields and
     controller telemetry the engine folds into the CountReport."""
     policy = policy or DEFAULT_POLICY
-    if backend.name == "shard_map":
+    if backend.name not in ("local", "pallas"):
         raise ValueError("adaptive (accuracy-targeted) queries need the "
                          "per-node replicate structure; use the local or "
                          "pallas backend")

@@ -12,6 +12,12 @@ query, and ``--k`` accepts a comma list for a batched session sweep.
       --assert-golden                  # accuracy-targeted (repro.estimator)
   PYTHONPATH=src python -m repro.launch.count --graph rmat:10:8 --k 4 \
       --list --limit 20               # enumerate cliques (repro.listing)
+  PYTHONPATH=src python -m repro.launch.count \
+      --graph corpus:planted_1200_12_16_40 --k 4 --backend ooc \
+      --workers 4 --spill-dir /tmp/spill --inject-fault 1 \
+      --inject-straggler 4 --assert-golden   # out-of-core + chaos smoke
+  PYTHONPATH=src python -m repro.launch.count --graph ... --backend ooc \
+      --resume                        # continue a killed run's ledger
 
 ``--serve`` drives the multi-graph :class:`CliqueService` instead:
 ``--graph`` takes a comma list of specs, ``--repeat R`` submits the
@@ -135,9 +141,10 @@ def main() -> int:
                          "(or exact count) contains the checked-in "
                          "golden count (the tier-1 estimator smoke)")
     ap.add_argument("--backend", default=None,
-                    choices=["local", "pallas", "shard_map"],
+                    choices=["local", "pallas", "shard_map", "ooc"],
                     help="engine backend (default local; --distributed/"
-                         "--devices imply shard_map)")
+                         "--devices imply shard_map; ooc = out-of-core "
+                         "partitioned execution, see docs/scheduler.md)")
     ap.add_argument("--engine", default="jnp",
                     choices=["jnp", "pallas", "bitset", "dense"],
                     help="--engine pallas ≡ --backend pallas (deprecated "
@@ -164,6 +171,28 @@ def main() -> int:
                          "stream memory; default %d)" % (1 << 16))
     ap.add_argument("--list-show", type=int, default=3,
                     help="--list: cliques to print per query (default 3)")
+    ap.add_argument("--workers", type=int, default=4,
+                    help="--backend ooc: scheduler worker-pool size")
+    ap.add_argument("--spill-dir", default=None,
+                    help="--backend ooc: shard-slice spill directory "
+                         "(default $TMPDIR/repro-ooc; reused across runs "
+                         "keyed by graph fingerprint + plan signature)")
+    ap.add_argument("--resume", action="store_true",
+                    help="--backend ooc: replay the task ledger of a "
+                         "prior (killed) run — completed tasks are not "
+                         "recounted")
+    ap.add_argument("--inject-fault", type=int, default=0,
+                    help="--backend ooc: fail the first N task "
+                         "executions (retried with backoff; the smoke "
+                         "asserts the answer is unchanged)")
+    ap.add_argument("--inject-straggler", type=float, default=0.0,
+                    help="--backend ooc: delay one task's first "
+                         "execution by this many seconds — forces the "
+                         "straggler detector to speculate a duplicate")
+    ap.add_argument("--ooc-task-delay", type=float, default=0.0,
+                    help="--backend ooc: uniform per-execution delay in "
+                         "seconds (stretches the run so a kill-and-"
+                         "resume demo has a mid-run to kill into)")
     ap.add_argument("--serve", action="store_true",
                     help="drive a CliqueService over a comma list of "
                          "--graph specs (multi-graph pool + coalescing)")
@@ -254,8 +283,39 @@ def main() -> int:
             golden = json.load(f)
         assert g.name in golden, \
             f"--assert-golden needs a corpus: graph, got {g.name!r}"
+    ooc_cfg = None
+    if backend == "ooc" or any(r.backend == "ooc" for r in reqs):
+        import threading
+
+        from ..runtime.faults import FaultDomain
+        from ..scheduler import SchedulerConfig
+        delay_hook = None
+        if args.inject_straggler > 0 or args.ooc_task_delay > 0:
+            armed = {"straggler": args.inject_straggler > 0}
+            hook_lock = threading.Lock()
+
+            def delay_hook(tid, ei):
+                d = args.ooc_task_delay
+                if ei == 0:
+                    with hook_lock:
+                        if armed["straggler"]:
+                            armed["straggler"] = False
+                            d += args.inject_straggler
+                return d
+        ooc_cfg = SchedulerConfig(
+            n_workers=args.workers, spill_dir=args.spill_dir,
+            resume=args.resume,
+            faults=(FaultDomain(fail_at=tuple(range(args.inject_fault)),
+                                backoff_s=0.01)
+                    if args.inject_fault else None),
+            delay_hook=delay_hook,
+            # tight detector knobs when a straggler is forced, so the
+            # smoke doesn't wait out production-sized envelopes
+            **({"speculation_min_s": 0.05, "speculation_factor": 2.0,
+                "poll_s": 0.005} if args.inject_straggler > 0 else {}))
     t0 = time.perf_counter()
-    eng = CliqueEngine(g, backend=backend)
+    eng = CliqueEngine(g, backend=backend, ooc=ooc_cfg)
+    sched_totals: dict = {}
     for rep in eng.submit_many(reqs):
         row = {
             "k": rep.k, "method": rep.method, "backend": rep.backend,
@@ -288,6 +348,17 @@ def main() -> int:
             top = rep.per_node.argsort()[-3:][::-1]
             row["top_nodes"] = top.tolist()
         print(json.dumps(row, indent=1, default=str))
+        tel = rep.cache.get("scheduler")
+        if tel is not None:
+            print(json.dumps({"scheduler": {
+                k: tel[k] for k in
+                ("tasks", "run", "resumed", "stolen", "speculated",
+                 "speculation_wins", "retried", "n_workers", "spill",
+                 "spill_bytes", "max_slice_bytes", "csr_bytes",
+                 "wall_s")}}, indent=1, default=str))
+            sched_totals = {k: sched_totals.get(k, 0) + tel[k]
+                            for k in ("retried", "speculated", "run",
+                                      "resumed")}
         if golden is not None:
             pinned = golden[g.name]["counts"]
             assert str(rep.k) in pinned, \
@@ -300,6 +371,16 @@ def main() -> int:
             else:
                 assert rep.count == truth, (rep.k, rep.count, truth)
             print(f"golden ok: q_{rep.k}={truth} within reported bounds")
+    if sched_totals:
+        # the injected-chaos smoke: the faults/straggler actually fired
+        # AND every count above already matched --assert-golden
+        if args.inject_fault:
+            assert sched_totals["retried"] >= 1, \
+                "--inject-fault produced no retries"
+        if args.inject_straggler > 0:
+            assert sched_totals["speculated"] >= 1, \
+                "--inject-straggler was never speculated"
+        print(f"scheduler totals: {json.dumps(sched_totals)}")
     print(json.dumps({"session": eng.session_stats()}, indent=1,
                      default=str))
     print(f"wall: {time.perf_counter() - t0:.2f}s "

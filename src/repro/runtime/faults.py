@@ -4,12 +4,17 @@ Real pods lose nodes; the orchestration answer is (a) checkpoint/restart
 for the training loop and (b) idempotent, retryable work units for the
 clique engine's rounds. Both are driven through :class:`FaultDomain` so
 tests can inject deterministic failures and assert bit-identical
-recovery.
+recovery. The out-of-core scheduler (:mod:`repro.scheduler`) builds its
+per-task retry loop on the same domain: injection via
+:meth:`FaultDomain.maybe_fail`, sleeps via the exponential-backoff
+schedule below.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
+import zlib
 from typing import Callable, Optional
 
 
@@ -17,25 +22,92 @@ class SimulatedFault(RuntimeError):
     pass
 
 
+def backoff_delay(attempt: int, *, base_s: float, factor: float = 2.0,
+                  cap_s: float = 30.0, jitter: float = 0.0,
+                  seed: int = 0) -> float:
+    """Exponential backoff with deterministic jitter.
+
+    ``attempt`` is 1-based (the sleep before the attempt-th retry). The
+    geometric term ``base_s * factor**(attempt-1)`` is capped at
+    ``cap_s`` *before* jitter, then a deterministic fraction of the
+    capped delay — ``jitter * frac(seed, attempt)`` with ``frac`` a
+    pure hash into [0, 1) — is added on top, so two domains with the
+    same seed sleep the identical schedule (reproducible tests, no
+    shared-RNG coupling between concurrent retry loops) while different
+    seeds decorrelate (no thundering-herd resubmission).
+    """
+    assert attempt >= 1, "attempt is 1-based"
+    d = min(base_s * factor ** (attempt - 1), cap_s)
+    if jitter:
+        # crc32 as a cheap stable hash: identical across processes and
+        # platforms (unlike hash()), seeded, uniform enough for jitter
+        h = zlib.crc32(f"{seed}:{attempt}".encode()) & 0xFFFFFFFF
+        d += d * jitter * (h / 2**32)
+    return d
+
+
 @dataclasses.dataclass
 class FaultDomain:
-    """Deterministic failure injector: fails the Nth..(N+k)th calls."""
+    """Deterministic failure injector + retry/backoff policy.
+
+    Injection: :meth:`maybe_fail` raises :class:`SimulatedFault` when
+    the global call index is listed in ``fail_at`` (thread-safe — the
+    scheduler's workers share one domain). Retry: :meth:`run` wraps a
+    thunk with the injection check and an exponential-backoff retry
+    loop (``backoff_s`` is the base delay; ``backoff_factor`` the
+    per-retry growth, capped at ``backoff_cap_s``, with deterministic
+    ``jitter`` seeded by ``jitter_seed``). Every sleep actually taken
+    is recorded in ``sleeps`` so tests pin the schedule.
+    """
     fail_at: tuple[int, ...] = ()
     calls: int = 0
     max_retries: int = 3
     backoff_s: float = 0.0
+    backoff_factor: float = 2.0
+    backoff_cap_s: float = 30.0
+    jitter: float = 0.0
+    jitter_seed: int = 0
+    sleeps: list = dataclasses.field(default_factory=list)
+    _lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
+
+    def maybe_fail(self) -> None:
+        """Count one work-unit attempt; raise if it is an injected
+        failure. Thread-safe; the counter is the injection index."""
+        with self._lock:
+            idx = self.calls
+            self.calls += 1
+        if idx in self.fail_at:
+            raise SimulatedFault(f"injected fault at call {idx}")
+
+    def backoff_schedule(self, attempt: int) -> float:
+        """Delay before the ``attempt``-th retry (1-based)."""
+        return backoff_delay(attempt, base_s=self.backoff_s,
+                             factor=self.backoff_factor,
+                             cap_s=self.backoff_cap_s,
+                             jitter=self.jitter, seed=self.jitter_seed)
+
+    def sleep_before_retry(self, attempt: int) -> float:
+        """Sleep the schedule's delay for retry ``attempt`` and record
+        it (the scheduler's own retry loop calls this directly)."""
+        d = self.backoff_schedule(attempt)
+        self.sleeps.append(d)
+        if d:
+            time.sleep(d)
+        return d
 
     def run(self, fn: Callable, *args, **kwargs):
         attempts = 0
         while True:
-            self.calls += 1
-            if self.calls - 1 in self.fail_at:
+            try:
+                self.maybe_fail()
+            except SimulatedFault:
                 attempts += 1
                 if attempts > self.max_retries:
                     raise SimulatedFault(
                         f"work unit failed {attempts} times")
                 if self.backoff_s:
-                    time.sleep(self.backoff_s)
+                    self.sleep_before_retry(attempts)
                 continue
             return fn(*args, **kwargs)
 
@@ -49,6 +121,9 @@ class RoundScheduler:
     mid-round crash (journal says which units completed) only re-executes
     the missing ones. The engine's units are pure functions of
     (graph, plan, seed), so re-execution is deterministic.
+
+    The production version of this idea — disk-backed ledger, work
+    stealing, straggler speculation — is :mod:`repro.scheduler`.
     """
     faults: Optional[FaultDomain] = None
     journal: dict = dataclasses.field(default_factory=dict)

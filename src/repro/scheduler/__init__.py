@@ -1,0 +1,29 @@
+"""Out-of-core partitioned execution (``CountRequest(backend="ooc")``).
+
+The scheduler runs one planned counting query as a ledger of
+idempotent bucket-chunk tasks over disk-backed CSR shard slices:
+
+- :mod:`repro.scheduler.tasks` — compile the cached plan into tasks
+  carrying analytic cost (LPT seeding, straggler normalization)
+- :mod:`repro.scheduler.store` — spill/mmap per-task closure slices;
+  host memory per worker is O(slice), not O(graph)
+- :mod:`repro.scheduler.ledger` — JSONL completion journal; a killed
+  driver resumes without recounting
+- :mod:`repro.scheduler.driver` — work-stealing pool with straggler
+  re-execution and backoff retry
+- :mod:`repro.scheduler.backend` — the engine-facing ``"ooc"`` backend
+
+See ``docs/scheduler.md``.
+"""
+from .backend import OocBackend
+from .driver import SchedulerConfig, run_query
+from .ledger import TaskLedger, TaskResult, query_signature
+from .store import ShardStore, SliceCSR, csr_footprint_bytes
+from .tasks import Task, compile_tasks, lpt_assign, plan_signature
+
+__all__ = [
+    "OocBackend", "SchedulerConfig", "run_query",
+    "TaskLedger", "TaskResult", "query_signature",
+    "ShardStore", "SliceCSR", "csr_footprint_bytes",
+    "Task", "compile_tasks", "lpt_assign", "plan_signature",
+]

@@ -1,0 +1,39 @@
+"""The ``"ooc"`` engine backend: out-of-core partitioned execution.
+
+A thin :class:`~repro.engine.backends.Backend` adapter around
+:func:`repro.scheduler.driver.run_query` — compile the cached plan into
+a task ledger, spill shard slices, and drive them through the
+work-stealing pool. Stashes the scheduler telemetry of the last run so
+``CliqueEngine.submit`` can surface it as ``report.cache["scheduler"]``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..engine.backends import Backend
+from .driver import SchedulerConfig, run_query
+
+
+class OocBackend(Backend):
+    name = "ooc"
+
+    def __init__(self, cfg: Optional[SchedulerConfig] = None) -> None:
+        self.cfg = cfg if cfg is not None else SchedulerConfig()
+        self._last_stats: Optional[dict] = None
+
+    @property
+    def n_workers(self) -> int:
+        return self.cfg.n_workers
+
+    def run(self, eng, entry, req, key) -> tuple[float,
+                                                 Optional[np.ndarray]]:
+        estimate, per_node, stats = run_query(eng, entry, req, key,
+                                              self.cfg)
+        self._last_stats = stats
+        return estimate, per_node
+
+    def pop_telemetry(self) -> Optional[dict]:
+        stats, self._last_stats = self._last_stats, None
+        return stats

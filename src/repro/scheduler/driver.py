@@ -1,0 +1,426 @@
+"""The scheduler's driver: a work-stealing worker pool with straggler
+speculation, per-task retry, and ledger checkpointing.
+
+Execution model
+---------------
+``compile_tasks`` turns the cached plan into idempotent tasks;
+``lpt_assign`` seeds one deque per worker (heaviest-first, least-loaded
+— the plan partitioner's LPT balancing at task granularity). Each
+worker pops from the *front* of its own deque (its heaviest remaining
+task) and, when empty, steals from the *back* of the fullest peer (the
+lightest task — the classic deque discipline that keeps steals cheap
+and rare). Tasks are pure functions of (graph, plan, request, seed), so
+every recovery mechanism below is safe by idempotence:
+
+- **retry** — a failed execution (worker fault, injected or real) is
+  retried up to ``max_retries`` times with exponential backoff +
+  deterministic per-task jitter (:mod:`repro.runtime.faults`).
+- **speculation** — the paper's Fig. 6 "curse of the last reducer" at
+  runtime: once enough tasks have finished to estimate a per-cost rate
+  distribution, any task whose elapsed time exceeds
+  ``factor × p95_rate × cost`` is re-enqueued speculatively;
+  first-result-wins, the loser is discarded.
+- **resume** — completions are journaled to the task ledger the moment
+  they land; a killed driver replays the ledger and recounts nothing.
+
+Aggregation is associative and performed in sorted-task-id order, so
+the answer is independent of completion order, worker count, stealing,
+and speculation — bit-exact against the single-host backends.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import tempfile
+import threading
+import time
+import zlib
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.count import _pick_tile_b, tile_batch_repr
+from ..core.extract import DeviceCSR
+from ..runtime.faults import FaultDomain, backoff_delay
+from .ledger import TaskLedger, TaskResult, query_signature
+from .store import ShardStore, csr_footprint_bytes
+from .tasks import Task, compile_tasks, lpt_assign, plan_signature
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    """Knobs for the out-of-core backend (``CountRequest(backend="ooc")``
+    on an engine built with ``CliqueEngine(g, ooc=SchedulerConfig(...))``).
+    """
+    n_workers: int = 4
+    spill_dir: Optional[str] = None      # default: $TMPDIR/repro-ooc
+    resume: bool = False                 # replay a prior run's ledger
+    tile_elem_budget: int = 1 << 21      # per-worker tile budget (f32 elems)
+    target_tasks: int = 32               # ledger granularity (W-independent)
+    max_units_per_task: int = 4096
+    # straggler re-execution
+    speculate: bool = True
+    speculation_factor: float = 4.0      # × expected (p95 rate · cost)
+    speculation_quantile: float = 0.95
+    speculation_min_done: int = 3        # completions before rates exist
+    speculation_min_s: float = 0.2       # absolute floor (no µs-task churn)
+    poll_s: float = 0.02                 # monitor period
+    # per-task retry (exponential backoff, deterministic per-task jitter)
+    max_retries: int = 3
+    retry_backoff_s: float = 0.05
+    retry_backoff_cap_s: float = 2.0
+    retry_jitter: float = 0.25
+    # test/CI hooks
+    faults: Optional[FaultDomain] = None  # injected failures (maybe_fail)
+    delay_hook: Optional[Callable[[str, int], float]] = None
+    # delay_hook(task_id, execution_index) -> extra seconds; execution 0
+    # is the original run, ≥1 are speculative re-executions — so a test
+    # can delay only the original and watch speculation win
+
+
+def _pow2_pad(a: np.ndarray, fill: int) -> np.ndarray:
+    """Pad a 1-D array to the next power of two so slice shapes repeat
+    across tasks and the jitted tile executables compile once per size
+    class instead of once per task."""
+    n = max(int(a.size), 1)
+    target = 1 << (n - 1).bit_length()
+    if target == a.size:
+        return np.ascontiguousarray(a)
+    out = np.full(target, fill, a.dtype)
+    out[:a.size] = a
+    return out
+
+
+def _fixed_batches(arr: np.ndarray, B: int, fill: int):
+    for i in range(0, max(len(arr), 1), B):
+        tile = arr[i:i + B]
+        if len(tile) < B:
+            tile = np.concatenate(
+                [tile, np.full(B - len(tile), fill, arr.dtype)])
+        yield tile
+
+
+def _make_runner(eng, store: ShardStore, req, key, cfg: SchedulerConfig):
+    """Build the pure per-task execution body. Returns
+    ``run(task) -> (TaskResult, loaded_bytes)``."""
+    from ..engine.backends import split_executable, tile_executable
+    r = req.k - 1
+    method = req.effective_method
+    p, c = float(req.p), int(req.colors)
+    per_node = bool(req.return_per_node)
+
+    def run(task: Task) -> tuple[TaskResult, int]:
+        t0 = time.perf_counter()
+        sl = store.load(task.task_id)
+        csr = DeviceCSR(
+            offsets=jnp.asarray(np.ascontiguousarray(sl.offsets)),
+            nbrs_rank=jnp.asarray(_pow2_pad(sl.nbrs_rank, -1)),
+            nbrs_byid=jnp.asarray(_pow2_pad(sl.nbrs_byid, -1)),
+            out_deg=jnp.asarray(np.ascontiguousarray(sl.out_deg)))
+        loaded = int(csr.offsets.nbytes + csr.nbrs_rank.nbytes
+                     + csr.nbrs_byid.nbytes + csr.out_deg.nbytes)
+        batch_repr = tile_batch_repr(task.tile_repr, method)
+        # pow2-rounded unit count, so tile widths fall into a handful of
+        # size classes shared across tasks (≤ log₂ distinct compiles per
+        # capacity) instead of one compile per task — while still
+        # shrinking with the task so small tasks aren't mostly padding
+        width = 1 << (max(task.n_units, 1) - 1).bit_length()
+        B = _pick_tile_b(width, task.capacity, cfg.tile_elem_budget,
+                         batch_repr)
+        total = 0.0
+        ids: list[np.ndarray] = []
+        vals: list[np.ndarray] = []
+
+        def accumulate(v, tile):
+            nonlocal total
+            v = np.asarray(jax.block_until_ready(v), np.float64)
+            total += float(v.sum())
+            if per_node:
+                sel = tile >= 0
+                ids.append(tile[sel].astype(np.int64))
+                vals.append(v[sel])
+
+        if task.kind == "bucket":
+            fn = tile_executable(eng, "jnp", task.tile_repr,
+                                 task.capacity, r, method)
+            for tile in _fixed_batches(task.units, B, -1):
+                accumulate(fn(csr, jnp.asarray(tile), key, p=p, c=c),
+                           tile)
+        else:
+            fn = split_executable(eng, "jnp", task.tile_repr,
+                                  task.capacity, r, method)
+            pivots = list(_fixed_batches(task.pivots, B, 0))
+            for tile, tp in zip(_fixed_batches(task.units, B, -1),
+                                pivots):
+                accumulate(fn(csr, jnp.asarray(tile), jnp.asarray(tp),
+                              key, p=p, c=c), tile)
+        res = TaskResult(task_sum=total,
+                         elapsed_s=time.perf_counter() - t0)
+        if per_node:
+            res.unit_ids = (np.concatenate(ids) if ids
+                            else np.zeros(0, np.int64))
+            res.unit_vals = (np.concatenate(vals) if vals
+                             else np.zeros(0, np.float64))
+        return res, loaded
+
+    return run
+
+
+class Driver:
+    """Runs one compiled task ledger to completion."""
+
+    def __init__(self, tasks: list[Task], run_task, cfg: SchedulerConfig,
+                 ledger: TaskLedger,
+                 completed: dict[str, TaskResult]) -> None:
+        self.cfg = cfg
+        self.tasks = {t.task_id: t for t in tasks}
+        self.run_task = run_task
+        self.ledger = ledger
+        self.results: dict[str, TaskResult] = dict(completed)
+        pending = [t for t in tasks if t.task_id not in completed]
+        self.deques = [collections.deque(d)
+                       for d in lpt_assign(pending, cfg.n_workers)]
+        self.spec_queue: collections.deque[Task] = collections.deque()
+        self.spec_issued: set[str] = set()
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        # (task_id, execution_idx) -> {"since": t, "cost": c}
+        self.running: dict[tuple[str, int], dict] = {}
+        self.exec_counts: collections.Counter = collections.Counter()
+        # per-cost completion rates feed the straggler detector; resumed
+        # completions contribute too, so a resumed run can speculate
+        # from its first fresh task
+        self.rates: list[float] = [
+            res.elapsed_s / max(self.tasks[tid].cost, 1.0)
+            for tid, res in completed.items()
+            if res.elapsed_s > 0 and tid in self.tasks]
+        self.elapsed: list[float] = [
+            res.elapsed_s for tid, res in completed.items()
+            if res.elapsed_s > 0 and tid in self.tasks]
+        self.failure: Optional[BaseException] = None
+        self.failed_task: Optional[str] = None
+        self.stats = collections.Counter(
+            run=0, stolen=0, speculated=0, speculation_wins=0, retried=0)
+        self.peak_task_bytes = 0
+
+    # -- scheduling --------------------------------------------------------
+
+    def _finished(self) -> bool:
+        return len(self.results) >= len(self.tasks)
+
+    def _take(self, wid: int) -> Optional[tuple[Task, bool]]:
+        """Next task for worker ``wid`` (caller holds the lock)."""
+        if self.deques[wid]:
+            return self.deques[wid].popleft(), False
+        if self.spec_queue:
+            return self.spec_queue.popleft(), True
+        victims = sorted(range(len(self.deques)),
+                         key=lambda w: -len(self.deques[w]))
+        for v in victims:
+            if v != wid and self.deques[v]:
+                self.stats["stolen"] += 1
+                return self.deques[v].pop(), False   # steal the tail
+        return None
+
+    def _worker_loop(self, wid: int) -> None:
+        while True:
+            with self.cond:
+                item = self._take(wid)
+                while item is None:
+                    if self._finished() or self.failure is not None:
+                        return
+                    if not self.running:
+                        # nothing queued, nothing running, not finished:
+                        # every remaining task failed — bail out
+                        return
+                    self.cond.wait(self.cfg.poll_s)
+                    item = self._take(wid)
+                task, is_spec = item
+                if task.task_id in self.results:   # speculation leftover
+                    continue
+                exec_idx = self.exec_counts[task.task_id]
+                self.exec_counts[task.task_id] += 1
+                self.running[(task.task_id, exec_idx)] = {
+                    "since": time.perf_counter(), "cost": task.cost}
+            self._execute(task, exec_idx, is_spec)
+
+    def _execute(self, task: Task, exec_idx: int, is_spec: bool) -> None:
+        res = loaded = None
+        attempt = 0
+        while True:
+            try:
+                if self.cfg.delay_hook is not None and attempt == 0:
+                    d = float(self.cfg.delay_hook(task.task_id, exec_idx))
+                    if d > 0:
+                        time.sleep(d)
+                if self.cfg.faults is not None:
+                    self.cfg.faults.maybe_fail()
+                res, loaded = self.run_task(task)
+                break
+            except BaseException as e:  # noqa: BLE001 — retried/reported
+                attempt += 1
+                with self.cond:
+                    self.stats["retried"] += 1
+                    give_up = attempt > self.cfg.max_retries
+                    if give_up:
+                        self.stats["retried"] -= 1  # last one wasn't a retry
+                        if self.failure is None:
+                            self.failure = e
+                            self.failed_task = task.task_id
+                        self.running.pop((task.task_id, exec_idx), None)
+                        self.cond.notify_all()
+                        return
+                time.sleep(backoff_delay(
+                    attempt, base_s=self.cfg.retry_backoff_s,
+                    factor=2.0, cap_s=self.cfg.retry_backoff_cap_s,
+                    jitter=self.cfg.retry_jitter,
+                    seed=zlib.crc32(task.task_id.encode())))
+        with self.cond:
+            self.running.pop((task.task_id, exec_idx), None)
+            if task.task_id not in self.results:   # first result wins
+                self.results[task.task_id] = res
+                self.ledger.append(task.task_id, res)
+                self.rates.append(res.elapsed_s / max(task.cost, 1.0))
+                self.elapsed.append(res.elapsed_s)
+                self.stats["run"] += 1
+                if is_spec:
+                    self.stats["speculation_wins"] += 1
+            self.peak_task_bytes = max(self.peak_task_bytes, loaded or 0)
+            self.cond.notify_all()
+
+    def _check_stragglers(self) -> None:
+        """Caller holds the lock. Re-enqueue any running task whose
+        elapsed time exceeds the cost-normalized p95 envelope."""
+        if not self.cfg.speculate:
+            return
+        if len(self.rates) < self.cfg.speculation_min_done:
+            return
+        q = self.cfg.speculation_quantile
+        p95_rate = float(np.quantile(np.asarray(self.rates), q))
+        p95_elapsed = float(np.quantile(np.asarray(self.elapsed), q))
+        # tail of the run: every queue is drained, so any worker we'd
+        # borrow for a duplicate is idle anyway — the paper's
+        # last-reducer regime. Cap the envelope by absolute completion
+        # times there: per-cost normalization is the right model when
+        # runtime tracks analytic cost, but a straggler whose slowness
+        # is *not* cost (bad node, page-cache miss storm, injected
+        # delay) must not hide behind a large cost either.
+        tail = not self.spec_queue and not any(self.deques)
+        now = time.perf_counter()
+        for (tid, _), info in list(self.running.items()):
+            if tid in self.results or tid in self.spec_issued:
+                continue
+            expected = p95_rate * max(info["cost"], 1.0)
+            if tail:
+                expected = min(expected, p95_elapsed)
+            threshold = max(self.cfg.speculation_min_s,
+                            self.cfg.speculation_factor * expected)
+            if now - info["since"] > threshold:
+                self.spec_issued.add(tid)
+                self.spec_queue.append(self.tasks[tid])
+                self.stats["speculated"] += 1
+                self.cond.notify_all()
+
+    def run(self) -> dict[str, TaskResult]:
+        workers = [threading.Thread(target=self._worker_loop, args=(w,),
+                                    name=f"ooc-worker-{w}", daemon=True)
+                   for w in range(self.cfg.n_workers)]
+        for t in workers:
+            t.start()
+        with self.cond:
+            while not self._finished() and self.failure is None:
+                if not self.running and not any(self.deques) \
+                        and not self.spec_queue:
+                    break   # workers bailed (shouldn't happen w/o failure)
+                self.cond.wait(self.cfg.poll_s)
+                self._check_stragglers()
+            self.cond.notify_all()
+        # deliberately NOT joined: once every task has a result the run
+        # is over — a straggler that lost its speculation race may still
+        # be grinding, and waiting for it would forfeit exactly the
+        # wall-clock speculation recovered. Losers find their task id
+        # already in ``results`` and discard themselves (daemon threads).
+        if self.failure is not None:
+            raise RuntimeError(
+                f"task {self.failed_task} failed after "
+                f"{self.cfg.max_retries} retries; completed work is "
+                f"journaled in {self.ledger.path} — rerun with "
+                f"resume=True") from self.failure
+        return self.results
+
+
+def aggregate(results: dict[str, TaskResult], n: int,
+              per_node: bool) -> tuple[float, Optional[np.ndarray]]:
+    """Order-independent reduction: sorted-task-id f64 sums, so the
+    estimate is identical across worker counts, stealing patterns, and
+    fresh-vs-resumed runs."""
+    total = 0.0
+    out = np.zeros(n, np.float64) if per_node else None
+    for tid in sorted(results):
+        res = results[tid]
+        total += res.task_sum
+        if out is not None and res.unit_ids is not None:
+            np.add.at(out, res.unit_ids, res.unit_vals)
+    return total, out
+
+
+def run_query(eng, entry, req, key,
+              cfg: SchedulerConfig) -> tuple[float, Optional[np.ndarray],
+                                             dict]:
+    """Execute one counting query out-of-core. Returns
+    (estimate, per_node, scheduler telemetry)."""
+    t0 = time.perf_counter()
+    og = eng.og
+    tasks = compile_tasks(entry, og, req,
+                          elem_budget=cfg.tile_elem_budget,
+                          target_tasks=cfg.target_tasks,
+                          max_units_per_task=cfg.max_units_per_task)
+    csr_bytes = csr_footprint_bytes(og)
+    if not tasks:
+        per = np.zeros(og.n, np.float64) if req.return_per_node else None
+        return 0.0, per, {"tasks": 0, "run": 0, "stolen": 0,
+                          "speculated": 0, "speculation_wins": 0,
+                          "retried": 0, "resumed": 0, "spill": "empty",
+                          "csr_bytes": csr_bytes,
+                          "wall_s": time.perf_counter() - t0}
+
+    fp = eng.fingerprint
+    plan_sig = plan_signature(fp, tasks)
+    root = cfg.spill_dir or os.path.join(tempfile.gettempdir(),
+                                         "repro-ooc")
+    store = ShardStore(root=root, fingerprint=fp, plan_sig=plan_sig)
+    spill = store.ensure(og, tasks)
+
+    qsig = query_signature(fp, plan_sig, req)
+    ledger = TaskLedger(os.path.join(store.dir, f"ledger-{qsig}.jsonl"),
+                        qsig)
+    completed: dict[str, TaskResult] = {}
+    if cfg.resume:
+        completed = {tid: res for tid, res in ledger.load().items()
+                     if tid in {t.task_id for t in tasks}}
+    if completed:
+        ledger.open_append(completed)
+    else:
+        ledger.open_fresh()
+
+    runner = _make_runner(eng, store, req, key, cfg)
+    driver = Driver(tasks, runner, cfg, ledger, completed)
+    try:
+        results = driver.run()
+    finally:
+        ledger.close()
+    total, per_node = aggregate(results, og.n,
+                                bool(req.return_per_node))
+    stats = {"tasks": len(tasks), "resumed": len(completed),
+             **{k: int(v) for k, v in driver.stats.items()},
+             "n_workers": cfg.n_workers,
+             "peak_task_bytes": driver.peak_task_bytes,
+             "max_slice_bytes": spill.get("max_slice_bytes", 0),
+             "csr_bytes": csr_bytes, "spill": spill["spill"],
+             "spill_bytes": spill.get("spill_bytes", 0),
+             "ledger": ledger.path,
+             "wall_s": time.perf_counter() - t0}
+    return total, per_node, stats

@@ -1,0 +1,135 @@
+"""Resumable progress: a JSONL ledger of completed tasks.
+
+One line per completed task — appended and flushed the moment the task
+finishes, so a SIGKILLed driver loses at most the in-flight tasks. On
+resume the ledger is replayed: completed task ids are skipped and their
+recorded partial sums (and, for ``return_per_node`` queries, the
+per-unit count vectors) feed straight into the final aggregation, so
+nothing is recounted.
+
+The first line is a header carrying the *query signature* — a hash of
+everything answer-defining (graph fingerprint, ledger/plan signature,
+k, method, sampling knobs, tile-repr choice, per-node flag). A ledger
+whose header doesn't match the current query is ignored and truncated:
+resuming a k=4 run into a k=5 query can never smuggle counts across.
+
+Tolerant reader: a line that fails to parse (the torn tail of a killed
+write) ends the replay — everything before it is trusted, everything
+after recomputed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TaskResult:
+    """What aggregation needs from one completed task."""
+    task_sum: float
+    elapsed_s: float
+    unit_ids: Optional[np.ndarray] = None     # per-node queries only
+    unit_vals: Optional[np.ndarray] = None
+
+
+def query_signature(fingerprint: str, plan_sig: str, req) -> str:
+    """Hash of the answer-defining request fields. Exact queries
+    normalize the sampling knobs away (like ``CountRequest.query_key``)
+    so an exact run can resume under a different seed; sampled queries
+    keep (method, p, colors, seed) — their partial sums are
+    seed-specific."""
+    if req.effective_method == "exact":
+        knobs = ("exact",)
+    else:
+        knobs = (req.effective_method, float(req.p), int(req.colors),
+                 int(req.seed))
+    payload = (fingerprint, plan_sig, req.k, req.engine,
+               bool(req.return_per_node)) + knobs
+    return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
+
+
+class TaskLedger:
+    """Append-only completion journal for one query on one task set."""
+
+    def __init__(self, path: str, query_sig: str) -> None:
+        self.path = path
+        self.query_sig = query_sig
+        self._fh = None
+
+    # -- replay ------------------------------------------------------------
+
+    def load(self) -> dict[str, TaskResult]:
+        """Replay a prior run's ledger; {} when absent, foreign (header
+        mismatch), or empty."""
+        try:
+            with open(self.path) as f:
+                lines = f.read().splitlines()
+        except OSError:
+            return {}
+        if not lines:
+            return {}
+        try:
+            header = json.loads(lines[0])
+        except ValueError:
+            return {}
+        if header.get("query_sig") != self.query_sig:
+            return {}
+        done: dict[str, TaskResult] = {}
+        for line in lines[1:]:
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                break       # torn tail of a killed write; stop trusting
+            res = TaskResult(task_sum=float(rec["sum"]),
+                             elapsed_s=float(rec.get("elapsed_s", 0.0)))
+            if "units" in rec:
+                res.unit_ids = np.asarray(rec["units"], np.int64)
+                res.unit_vals = np.asarray(rec["values"], np.float64)
+            done[rec["task"]] = res
+        return done
+
+    # -- writing -----------------------------------------------------------
+
+    def open_fresh(self) -> None:
+        """Start a new journal (truncates any prior one)."""
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        self._fh = open(self.path, "w")
+        self._write({"query_sig": self.query_sig})
+
+    def open_append(self, resumed: dict[str, TaskResult]) -> None:
+        """Continue a replayed journal. Rewritten rather than appended:
+        the prior file may end in a torn line, and rewriting the trusted
+        prefix is cheap next to recounting it."""
+        os.makedirs(os.path.dirname(self.path) or ".", exist_ok=True)
+        self._fh = open(self.path, "w")
+        self._write({"query_sig": self.query_sig})
+        for task_id, res in resumed.items():
+            self.append(task_id, res)
+
+    def _write(self, obj: dict) -> None:
+        if self._fh is None:
+            return          # straggler finishing after the run closed
+        try:
+            self._fh.write(json.dumps(obj) + "\n")
+            self._fh.flush()
+            os.fsync(self._fh.fileno())
+        except ValueError:  # closed between the check and the write
+            pass
+
+    def append(self, task_id: str, res: TaskResult) -> None:
+        rec = {"task": task_id, "sum": res.task_sum,
+               "elapsed_s": round(res.elapsed_s, 6)}
+        if res.unit_ids is not None:
+            rec["units"] = [int(u) for u in res.unit_ids]
+            rec["values"] = [float(v) for v in res.unit_vals]
+        self._write(rec)
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

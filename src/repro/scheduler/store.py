@@ -1,0 +1,190 @@
+"""Disk-backed CSR shards: the out-of-core half of the scheduler.
+
+The oriented CSR is spilled once per (graph fingerprint, task ledger)
+into one *slice* per task: the CSR rows of the task's work units plus
+the rows of every out-neighbor they reference (the closure G⁺ needs for
+its pair-existence joins), with each halo row filtered to entries
+inside the closure. A worker executing a task therefore mmaps and
+uploads only its slice — host memory per worker is O(closure(chunk)),
+not O(m) — which is the paper's round-3 locality property made literal:
+reducer (u) only ever touches Γ⁺(u) and the edges among it.
+
+Slices keep *global* node indexing (a full-length ``offsets`` array
+whose non-closure rows are empty): this costs O(n) int32 per slice but
+buys exactness for free — unit ids, per-node sampling keys
+(``fold_in(key, u)``), out-degrees, and per-node attribution are all
+identical to the single-host backends, so the ooc backend is bit-exact
+against them by construction rather than by remapping bookkeeping.
+
+Layout under ``<root>/<fingerprint>/<plan_sig>/``:
+
+  manifest.json            graph + ledger identity, per-task byte sizes
+  out_deg.npy              true global out-degrees (shared by all tasks)
+  t_<id>.offsets.npy       per-task slice CSR (global-length offsets)
+  t_<id>.rank.npy          rank-sorted filtered rows
+  t_<id>.byid.npy          id-sorted filtered rows
+
+The manifest is written last (tmp + rename), so a spill killed midway
+is invisible and rebuilt; a complete spill is reused by every later
+run, query, and resume on the same ledger.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import NamedTuple
+
+import numpy as np
+
+from ..core.csr import OrientedGraph
+from .tasks import Task
+
+MANIFEST = "manifest.json"
+
+
+class SliceCSR(NamedTuple):
+    """One task's mmapped shard slice (global node indexing)."""
+    offsets: np.ndarray    # (n+1,) int32, empty rows outside the closure
+    nbrs_rank: np.ndarray  # (E_c,) int32 filtered rank-sorted rows
+    nbrs_byid: np.ndarray  # (E_c,) int32 filtered id-sorted rows
+    out_deg: np.ndarray    # (n,) int32 TRUE global out-degrees
+
+    @property
+    def nbytes(self) -> int:
+        return (self.offsets.nbytes + self.nbrs_rank.nbytes
+                + self.nbrs_byid.nbytes + self.out_deg.nbytes)
+
+
+def _closure_slice(og: OrientedGraph, units: np.ndarray
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Build (offsets, nbrs_rank, nbrs_byid) for the closure of
+    ``units``: full rows for the units, halo rows filtered to closure
+    members. Filtering halo rows is safe because the only queries ever
+    issued against them are pair-existence joins whose right-hand side
+    lives in some Γ⁺(u) ⊆ closure, and dropping entries keeps each row
+    sorted (in both the rank and the id order)."""
+    units = units[units >= 0].astype(np.int64)
+    starts = og.offsets[units].astype(np.int64)
+    lens = og.offsets[units + 1].astype(np.int64) - starts
+    total = int(lens.sum())
+    if total:
+        base = np.repeat(starts, lens)
+        step = np.arange(total) - np.repeat(np.cumsum(lens) - lens, lens)
+        halo = og.nbrs_rank[base + step]
+    else:
+        halo = np.zeros(0, np.int32)
+    closure = np.union1d(units, halo).astype(np.int64)
+    in_closure = np.zeros(og.n, bool)
+    in_closure[closure] = True
+
+    cstarts = og.offsets[closure].astype(np.int64)
+    clens = og.offsets[closure + 1].astype(np.int64) - cstarts
+    ctotal = int(clens.sum())
+    offsets = np.zeros(og.n + 1, np.int64)
+    if ctotal:
+        base = np.repeat(cstarts, clens)
+        step = np.arange(ctotal) - np.repeat(np.cumsum(clens) - clens,
+                                             clens)
+        idx = base + step
+        row_of = np.repeat(closure, clens)
+        ent_rank = og.nbrs_rank[idx]
+        ent_byid = og.nbrs_byid[idx]
+        keep_rank = in_closure[ent_rank]
+        keep_byid = in_closure[ent_byid]
+        # same multiset per row in both orders → identical kept lengths
+        kept_lens = np.bincount(row_of[keep_rank], minlength=og.n)
+        offsets[1:] = np.cumsum(kept_lens)
+        nbrs_rank = ent_rank[keep_rank].astype(np.int32)
+        nbrs_byid = ent_byid[keep_byid].astype(np.int32)
+    else:
+        nbrs_rank = np.zeros(0, np.int32)
+        nbrs_byid = np.zeros(0, np.int32)
+    return offsets.astype(np.int32), nbrs_rank, nbrs_byid
+
+
+@dataclasses.dataclass
+class ShardStore:
+    """Spill + load interface for one (fingerprint, plan_sig) ledger."""
+    root: str
+    fingerprint: str
+    plan_sig: str
+
+    @property
+    def dir(self) -> str:
+        return os.path.join(self.root, self.fingerprint, self.plan_sig)
+
+    def _files(self, task_id: str) -> dict:
+        d = self.dir
+        return {"offsets": os.path.join(d, f"t_{task_id}.offsets.npy"),
+                "rank": os.path.join(d, f"t_{task_id}.rank.npy"),
+                "byid": os.path.join(d, f"t_{task_id}.byid.npy")}
+
+    def manifest_path(self) -> str:
+        return os.path.join(self.dir, MANIFEST)
+
+    def load_manifest(self) -> dict | None:
+        try:
+            with open(self.manifest_path()) as f:
+                man = json.load(f)
+        except (OSError, ValueError):
+            return None
+        if (man.get("fingerprint") != self.fingerprint
+                or man.get("plan_sig") != self.plan_sig):
+            return None
+        return man
+
+    def ensure(self, og: OrientedGraph, tasks: list[Task]) -> dict:
+        """Spill slices for every task (idempotent). Returns spill
+        telemetry: whether shards were built or reused, total spilled
+        bytes, and the largest single slice."""
+        man = self.load_manifest()
+        if man is not None and set(man["tasks"]) == \
+                {t.task_id for t in tasks}:
+            return {"spill": "reused", "spill_bytes": man["spill_bytes"],
+                    "max_slice_bytes": man["max_slice_bytes"]}
+        os.makedirs(self.dir, exist_ok=True)
+        np.save(os.path.join(self.dir, "out_deg.npy"),
+                og.out_deg.astype(np.int32))
+        per_task = {}
+        spill_bytes = int(og.out_deg.astype(np.int32).nbytes)
+        max_slice = 0
+        for t in tasks:
+            offsets, nbrs_rank, nbrs_byid = _closure_slice(og, t.units)
+            files = self._files(t.task_id)
+            np.save(files["offsets"], offsets)
+            np.save(files["rank"], nbrs_rank)
+            np.save(files["byid"], nbrs_byid)
+            nbytes = int(offsets.nbytes + nbrs_rank.nbytes
+                         + nbrs_byid.nbytes)
+            per_task[t.task_id] = {"slice_bytes": nbytes,
+                                   "edges": int(nbrs_rank.size)}
+            spill_bytes += nbytes
+            max_slice = max(max_slice, nbytes)
+        man = {"fingerprint": self.fingerprint, "plan_sig": self.plan_sig,
+               "n": int(og.n), "m": int(og.m),
+               "spill_bytes": spill_bytes, "max_slice_bytes": max_slice,
+               "tasks": per_task}
+        tmp = self.manifest_path() + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(man, f, indent=1)
+        os.replace(tmp, self.manifest_path())   # manifest last = valid
+        return {"spill": "built", "spill_bytes": spill_bytes,
+                "max_slice_bytes": max_slice}
+
+    def load(self, task_id: str) -> SliceCSR:
+        """mmap one task's slice (pages fault in as the extraction
+        touches them and are dropped when the arrays are released)."""
+        files = self._files(task_id)
+        return SliceCSR(
+            offsets=np.load(files["offsets"], mmap_mode="r"),
+            nbrs_rank=np.load(files["rank"], mmap_mode="r"),
+            nbrs_byid=np.load(files["byid"], mmap_mode="r"),
+            out_deg=np.load(os.path.join(self.dir, "out_deg.npy"),
+                            mmap_mode="r"))
+
+
+def csr_footprint_bytes(og: OrientedGraph) -> int:
+    """Bytes of the full single-host device CSR (the thing a worker
+    does NOT have to hold): offsets + both row orders + out_deg."""
+    return 4 * (og.n + 1) + 4 * og.m + 4 * og.m + 4 * og.n

@@ -1,0 +1,157 @@
+"""Compile a plan into a ledger of idempotent bucket-chunk tasks.
+
+A *task* is the scheduler's unit of dispatch, retry, speculation, and
+checkpointing: a contiguous chunk of one capacity class's work units
+(or of one §6 split class), small enough that tens of them exist per
+query — enough granularity for work stealing and straggler
+re-execution — and large enough that per-task overhead (mmap + device
+upload of its shard slice) stays amortized.
+
+Tasks carry their analytic cost from :func:`repro.core.plan.unit_cost`
+(the paper's |Γ⁺(u)|^{k−1} local-work bound; D^{k−2} per split unit),
+which is what LPT-seeds the worker deques and cost-normalizes the
+straggler detector. Task ids are pure functions of the unit arrays, so
+a resumed run recomputes the identical ledger and can trust the
+completed-task journal.
+
+Chunking is deliberately *independent of the worker count*: a run
+killed at W=2 workers can resume at W=8 and every completed task id
+still matches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Optional
+
+import numpy as np
+
+from ..core.count import pick_tile_repr
+from ..core.csr import OrientedGraph
+from ..core.plan import unit_cost
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One idempotent bucket-chunk work unit.
+
+    ``units`` are global node ids (the scheduler's slices keep global
+    indexing, see :mod:`repro.scheduler.store`); ``pivots`` are local
+    row indices within each unit's adjacency for §6 split tasks.
+    """
+    task_id: str
+    kind: str                       # "bucket" | "split"
+    capacity: int
+    tile_repr: str                  # "dense" | "bits"
+    units: np.ndarray               # (U,) int32 global node ids
+    pivots: Optional[np.ndarray]    # (U,) int32, split tasks only
+    cost: float                     # Σ analytic unit cost (LPT + straggler)
+
+    @property
+    def n_units(self) -> int:
+        return int(self.units.size)
+
+
+def _unit_hash(units: np.ndarray,
+               pivots: Optional[np.ndarray] = None) -> str:
+    h = hashlib.sha256(np.ascontiguousarray(units, np.int64).tobytes())
+    if pivots is not None:
+        h.update(np.ascontiguousarray(pivots, np.int64).tobytes())
+    return h.hexdigest()[:10]
+
+
+def _chunk_by_cost(order_costs: np.ndarray, target_cost: float,
+                   max_units: int) -> list[slice]:
+    """Greedy contiguous chunking of a cost-descending unit list: close
+    a chunk once its cumulative cost reaches the target or it holds
+    ``max_units`` units. Heaviest units therefore land in the smallest
+    chunks — exactly the ones speculation may need to re-run cheaply."""
+    chunks = []
+    start, acc = 0, 0.0
+    for i, c in enumerate(order_costs):
+        acc += float(c)
+        if acc >= target_cost or (i - start + 1) >= max_units:
+            chunks.append(slice(start, i + 1))
+            start, acc = i + 1, 0.0
+    if start < len(order_costs):
+        chunks.append(slice(start, len(order_costs)))
+    return chunks
+
+
+def compile_tasks(entry, og: OrientedGraph, req, *,
+                  elem_budget: int, target_tasks: int = 32,
+                  max_units_per_task: int = 4096) -> list[Task]:
+    """Turn a cached :class:`~repro.engine.PlanEntry` into the task
+    ledger. Deterministic in (plan, request knobs, chunking config) —
+    the resume contract."""
+    k = entry.plan.k
+    r = k - 1
+    split_costs = []
+    for sp in entry.splits:
+        real = sp.nodes[:sp.n_real]
+        split_costs.append(og.out_deg[np.maximum(real, 0)]
+                           .astype(np.float64) ** max(k - 2, 1))
+    total = entry.plan.total_cost + sum(float(c.sum())
+                                        for c in split_costs)
+    target = max(total / max(target_tasks, 1), 1.0)
+
+    tasks: list[Task] = []
+    for b in entry.plan.buckets:
+        real = b.nodes[:b.n_real]
+        if real.size == 0:
+            continue
+        costs = unit_cost(og.out_deg[real], k)
+        # build_plan orders units cost-descending already; keep that
+        # order so chunk boundaries are stable across runs
+        repr_ = pick_tile_repr(r=r, capacity=b.capacity,
+                               method=req.method, choice=req.engine,
+                               elem_budget=elem_budget)
+        for i, sl in enumerate(_chunk_by_cost(costs, target,
+                                              max_units_per_task)):
+            u = np.ascontiguousarray(real[sl], np.int32)
+            tasks.append(Task(
+                task_id=f"b{b.capacity}-{i:04d}-{_unit_hash(u)}",
+                kind="bucket", capacity=b.capacity, tile_repr=repr_,
+                units=u, pivots=None, cost=float(costs[sl].sum())))
+    for sp, costs in zip(entry.splits, split_costs):
+        real = sp.nodes[:sp.n_real]
+        pv = sp.pivots[:sp.n_real]
+        if real.size == 0:
+            continue
+        repr_ = pick_tile_repr(r=r, capacity=sp.capacity,
+                               method=req.method, choice=req.engine,
+                               elem_budget=elem_budget)
+        for i, sl in enumerate(_chunk_by_cost(costs, target,
+                                              max_units_per_task)):
+            u = np.ascontiguousarray(real[sl], np.int32)
+            p = np.ascontiguousarray(pv[sl], np.int32)
+            tasks.append(Task(
+                task_id=f"s{sp.capacity}-{i:04d}-{_unit_hash(u, p)}",
+                kind="split", capacity=sp.capacity, tile_repr=repr_,
+                units=u, pivots=p, cost=float(costs[sl].sum())))
+    return tasks
+
+
+def plan_signature(fingerprint: str, tasks: list[Task]) -> str:
+    """Content hash of the compiled ledger — the shard-manifest key.
+    Any change to the plan, the chunking, or the graph produces a new
+    signature and therefore a fresh spill directory."""
+    h = hashlib.sha256(fingerprint.encode())
+    for t in tasks:
+        h.update(t.task_id.encode())
+    return h.hexdigest()[:16]
+
+
+def lpt_assign(tasks: list[Task], n_workers: int) -> list[list[Task]]:
+    """Seed the worker deques: heaviest task to the least-loaded worker
+    (the plan partitioner's LPT balancing, applied at task granularity).
+    Work stealing corrects whatever the analytic model gets wrong at
+    runtime; LPT just makes stealing rare."""
+    order = sorted(tasks, key=lambda t: (-t.cost, t.task_id))
+    deques: list[list[Task]] = [[] for _ in range(n_workers)]
+    loads = np.zeros(n_workers)
+    for t in order:
+        w = int(np.argmin(loads))
+        deques[w].append(t)
+        loads[w] += t.cost
+    return deques

@@ -2,11 +2,12 @@
 the brute-force oracle — exactly — on the whole generator corpus.
 
 One engine session per corpus graph answers the same exact query on the
-``local``, ``pallas``, and ``shard_map`` backends; counts must match the
-oracle and per-node attributions (local/pallas) must match the oracle's
-≺-minimum responsibility assignment bit-for-bit. This is the trust
-anchor under the serving layer: a backend refactor that shifts any
-count on any corpus graph fails here before it can ship.
+``local``, ``pallas``, ``shard_map``, and ``ooc`` (out-of-core
+scheduler) backends; counts must match the oracle and per-node
+attributions (local/pallas/ooc) must match the oracle's ≺-minimum
+responsibility assignment bit-for-bit. This is the trust anchor under
+the serving layer: a backend refactor that shifts any count on any
+corpus graph fails here before it can ship.
 """
 import numpy as np
 import pytest
@@ -42,13 +43,14 @@ def test_all_backends_match_bruteforce(corpus, oracle):
 
 
 def test_per_node_attributions_bit_for_bit(corpus, oracle):
-    """local and pallas must reproduce the oracle's per-node counts
-    exactly (shard_map doesn't expose per-node attribution)."""
+    """local, pallas, and the ooc scheduler must reproduce the oracle's
+    per-node counts exactly (shard_map doesn't expose per-node
+    attribution)."""
     for g in corpus:
         eng = CliqueEngine(g)
         for k in KS:
             _, per_node = oracle[g.name][k]
-            for b in ("local", "pallas"):
+            for b in ("local", "pallas", "ooc"):
                 rep = eng.submit(CountRequest(k=k, backend=b,
                                               return_per_node=True))
                 got = np.round(rep.per_node).astype(np.int64)

@@ -1,0 +1,104 @@
+"""FaultDomain: injected-failure retry counts + the exponential
+backoff schedule (deterministic jitter, cap), pinned.
+
+The out-of-core scheduler's per-task retry loop is built on these
+primitives (see ``repro.scheduler.driver``), so the schedule is a
+contract, not an implementation detail.
+"""
+import threading
+
+import pytest
+
+from repro.runtime.faults import (FaultDomain, SimulatedFault,
+                                  backoff_delay)
+
+
+# ---------------- backoff schedule ----------------
+
+def test_backoff_is_geometric_without_jitter():
+    ds = [backoff_delay(a, base_s=0.1, factor=2.0, cap_s=100.0)
+          for a in range(1, 6)]
+    assert ds == pytest.approx([0.1, 0.2, 0.4, 0.8, 1.6])
+
+
+def test_backoff_caps():
+    assert backoff_delay(30, base_s=0.1, factor=2.0, cap_s=5.0) == 5.0
+    # the cap applies to the geometric term; jitter rides on top but is
+    # bounded by jitter * cap
+    d = backoff_delay(30, base_s=0.1, factor=2.0, cap_s=5.0, jitter=0.25,
+                      seed=3)
+    assert 5.0 <= d <= 5.0 * 1.25
+
+
+def test_backoff_jitter_is_deterministic_and_seeded():
+    a = [backoff_delay(i, base_s=0.1, jitter=0.5, seed=7)
+         for i in range(1, 8)]
+    b = [backoff_delay(i, base_s=0.1, jitter=0.5, seed=7)
+         for i in range(1, 8)]
+    c = [backoff_delay(i, base_s=0.1, jitter=0.5, seed=8)
+         for i in range(1, 8)]
+    assert a == b                      # same seed → identical schedule
+    assert a != c                      # different seed → decorrelated
+    base = [backoff_delay(i, base_s=0.1) for i in range(1, 8)]
+    for with_j, without in zip(a, base):
+        assert without <= with_j < without * 1.5
+
+
+def test_backoff_pinned_values():
+    """Pin the exact schedule for one seed: a hash-function change that
+    silently reshuffles every retry schedule should fail loudly."""
+    got = [round(backoff_delay(i, base_s=1.0, factor=2.0, cap_s=30.0,
+                               jitter=0.5, seed=42), 6)
+           for i in (1, 2, 3)]
+    expect = []
+    import zlib
+    for i in (1, 2, 3):
+        d = min(1.0 * 2.0 ** (i - 1), 30.0)
+        h = zlib.crc32(f"42:{i}".encode()) & 0xFFFFFFFF
+        expect.append(round(d + d * 0.5 * (h / 2**32), 6))
+    assert got == expect
+
+
+# ---------------- FaultDomain retry semantics ----------------
+
+def test_fault_domain_retry_count_and_sleep_schedule():
+    fd = FaultDomain(fail_at=(0, 1, 2), max_retries=5, backoff_s=0.001,
+                     backoff_factor=2.0)
+    assert fd.run(lambda: "ok") == "ok"
+    assert fd.calls == 4               # 3 injected failures + 1 success
+    assert fd.sleeps == pytest.approx([0.001, 0.002, 0.004])
+
+
+def test_fault_domain_gives_up_after_max_retries():
+    fd = FaultDomain(fail_at=tuple(range(10)), max_retries=2,
+                     backoff_s=0.0)
+    with pytest.raises(SimulatedFault):
+        fd.run(lambda: 1)
+    assert fd.sleeps == []             # zero base → no sleeping
+
+
+def test_maybe_fail_counts_and_raises():
+    fd = FaultDomain(fail_at=(1,))
+    fd.maybe_fail()                    # call 0: fine
+    with pytest.raises(SimulatedFault):
+        fd.maybe_fail()                # call 1: injected
+    fd.maybe_fail()                    # call 2: fine again
+    assert fd.calls == 3
+
+
+def test_maybe_fail_is_thread_safe():
+    """N threads × M calls must count exactly N·M attempts (the
+    scheduler's workers share one injection domain)."""
+    fd = FaultDomain()
+    n_threads, per_thread = 8, 200
+
+    def hammer():
+        for _ in range(per_thread):
+            fd.maybe_fail()
+
+    ts = [threading.Thread(target=hammer) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert fd.calls == n_threads * per_thread

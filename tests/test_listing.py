@@ -21,7 +21,7 @@ import numpy as np
 import pytest
 
 from repro.core import clique_count_bruteforce, clique_list_bruteforce
-from repro.engine import BACKENDS, CliqueEngine, CountRequest
+from repro.engine import LISTING_BACKENDS, CliqueEngine, CountRequest
 from repro.graphs import complete_graph, conformance_corpus
 from repro.listing import CliqueBatch, containing, stream_cliques
 
@@ -71,7 +71,7 @@ def test_listing_matches_oracle_sets_small(corpus, oracle_sets):
         eng = CliqueEngine(g)
         for k in KS:
             want = oracle_sets[g.name][k]
-            for backend in BACKENDS:
+            for backend in LISTING_BACKENDS:
                 for engine in REPRS:
                     rep = eng.submit(CountRequest(
                         k=k, mode="list", backend=backend, engine=engine))

@@ -1,0 +1,340 @@
+"""The out-of-core scheduler: task compilation, shard slices, ledger
+replay, fault recovery, speculation, and driver kill-and-resume.
+
+The conformance suite (tests/test_conformance.py) already pins the
+``ooc`` backend bit-exact against the brute-force oracle on the whole
+corpus; this file tests the machinery those counts ride on — the
+resume contract (same tasks at any worker count), the crash-safety of
+the ledger, and the recovery paths (retry, speculation, resume) that
+never get exercised on a clean run.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import conformance_corpus, planted_cliques
+from repro.runtime.faults import FaultDomain
+from repro.scheduler import (SchedulerConfig, ShardStore, TaskLedger,
+                             TaskResult, compile_tasks,
+                             csr_footprint_bytes, lpt_assign,
+                             plan_signature, query_signature)
+from repro.scheduler.store import _closure_slice
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return conformance_corpus()[1]       # the ER control graph
+
+
+@pytest.fixture(scope="module")
+def engine_and_tasks(graph):
+    eng = CliqueEngine(graph)
+    req = CountRequest(k=4)
+    entry, _ = eng._plan_entry(req)
+    tasks = compile_tasks(entry, eng.og, req, elem_budget=1 << 21,
+                          target_tasks=8)
+    return eng, entry, req, tasks
+
+
+# ---------------- task compilation ----------------
+
+def test_task_ids_are_deterministic(engine_and_tasks):
+    eng, entry, req, tasks = engine_and_tasks
+    again = compile_tasks(entry, eng.og, req, elem_budget=1 << 21,
+                          target_tasks=8)
+    assert [t.task_id for t in tasks] == [t.task_id for t in again]
+    assert plan_signature("fp", tasks) == plan_signature("fp", again)
+
+
+def test_tasks_partition_the_plan(engine_and_tasks):
+    """Every real work unit appears in exactly one task."""
+    eng, entry, req, tasks = engine_and_tasks
+    from_tasks = np.sort(np.concatenate(
+        [t.units for t in tasks if t.kind == "bucket"]))
+    from_plan = np.sort(np.concatenate(
+        [b.nodes[:b.n_real] for b in entry.plan.buckets]))
+    np.testing.assert_array_equal(from_tasks, from_plan)
+
+
+def test_chunking_is_worker_count_independent(engine_and_tasks):
+    """The resume contract: task ids never depend on n_workers — a run
+    killed at W=2 resumes at W=8 with every completed id still valid.
+    (Guaranteed by construction: compile_tasks doesn't take a worker
+    count; this pins that nobody adds one.)"""
+    import inspect
+    sig = inspect.signature(compile_tasks)
+    assert "n_workers" not in sig.parameters
+    assert "workers" not in sig.parameters
+
+
+def test_lpt_assign_balances_and_covers(engine_and_tasks):
+    _, _, _, tasks = engine_and_tasks
+    deques = lpt_assign(tasks, 3)
+    assigned = [t.task_id for d in deques for t in d]
+    assert sorted(assigned) == sorted(t.task_id for t in tasks)
+    loads = [sum(t.cost for t in d) for d in deques]
+    # LPT guarantee: max load ≤ total/W + heaviest task
+    heaviest = max(t.cost for t in tasks)
+    assert max(loads) <= sum(loads) / 3 + heaviest + 1e-9
+
+
+# ---------------- shard slices ----------------
+
+def test_closure_slice_keeps_unit_rows_whole(graph):
+    eng = CliqueEngine(graph)
+    og = eng.og
+    units = np.arange(0, og.n, 3, dtype=np.int32)
+    offsets, nbrs_rank, nbrs_byid = _closure_slice(og, units)
+    assert offsets.shape == (og.n + 1,)
+    assert nbrs_rank.size == nbrs_byid.size
+    for u in units:
+        lo, hi = int(offsets[u]), int(offsets[u + 1])
+        full = og.nbrs_rank[og.offsets[u]:og.offsets[u + 1]]
+        # a unit's own row survives filtering intact: every neighbor is
+        # in the closure by definition
+        np.testing.assert_array_equal(nbrs_rank[lo:hi], full)
+    # filtered rows stay sorted in both orders (binary-search invariant)
+    for x in range(og.n):
+        lo, hi = int(offsets[x]), int(offsets[x + 1])
+        assert np.all(np.diff(nbrs_byid[lo:hi]) > 0)
+
+
+def test_spill_reuse_and_staleness(tmp_path, engine_and_tasks):
+    eng, entry, req, tasks = engine_and_tasks
+    store = ShardStore(root=str(tmp_path), fingerprint="f" * 16,
+                       plan_sig=plan_signature("f" * 16, tasks))
+    first = store.ensure(eng.og, tasks)
+    second = store.ensure(eng.og, tasks)
+    assert first["spill"] == "built" and second["spill"] == "reused"
+    assert first["spill_bytes"] == second["spill_bytes"]
+    # a manifest for a different task set is not trusted
+    stale = ShardStore(root=str(tmp_path), fingerprint="f" * 16,
+                       plan_sig=store.plan_sig)
+    assert stale.ensure(eng.og, tasks[:2])["spill"] == "built"
+
+
+def test_slices_are_smaller_than_the_csr(tmp_path, engine_and_tasks):
+    """The out-of-core claim at its smallest scale: no task's slice
+    reaches the full single-host CSR footprint."""
+    eng, entry, req, tasks = engine_and_tasks
+    store = ShardStore(root=str(tmp_path), fingerprint="g" * 16,
+                       plan_sig=plan_signature("g" * 16, tasks))
+    tel = store.ensure(eng.og, tasks)
+    assert tel["max_slice_bytes"] < csr_footprint_bytes(eng.og)
+
+
+# ---------------- ledger ----------------
+
+def test_ledger_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = TaskLedger(path, "sig-a")
+    led.open_fresh()
+    led.append("t1", TaskResult(task_sum=3.0, elapsed_s=0.5))
+    led.append("t2", TaskResult(task_sum=4.0, elapsed_s=0.25,
+                                unit_ids=np.array([7, 9]),
+                                unit_vals=np.array([1.0, 3.0])))
+    led.close()
+    with open(path, "a") as f:
+        f.write('{"task": "t3", "sum": 5')     # torn tail (SIGKILL)
+    done = TaskLedger(path, "sig-a").load()
+    assert set(done) == {"t1", "t2"}           # tail distrusted
+    assert done["t1"].task_sum == 3.0
+    np.testing.assert_array_equal(done["t2"].unit_ids, [7, 9])
+    # foreign query signature → nothing is trusted
+    assert TaskLedger(path, "sig-b").load() == {}
+
+
+def test_query_signature_normalizes_exact_seed(graph):
+    """Exact answers don't depend on the seed, so an exact run resumes
+    under a different seed; sampled runs must not."""
+    a = query_signature("fp", "ps", CountRequest(k=4, seed=1))
+    b = query_signature("fp", "ps", CountRequest(k=4, seed=2))
+    assert a == b
+    c = query_signature("fp", "ps",
+                        CountRequest(k=4, method="edge", p=0.5, seed=1))
+    d = query_signature("fp", "ps",
+                        CountRequest(k=4, method="edge", p=0.5, seed=2))
+    assert c != d
+
+
+# ---------------- driver recovery paths ----------------
+
+def test_injected_fault_is_retried_and_answer_unchanged(tmp_path, graph):
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path),
+        faults=FaultDomain(fail_at=(0, 3)), retry_backoff_s=0.001))
+    golden = eng.submit(CountRequest(k=4)).count
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    assert rep.count == golden
+    assert tel["retried"] >= 2
+
+
+def test_exhausted_retries_raise_but_checkpoint(tmp_path, graph):
+    """A task that keeps failing fails the query — after journaling
+    everything that did finish, so the rerun only recounts the loser."""
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path), max_retries=1,
+        retry_backoff_s=0.0,
+        faults=FaultDomain(fail_at=tuple(range(100)))))
+    with pytest.raises(RuntimeError, match="resume=True"):
+        eng.submit(CountRequest(k=4, backend="ooc"))
+    eng2 = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path), resume=True))
+    golden = eng2.submit(CountRequest(k=4)).count
+    rep = eng2.submit(CountRequest(k=4, backend="ooc"))
+    assert rep.count == golden
+
+
+def test_resume_skips_completed_tasks_across_worker_counts(tmp_path,
+                                                           graph):
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path)))
+    golden = eng.submit(CountRequest(k=4)).count
+    first = eng.submit(CountRequest(k=4, backend="ooc"))
+    t1 = first.cache["scheduler"]
+    assert first.count == golden and t1["run"] == t1["tasks"]
+    # resume at a different worker count: nothing recounted
+    eng2 = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=5, spill_dir=str(tmp_path), resume=True))
+    second = eng2.submit(CountRequest(k=4, backend="ooc"))
+    t2 = second.cache["scheduler"]
+    assert second.count == golden
+    assert t2["run"] == 0 and t2["resumed"] == t2["tasks"]
+    assert t2["spill"] == "reused"
+
+
+def test_resume_preserves_per_node_attribution(tmp_path, graph):
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=3, spill_dir=str(tmp_path)))
+    ref = eng.submit(CountRequest(k=4, return_per_node=True))
+    first = eng.submit(CountRequest(k=4, backend="ooc",
+                                    return_per_node=True))
+    np.testing.assert_array_equal(first.per_node, ref.per_node)
+    eng2 = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path), resume=True))
+    resumed = eng2.submit(CountRequest(k=4, backend="ooc",
+                                       return_per_node=True))
+    assert resumed.cache["scheduler"]["run"] == 0
+    np.testing.assert_array_equal(resumed.per_node, ref.per_node)
+
+
+def test_straggler_speculation_first_result_wins(tmp_path, graph):
+    """Delay only execution 0 of one task; the speculative re-execution
+    (execution ≥ 1, undelayed) must land first and the run must not
+    wait out the injected delay."""
+    eng_probe = CliqueEngine(graph)
+    req = CountRequest(k=4)
+    entry, _ = eng_probe._plan_entry(req)
+    cfg_probe = SchedulerConfig()
+    tasks = compile_tasks(entry, eng_probe.og, req,
+                          elem_budget=cfg_probe.tile_elem_budget,
+                          target_tasks=8)
+    hot = tasks[0].task_id
+    delay = 6.0
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=4, spill_dir=str(tmp_path), target_tasks=8,
+        speculation_min_s=0.05, speculation_factor=2.0, poll_s=0.005,
+        delay_hook=lambda tid, ei: delay if (tid == hot and ei == 0)
+        else 0.0))
+    golden = eng.submit(CountRequest(k=4)).count
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    assert rep.count == golden
+    assert tel["speculated"] >= 1 and tel["speculation_wins"] >= 1, tel
+    assert tel["wall_s"] < delay, tel["wall_s"]
+
+
+def test_speculation_can_be_disabled(tmp_path, graph):
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path), speculate=False))
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    assert rep.cache["scheduler"]["speculated"] == 0
+
+
+# ---------------- request validation ----------------
+
+def test_ooc_rejects_listing_and_adaptive():
+    with pytest.raises(ValueError, match="ooc"):
+        CountRequest(k=4, mode="list", backend="ooc").validate()
+    with pytest.raises(ValueError, match="ooc"):
+        CountRequest(k=4, method="auto", backend="ooc").validate()
+
+
+# ---------------- kill-and-resume (SIGKILL, subprocess) ----------------
+
+CHILD = textwrap.dedent("""
+    import sys
+    from repro.engine import CliqueEngine, CountRequest
+    from repro.graphs import planted_cliques
+    from repro.scheduler import SchedulerConfig
+
+    g = planted_cliques(400, 0.02, [8, 8, 9], seed=5)
+    cfg = SchedulerConfig(n_workers=2, spill_dir=sys.argv[1],
+                          target_tasks=12, speculate=False,
+                          delay_hook=lambda tid, ei: 0.4)
+    eng = CliqueEngine(g, ooc=cfg)
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    print("FULL_RUN_DONE", rep.count, flush=True)
+""")
+
+
+def _ledger_lines(spill_dir: str) -> int:
+    total = 0
+    for dirpath, _, files in os.walk(spill_dir):
+        for f in files:
+            if f.startswith("ledger-"):
+                with open(os.path.join(dirpath, f)) as fh:
+                    total = max(total, sum(1 for _ in fh) - 1)  # header
+    return total
+
+
+@pytest.mark.slow
+def test_driver_killed_mid_run_resumes_without_recounting(tmp_path):
+    g = planted_cliques(400, 0.02, [8, 8, 9], seed=5)
+    golden = CliqueEngine(g).submit(CountRequest(k=4)).count
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    proc = subprocess.Popen([sys.executable, "-c", CHILD, str(tmp_path)],
+                            env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.PIPE)
+    try:
+        deadline = time.time() + 120
+        while time.time() < deadline:
+            if proc.poll() is not None:
+                out, err = proc.communicate()
+                pytest.fail("driver finished before it could be killed: "
+                            f"{out!r} {err!r}")
+            if _ledger_lines(str(tmp_path)) >= 2:
+                break
+            time.sleep(0.05)
+        else:
+            pytest.fail("no ledger progress to kill into")
+        os.kill(proc.pid, signal.SIGKILL)   # no atexit, no flush, nothing
+        proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+    journaled = _ledger_lines(str(tmp_path))
+    assert journaled >= 2
+
+    eng = CliqueEngine(g, ooc=SchedulerConfig(
+        n_workers=4, spill_dir=str(tmp_path), resume=True,
+        target_tasks=12))
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    assert rep.count == golden
+    assert tel["resumed"] >= 2                       # trusted the journal
+    assert tel["run"] == tel["tasks"] - tel["resumed"]   # no recounting
+    assert tel["spill"] == "reused"
