@@ -33,10 +33,13 @@ TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_kernels.json")
 
 
-def append_trajectory(rows: list) -> None:
+def append_trajectory(rows: list, bench: str = "kernels") -> None:
     """One record per benchmark run, accumulated across PRs. The write
     is atomic (tmp + replace) and a corrupt/empty history is set aside
-    rather than crashing away the run's rows."""
+    rather than crashing away the run's rows. ``bench`` tags the record
+    so several benchmarks can share the file (scripts/check_bench.py
+    compares like-tagged records only; untagged history predates the
+    tag and means "kernels")."""
     history = []
     if os.path.exists(TRAJECTORY):
         try:
@@ -48,6 +51,7 @@ def append_trajectory(rows: list) -> None:
                   f"fresh trajectory", file=sys.stderr, flush=True)
     history.append({
         "ran_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "bench": bench,
         "backend": jax.default_backend(),
         # host provenance: wall-clock is only comparable between runs of
         # the same kind of machine (scripts/check_bench.py skips the

@@ -4,13 +4,17 @@
 ``benchmarks/kernels_bench.py`` appends one record per run (rows keyed
 by (D, r) with wall times and per-tile bytes for the dense f32 and
 packed uint32 paths) to ``BENCH_kernels.json``;
-``benchmarks/fig6_stragglers.py --scheduler`` appends the out-of-core
-scheduler's speculation-recovery and memory-footprint record to
-``BENCH_scheduler.json``. This script turns those logs into gates:
+``benchmarks/allk_profile.py`` appends ``bench="allk_profile"``-tagged
+records (one-pass all-k profile vs the equivalent per-k sweep) to the
+same file; ``benchmarks/fig6_stragglers.py --scheduler`` appends the
+out-of-core scheduler's speculation-recovery and memory-footprint
+record to ``BENCH_scheduler.json``. This script turns those logs into
+gates:
 
   PYTHONPATH=src python scripts/check_bench.py --run     # nightly CI
   PYTHONPATH=src python scripts/check_bench.py           # compare last 2
   PYTHONPATH=src python scripts/check_bench.py --scheduler --run
+  PYTHONPATH=src python scripts/check_bench.py --allk --run
 
 ``--run`` executes a fresh benchmark (appending the new record), then
 compares it against the latest *prior* record. Failure conditions, per
@@ -86,6 +90,43 @@ def compare(prev: dict, new: dict, ratio: float) -> list:
     return regressions
 
 
+def compare_allk(prev: dict, new: dict, ratio: float) -> list:
+    """All-k-trajectory gate, per graph row:
+
+    - ``allk_us`` (the one-pass profile wall) may not regress past
+      ``ratio`` — same provenance rules as the kernel wall gate;
+    - ``speedup`` (sweep wall / all-k wall) must stay >= 3.0 — the
+      benchmark asserts this before appending, so tripping it here
+      means the record was edited by hand or the contract was
+      weakened."""
+    regressions = []
+    prev_rows = {(r["graph"], r["kmax"]): r for r in prev["rows"]}
+    new_rows = {(r["graph"], r["kmax"]): r for r in new["rows"]}
+    for key in sorted(prev_rows.keys() | new_rows.keys()):
+        if key not in new_rows:
+            print(f"  note: row {key} vanished from the new run")
+            continue
+        if key not in prev_rows:
+            print(f"  note: row {key} is new in this run")
+            continue
+        p, n = prev_rows[key], new_rows[key]
+        if n["allk_us"] > ratio * p["allk_us"]:
+            regressions.append(
+                f"({key[0]}, kmax={key[1]}) allk_us: "
+                f"{p['allk_us']:.0f} -> {n['allk_us']:.0f} "
+                f"({n['allk_us'] / p['allk_us']:.2f}x > {ratio}x)")
+        if n["speedup"] < 3.0:
+            regressions.append(
+                f"({key[0]}, kmax={key[1]}) speedup: "
+                f"{n['speedup']:.2f}x < 3.0x (one-pass contract)")
+        if n["profile"] != p["profile"]:
+            regressions.append(
+                f"({key[0]}, kmax={key[1]}) profile changed: "
+                f"{p['profile']} -> {n['profile']} (counts are exact; "
+                f"any drift is a correctness bug, not perf)")
+    return regressions
+
+
 def compare_scheduler(prev: dict, new: dict, ratio: float) -> list:
     """Scheduler-trajectory gate, per graph row:
 
@@ -137,7 +178,13 @@ def main() -> int:
                     help="gate BENCH_scheduler.json (the out-of-core "
                          "scheduler trajectory) instead of the kernel "
                          "one")
+    ap.add_argument("--allk", action="store_true",
+                    help="gate the allk_profile-tagged records in "
+                         "BENCH_kernels.json (one-pass all-k profile "
+                         "vs per-k sweep) instead of the kernel rows")
     args = ap.parse_args()
+    if args.scheduler and args.allk:
+        ap.error("--scheduler and --allk are mutually exclusive")
 
     trajectory = SCHED_TRAJECTORY if args.scheduler else TRAJECTORY
     if args.run:
@@ -145,7 +192,9 @@ def main() -> int:
         env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
             env.get("PYTHONPATH", "")
         cmd = (["-m", "benchmarks.fig6_stragglers", "--scheduler"]
-               if args.scheduler else ["-m", "benchmarks.kernels_bench"])
+               if args.scheduler else
+               ["-m", "benchmarks.allk_profile"] if args.allk else
+               ["-m", "benchmarks.kernels_bench"])
         print(f"running {cmd[1]} ...", flush=True)
         subprocess.run([sys.executable] + cmd, cwd=REPO, env=env,
                        check=True)
@@ -154,7 +203,14 @@ def main() -> int:
         print(f"no trajectory at {trajectory}; run with --run first")
         return 1
     with open(trajectory) as f:
-        history = json.load(f)
+        full_history = json.load(f)
+    history = full_history
+    if not args.scheduler:
+        # BENCH_kernels.json interleaves kernel and allk_profile
+        # records; compare like against like (untagged = kernels)
+        want = "allk_profile" if args.allk else "kernels"
+        history = [rec for rec in full_history
+                   if rec.get("bench", "kernels") == want]
     if len(history) < 2:
         print(f"only {len(history)} record(s) in the trajectory — "
               "nothing to compare against; passing (bootstrap)")
@@ -172,7 +228,8 @@ def main() -> int:
               "and the wall gate re-arms.")
     print(f"comparing run {new.get('ran_at')} against "
           f"{prev.get('ran_at')} ({len(new['rows'])} rows)")
-    gate = compare_scheduler if args.scheduler else compare
+    gate = (compare_scheduler if args.scheduler else
+            compare_allk if args.allk else compare)
     regressions = gate(prev, new,
                        args.ratio if same_machine else float("inf"))
     if regressions:
@@ -185,10 +242,13 @@ def main() -> int:
             # last *good* record until the regression is actually fixed,
             # not alarm once and silently ratchet the baseline down.
             # tmp + replace, like append_trajectory: a kill mid-write
-            # must not corrupt the whole history
+            # must not corrupt the whole history. Drop only the one
+            # regressed record — `history` may be a tag-filtered view,
+            # and the other benchmarks' records must survive the write
+            kept = [rec for rec in full_history if rec is not new]
             tmp = trajectory + ".tmp"
             with open(tmp, "w") as f:
-                json.dump(history[:-1], f, indent=1)
+                json.dump(kept, f, indent=1)
             os.replace(tmp, trajectory)
             print(f"regressed record dropped from {trajectory}; baseline "
                   f"stays at {prev.get('ran_at')}")

@@ -43,15 +43,20 @@ def ks_for(n: int):
 
 
 def compute_golden() -> dict:
-    return {
-        g.name: {
+    out = {}
+    for g in conformance_corpus():
+        counts = {str(k): int(clique_count_bruteforce(g, k))
+                  for k in ks_for(g.n)}
+        out[g.name] = {
             "n": g.n,
             "m": g.m,
-            "counts": {str(k): int(clique_count_bruteforce(g, k))
-                       for k in ks_for(g.n)},
+            "counts": counts,
+            # the k="all" anchor: q_3..q_{pinned max} as a vector (same
+            # oracle values; comparisons zero-pad both sides, so a
+            # profile trimmed at the clique number still matches)
+            "profile": [counts[str(k)] for k in ks_for(g.n)],
         }
-        for g in conformance_corpus()
-    }
+    return out
 
 
 def check(golden: dict) -> int:
@@ -70,8 +75,8 @@ def check(golden: dict) -> int:
         if name not in golden:
             problems.append(f"fixture entry {name!r} is not in the corpus")
             continue
-        for field in ("n", "m", "counts"):
-            got, want = golden[name][field], pinned[name][field]
+        for field in ("n", "m", "counts", "profile"):
+            got, want = golden[name][field], pinned[name].get(field)
             if got != want:
                 problems.append(f"{name}.{field}: corpus says {got!r}, "
                                 f"fixture pins {want!r}")

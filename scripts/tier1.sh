@@ -19,6 +19,11 @@ python -m repro.launch.count --graph rmat:8:4 --k 4 --method color
 python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5,6 \
     --engine bitset --assert-golden
 
+# all-k profile smoke: ONE tile pass must reproduce every pinned golden
+# count at once (q_3..q_7 of the deep-k regression graph)
+python -m repro.launch.count --graph corpus:planted_32_6_7 --k all \
+    --assert-golden
+
 # listing smoke: the streamed enumeration must reproduce the exact
 # count on the same session (asserted by --list itself) and the pinned
 # golden counts; the tiny --chunk forces the overflow drain path

@@ -64,6 +64,44 @@ def dag_count(A: jax.Array, r: int) -> jax.Array:
     return jax.lax.fori_loop(0, D, body, init)
 
 
+def dag_profile(A: jax.Array, rmax: int) -> jax.Array:
+    """Clique-size profile of each DAG adjacency: one traversal, every k.
+
+    A: (B, D, D) float32, strictly upper-triangular. Returns
+    (B, rmax−1) f32 with column j = number of (j+2)-cliques, j+2 ≤ rmax
+    — the Pivoter idea carried through our pivot recursion: instead of
+    summing a scalar per increasing tuple at one fixed depth, each
+    recursion level prepends its own edge count, so the single deepest
+    traversal reads off q_s for *every* size s ≤ rmax. Column j of the
+    tile profile therefore contributes to the global q_{j+3} (the unit
+    vertex u completes each s-clique of G⁺(u) to an (s+1)-clique).
+
+    Correctness: B_v = A ∘ (A[v] ⊗ A[v]) lives strictly above v, so each
+    s-clique of A is seen exactly once — as an (s−1)-clique of B_v for
+    v its minimum vertex — and no column overcounts.
+    """
+    assert rmax >= 2, "the profile bottoms out at the edge count"
+    if rmax == 2:
+        return jnp.sum(A, axis=(1, 2))[:, None]
+    edges = jnp.sum(A, axis=(1, 2))
+    if rmax == 3:
+        tri = jnp.einsum("bji,bjk,bik->b", A, A, A, optimize=True)
+        return jnp.stack([edges, tri], axis=1)
+    D = A.shape[-1]
+
+    def body(v, acc):
+        row = jax.lax.dynamic_index_in_dim(A, v, axis=1, keepdims=False)
+        Bv = A * row[:, :, None] * row[:, None, :]
+        return acc + dag_profile(Bv, rmax - 1)
+
+    # init carry derived from A so it inherits A's varying-manual-axes
+    # type under shard_map (see dag_count)
+    init = jnp.broadcast_to((jnp.sum(A[:, 0, 0:1], axis=1) * 0.0)[:, None],
+                            (A.shape[0], rmax - 2))
+    sub = jax.lax.fori_loop(0, D, body, init)
+    return jnp.concatenate([edges[:, None], sub], axis=1)
+
+
 def dag_count_flops(D: int, B: int, r: int) -> float:
     """Analytic FLOPs of ``dag_count`` (roofline bookkeeping)."""
     if r == 2:
@@ -130,6 +168,44 @@ def dag_count_bits(bits: jax.Array, r: int) -> jax.Array:
     return jax.lax.fori_loop(0, D, pivot, init)
 
 
+def dag_profile_bits(bits: jax.Array, rmax: int) -> jax.Array:
+    """Packed twin of :func:`dag_profile` for (B, D, W) uint32 bitset
+    adjacencies: one traversal at depth ``rmax`` emits every column
+    q_2..q_rmax, with the pivot masking identical to
+    :func:`dag_count_bits` (row-broadcast AND + row-bit select)."""
+    assert rmax >= 2, "the profile bottoms out at the edge count"
+    D = bits.shape[1]
+    edges = jnp.sum(jax.lax.population_count(bits).astype(jnp.float32),
+                    axis=(1, 2))
+    if rmax == 2:
+        return edges[:, None]
+    # init carry derived from bits so it inherits the varying-manual-axes
+    # type under shard_map (see dag_count)
+    zero = jnp.sum(bits[:, 0, 0:1], axis=1).astype(jnp.float32) * 0.0
+    if rmax == 3:
+        def edge_level(i, acc):
+            row = jax.lax.dynamic_index_in_dim(bits, i, axis=1,
+                                               keepdims=False)  # (B, W)
+            inter = jnp.bitwise_and(bits, row[:, None, :])       # (B, D, W)
+            common = jnp.sum(jax.lax.population_count(inter)
+                             .astype(jnp.float32), axis=2)       # (B, D)
+            return acc + jnp.sum(common * _unpack_bits(row, D), axis=1)
+        tri = jax.lax.fori_loop(0, D, edge_level, zero)
+        return jnp.stack([edges, tri], axis=1)
+
+    def pivot(v, acc):
+        row = jax.lax.dynamic_index_in_dim(bits, v, axis=1,
+                                           keepdims=False)       # (B, W)
+        colmask = jnp.bitwise_and(bits, row[:, None, :])         # (B, D, W)
+        sel = _unpack_bits(row, D) > 0.0                         # (B, D)
+        Bv = jnp.where(sel[:, :, None], colmask, jnp.uint32(0))
+        return acc + dag_profile_bits(Bv, rmax - 1)
+
+    init = jnp.broadcast_to(zero[:, None], (bits.shape[0], rmax - 2))
+    sub = jax.lax.fori_loop(0, D, pivot, init)
+    return jnp.concatenate([edges[:, None], sub], axis=1)
+
+
 def dag_count_bits_ops(D: int, B: int, r: int) -> float:
     """Analytic VPU word-ops of ``dag_count_bits`` (roofline bookkeeping):
     every AND / popcount / select touches W = ⌈D/32⌉ uint32 lanes per
@@ -149,6 +225,24 @@ def _dag_count_bits_engine(bits: jax.Array, r: int,
         from ..kernels.bitset import ops as bitset_ops
         return bitset_ops.dag_count_bits_pallas(bits, r)
     return dag_count_bits(bits, r)
+
+
+def _dag_profile_engine(A: jax.Array, rmax: int, engine: str) -> jax.Array:
+    """Dense profile dispatch. The Pallas dense kernel is the scalar
+    MXU-matmul count identity; the profile's vector carry rides the XLA
+    recursion on every backend (the same seam as
+    :func:`repro.kernels.bitset.ops.dag_list_bits_pallas`)."""
+    del engine
+    return dag_profile(A, rmax)
+
+
+def _dag_profile_bits_engine(bits: jax.Array, rmax: int,
+                             engine: str) -> jax.Array:
+    """Packed profile dispatch to the jnp or Pallas implementation."""
+    if engine == "pallas":
+        from ..kernels.bitset import ops as bitset_ops
+        return bitset_ops.dag_profile_bits_pallas(bits, rmax)
+    return dag_profile_bits(bits, rmax)
 
 
 # --------------------------------------------------------------------------
@@ -507,6 +601,25 @@ def bits_split_tile_values(csr: DeviceCSR, nodes: jax.Array,
     return _dag_count_bits_engine(Bv, r - 1, engine) * scale
 
 
+def profile_tile_values(csr: DeviceCSR, nodes: jax.Array, *, capacity: int,
+                        n_iters: int, r: int,
+                        engine: str = "jnp") -> jax.Array:
+    """Extract + profile one tile (exact only — the all-k path). Returns
+    (B, r−1) f32: column j is each unit's count of (j+2)-cliques inside
+    G⁺(u), i.e. its contribution to the global q_{j+3}."""
+    A, _ = extract_adjacency(csr, nodes, capacity=capacity, n_iters=n_iters)
+    return _dag_profile_engine(A, r, engine)
+
+
+def bits_profile_tile_values(csr: DeviceCSR, nodes: jax.Array, *,
+                             capacity: int, n_iters: int, r: int,
+                             engine: str = "jnp") -> jax.Array:
+    """Packed twin of :func:`profile_tile_values`."""
+    bits, _ = extract_adjacency_bits(csr, nodes, capacity=capacity,
+                                     n_iters=n_iters)
+    return _dag_profile_bits_engine(bits, r, engine)
+
+
 def subset_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
                        capacity: int, kept: int, n_iters: int, r: int,
                        engine: str = "jnp",
@@ -572,6 +685,11 @@ _bits_split_tile = functools.partial(
 _subset_tile = functools.partial(
     jax.jit, static_argnames=("capacity", "kept", "n_iters", "r", "engine",
                               "tile_repr"))(subset_tile_values)
+_PROFILE_STATICS = ("capacity", "n_iters", "r", "engine")
+_profile_tile = functools.partial(
+    jax.jit, static_argnames=_PROFILE_STATICS)(profile_tile_values)
+_bits_profile_tile = functools.partial(
+    jax.jit, static_argnames=_PROFILE_STATICS)(bits_profile_tile_values)
 _list_tile = functools.partial(
     jax.jit, static_argnames=("capacity", "n_iters", "r", "chunk",
                               "tile_repr", "engine"))(list_tile_rows)

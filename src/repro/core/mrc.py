@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 import numpy as np
 
@@ -56,10 +57,14 @@ class MRCStats:
 
 
 def compute_stats(og: OrientedGraph, plan: Plan, method: str = "exact",
-                  p: float = 1.0, colors: int = 10) -> MRCStats:
+                  p: float = 1.0, colors: int = 10,
+                  k: Optional[int] = None) -> MRCStats:
+    """``k`` defaults to ``plan.k``; since plans went k-agnostic (the
+    engine builds every plan at the k=3 reference), callers pass the
+    query's k explicitly so the work bounds stay per-query."""
     d = og.out_deg.astype(np.float64)
     m = float(max(og.m, 1))
-    k = plan.k
+    k = plan.k if k is None else k
     pairs2 = float((d * (d - 1) / 2).sum())
     if method == "edge":
         sample = p

@@ -107,6 +107,47 @@ def build_plan(og: OrientedGraph, k: int,
                 max_capacity=max(b.capacity for b in buckets) if buckets else 0)
 
 
+@dataclasses.dataclass(frozen=True)
+class DepthGroup:
+    """A batch of same-capacity work units sharing a recursion depth —
+    the all-k plan's unit of execution (one profile executable per
+    (capacity, rmax))."""
+
+    capacity: int
+    rmax: int            # profile recursion depth for every unit here
+    nodes: np.ndarray    # (B,) int32 node ids, -1 = padding
+
+    @property
+    def n_real(self) -> int:
+        return int((self.nodes >= 0).sum())
+
+
+def regroup_by_depth(plan: Plan, depth: np.ndarray,
+                     batch_align: int = 8) -> tuple[DepthGroup, ...]:
+    """Re-bucket a plan's units by (capacity, per-unit depth).
+
+    ``depth[u]`` is the recursion depth unit ``u`` should run at (its
+    certificate-clamped clique-number bound); units with depth < 3 are
+    dropped — their whole contribution is host-computable from the edge
+    certificate. Grouping by exact depth is what makes the one-pass
+    profile cheaper than the deepest per-k pass: a bucket's light units
+    never pay the heavy units' D^rmax recursion.
+    """
+    groups = []
+    for b in plan.buckets:
+        real = b.nodes[:b.n_real]
+        du = depth[real]
+        for r in sorted(int(x) for x in np.unique(du)):
+            if r < 3:
+                continue
+            sel = real[du == r].astype(np.int32)
+            pad = (-len(sel)) % batch_align
+            nodes = np.concatenate([sel, np.full(pad, -1, np.int32)])
+            groups.append(DepthGroup(capacity=b.capacity, rmax=r,
+                                     nodes=nodes))
+    return tuple(groups)
+
+
 def partition_for_workers(plan: Plan, og: OrientedGraph,
                           n_workers: int) -> list[Plan]:
     """Split a plan into ``n_workers`` balanced sub-plans (LPT greedy).

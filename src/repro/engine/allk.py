@@ -1,0 +1,133 @@
+"""One-pass all-k clique profiles (``CountRequest(k="all")``).
+
+The per-k engine answers "how many k-cliques" with one recursion depth
+per query; a sweep over k = 3..kmax re-extracts and re-walks the same
+tiles kmax−2 times. The profile recursion instead carries one counter
+per recursion level (the Pivoter trick restricted to our pivot-free
+DAG recursion): a single depth-r walk of G⁺(u) yields the unit's whole
+clique-size histogram, and the host sums histograms — q_3..q_kmax from
+ONE tile pass.
+
+Depth is where the win is made or lost. Running every unit at the
+global worst-case depth would make the one pass cost as much as the
+deepest per-k query times the batch; instead each unit gets a
+*certificate-clamped* depth from the same (d_u, e_u) certificates the
+adaptive estimator computes (one exact r=2 popcount pass):
+
+  - complete units (e_u = C(d_u, 2)): G⁺(u) is a clique — the whole
+    histogram is C(d_u, k−1), computed on the host, no device work;
+  - Kruskal–Katona: any c-clique inside G⁺(u) needs C(c, 2) ≤ e_u, so
+    depth is clamped to the largest s with C(s, 2) ≤ e_u;
+  - shallow units (clamped depth < 3): only q_3 = e_u survives — host;
+  - everything else runs on the device, regrouped by (capacity, depth)
+    so a bucket's light units never pay its heavy units' D^rmax.
+
+Without ``max_k`` the device depth is capped at :data:`MAX_AUTO_RMAX`;
+graphs with genuinely deep cliques must say how far to count (the cost
+is exponential in depth — that choice belongs to the caller).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from ..core.plan import regroup_by_depth
+
+# deepest device recursion we will enter without an explicit max_k:
+# depth 8 ≈ counting up to 9-cliques, already ~D^8 work per unit
+MAX_AUTO_RMAX = 8
+
+
+def _kk_depth(deg: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    """Per-unit depth clamp: the largest clique inside a neighborhood
+    with e edges has ≤ s nodes where C(s, 2) ≤ e (Kruskal–Katona /
+    Turán direction), and trivially ≤ d nodes."""
+    e = np.maximum(np.asarray(edges, np.float64), 0.0)
+    s = np.floor((1.0 + np.sqrt(1.0 + 8.0 * e)) / 2.0)
+    return np.minimum(deg.astype(np.int64), s.astype(np.int64))
+
+
+def _host_complete_profile(deg: np.ndarray, L: int) -> np.ndarray:
+    """Σ_u C(d_u, k−1) for k = 3..L+2 over the complete units, exact in
+    f64 via integer ``math.comb`` aggregated by degree value."""
+    prof = np.zeros(L, np.float64)
+    if deg.size == 0:
+        return prof
+    counts = np.bincount(deg)
+    for d in np.nonzero(counts)[0]:
+        mult = int(counts[d])
+        for k in range(3, min(int(d) + 1, L + 2) + 1):
+            prof[k - 3] += mult * float(math.comb(int(d), k - 1))
+    return prof
+
+
+def run_allk(eng, entry, req, backend) -> tuple[np.ndarray, dict]:
+    """Execute ``k="all"``: returns (profile, telemetry) where
+    ``profile[j] = q_{j+3}`` as int64, trimmed at the graph's clique
+    number (or at ``req.max_k``)."""
+    from ..estimator import _certificates
+
+    # certificates come from the exact r=2 tile pass; always computed
+    # via the local kind so every backend shares one cached pass (the
+    # values are representation- and backend-independent)
+    cert = _certificates(eng, eng._backend("local"), entry, 2, req.engine)
+    deg = eng.og.out_deg.astype(np.int64)
+
+    cap = (req.max_k - 1) if req.max_k is not None else None
+    cache_key = ("allk", cap)
+    cached = entry._aux.get(cache_key)
+    if cached is None:
+        depth = _kk_depth(deg, cert.edges)
+        if cap is not None:
+            depth = np.minimum(depth, cap)
+        complete = cert.complete
+        in_plan = cert.in_plan
+        # device set: in-plan, not complete, deep enough to matter
+        device_mask = in_plan & ~complete & (depth >= 3)
+        if cap is None:
+            rmax_dev = int(depth[device_mask].max()) if device_mask.any() \
+                else 0
+            if rmax_dev > MAX_AUTO_RMAX:
+                raise ValueError(
+                    f"k='all' would recurse to depth {rmax_dev} "
+                    f"(> {MAX_AUTO_RMAX}) on this graph; pass "
+                    "CountRequest(k='all', max_k=K) to bound the profile")
+        dev_depth = np.where(device_mask, depth, 0)
+        groups = regroup_by_depth(entry.plan, dev_depth)
+        # profile length: deepest host-exact clique vs deepest device walk
+        comp_deg = deg[in_plan & complete]
+        kmax_complete = int(comp_deg.max()) + 1 if comp_deg.size else 0
+        if cap is not None:
+            kmax_complete = min(kmax_complete, cap + 1)
+        kmax_device = max((g.rmax for g in groups), default=0) + 1
+        shallow = in_plan & ~complete & (depth < 3)
+        kmax_host3 = 3 if float(cert.edges[shallow].sum()) > 0 else 0
+        L = max(kmax_complete, kmax_device, kmax_host3) - 2
+        host = np.zeros(max(L, 0), np.float64)
+        if L > 0:
+            host += _host_complete_profile(deg[in_plan & complete], L)
+            host[0] += float(cert.edges[shallow].sum())
+        cached = {"groups": groups, "L": max(L, 0), "host": host,
+                  "n_complete": int((in_plan & complete).sum()),
+                  "n_shallow": int(shallow.sum()),
+                  "n_device": int(device_mask.sum())}
+        entry._aux[cache_key] = cached
+
+    groups, L, host = cached["groups"], cached["L"], cached["host"]
+    if L == 0:
+        profile = np.zeros(0, np.int64)
+    else:
+        device = backend.run_profile(eng, groups, L, req)
+        total = host + device
+        profile = np.rint(total).astype(np.int64)
+        nz = np.nonzero(profile)[0]
+        profile = profile[:int(nz[-1]) + 1] if nz.size else profile[:0]
+    telemetry = {
+        "n_complete": cached["n_complete"],
+        "n_shallow": cached["n_shallow"],
+        "n_device": cached["n_device"],
+        "device_groups": [(g.capacity, g.rmax, g.n_real) for g in groups],
+        "kmax": int(profile.size) + 2 if profile.size else 0,
+    }
+    return profile, telemetry

@@ -35,10 +35,12 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..core.compat import shard_map
-from ..core.count import (_bits_split_tile, _bits_tile, _count_tile,
+from ..core.count import (_bits_profile_tile, _bits_split_tile, _bits_tile,
+                          _count_tile, _pick_tile_b, _profile_tile,
                           _split_batches, _split_tile, _tile_batches,
-                          bits_split_tile_values, bits_tile_values,
-                          pick_tile_repr, split_tile_values,
+                          bits_profile_tile_values, bits_split_tile_values,
+                          bits_tile_values, pick_tile_repr,
+                          profile_tile_values, split_tile_values,
                           tile_batch_repr, tile_values)
 
 
@@ -70,6 +72,10 @@ class Backend(abc.ABC):
     """Executes one planned query against the engine's device CSR."""
 
     name: str
+    # the streaming emit path needs in-memory tile residency; backends
+    # that trade it away (ooc) override this so listing is rejected at
+    # the *resolved* backend, not just on an explicit request knob
+    supports_listing = True
 
     @property
     @abc.abstractmethod
@@ -79,6 +85,23 @@ class Backend(abc.ABC):
     @abc.abstractmethod
     def run(self, eng, entry, req, key) -> tuple[float, Optional[np.ndarray]]:
         """Returns (estimate, per_node or None)."""
+
+    def run_profile(self, eng, groups, L: int, req) -> np.ndarray:
+        """All-k: execute the depth-regrouped profile tiles and return
+        the (L,) f64 device half of the q_3.. profile (entry j is the
+        device units' contribution to q_{j+3})."""
+        raise NotImplementedError(
+            f"backend {self.name!r} does not implement k='all'")
+
+    def validate(self, req) -> None:
+        """Backend-specific request validation, called by the engine
+        after the default backend is resolved (a request with
+        ``backend=None`` must hit the same guards an explicit one
+        does)."""
+        if not self.supports_listing and req.mode == "list":
+            raise ValueError(
+                "listing needs the in-memory emit path; the "
+                f"{self.name} backend only counts")
 
     def pop_telemetry(self) -> Optional[dict]:
         """Backend-specific telemetry of the last ``run`` (consumed by
@@ -108,6 +131,18 @@ def split_executable(eng, kind: str, tile_repr: str, capacity: int, r: int,
         lambda: functools.partial(
             fn, capacity=capacity, n_iters=eng.og.lookup_iters, r=r,
             method=method, engine=kind))
+
+
+def profile_executable(eng, kind: str, tile_repr: str, capacity: int,
+                       rmax: int):
+    """Same, for the all-k profile tile path (exact-only, so no method/
+    sampling in the key — one executable per (capacity, repr, depth))."""
+    fn = _bits_profile_tile if tile_repr == "bits" else _profile_tile
+    return eng.executables.get(
+        ("ptile", kind, tile_repr, capacity, rmax),
+        lambda: functools.partial(
+            fn, capacity=capacity, n_iters=eng.og.lookup_iters, r=rmax,
+            engine=kind))
 
 
 # --------------------------------------------------------------------------
@@ -165,6 +200,21 @@ class LocalBackend(Backend):
                               key, p=p, c=c), tn)
         return total, per_node
 
+    def run_profile(self, eng, groups, L, req):
+        profile = np.zeros(L, np.float64)
+        for g in groups:
+            repr_ = pick_tile_repr(r=g.rmax, capacity=g.capacity,
+                                   choice=req.engine,
+                                   elem_budget=self.budget)
+            fn = profile_executable(eng, self.kind, repr_, g.capacity,
+                                    g.rmax)
+            for tile in _tile_batches(g.nodes, g.capacity, self.budget,
+                                      repr_):
+                vals = np.asarray(jax.block_until_ready(
+                    fn(eng.csr, jnp.asarray(tile))), np.float64)
+                profile[:g.rmax - 1] += vals.sum(axis=0)
+        return profile
+
 
 # --------------------------------------------------------------------------
 # shard_map backend: workers-axis mesh, per-capacity shards, psum
@@ -209,6 +259,23 @@ def _worker_split_sum(csr, nodes_shard, pivots_shard, key, p, c, *,
                           n_iters=n_iters, r=r, method=method))
 
     local = jnp.sum(jax.lax.map(one_tile, (nodes, pivots)))
+    return jax.lax.psum(local, axis)
+
+
+def _worker_bucket_profile(csr, nodes_shard, *, capacity, n_iters, rmax,
+                           tile_b, axis, tile_repr="dense"):
+    """All-k twin of :func:`_worker_bucket_sum`: each worker folds its
+    shard of one (capacity, rmax) depth group into an (rmax−1,) profile
+    and psums across the axis. Exact-only, so no key/p/c operands."""
+    nodes = nodes_shard.reshape(-1, tile_b)
+    tv = (bits_profile_tile_values if tile_repr == "bits"
+          else profile_tile_values)
+
+    def one_tile(tile_nodes):
+        return jnp.sum(tv(csr, tile_nodes, capacity=capacity,
+                          n_iters=n_iters, r=rmax), axis=0)
+
+    local = jnp.sum(jax.lax.map(one_tile, nodes), axis=0)
     return jax.lax.psum(local, axis)
 
 
@@ -279,3 +346,33 @@ class ShardMapBackend(Backend):
                     tile_repr=ss.tile_repr), n_arrays=2))
             total += float(fn(eng.csr, ss.nodes, ss.pivots, key, p, c))
         return total, None
+
+    def run_profile(self, eng, groups, L, req):
+        W = self.n_workers
+        profile = np.zeros(L, np.float64)
+        for g in groups:
+            repr_ = pick_tile_repr(r=g.rmax, capacity=g.capacity,
+                                   choice=req.engine,
+                                   elem_budget=self.budget)
+            # contiguous split is balanced by construction: every unit in
+            # a depth group shares (capacity, rmax), hence the same cost
+            per_w = -(-len(g.nodes) // W)
+            tile_b = _pick_tile_b(per_w, g.capacity, self.budget, repr_)
+            per_w += (-per_w) % tile_b
+            nodes = np.full(W * per_w, -1, np.int32)
+            nodes[:len(g.nodes)] = g.nodes
+            stacked = jnp.asarray(nodes.reshape(W, per_w))
+            fn = eng.executables.get(
+                ("wprof", g.capacity, repr_, tile_b, g.rmax, W, self.axis),
+                lambda g=g, repr_=repr_, tile_b=tile_b: jax.jit(shard_map(
+                    functools.partial(
+                        _worker_bucket_profile, capacity=g.capacity,
+                        n_iters=eng.og.lookup_iters, rmax=g.rmax,
+                        tile_b=tile_b, axis=self.axis, tile_repr=repr_),
+                    mesh=self.mesh,
+                    in_specs=(P(), P(self.axis, None)),
+                    out_specs=P())))
+            vals = np.asarray(jax.block_until_ready(fn(eng.csr, stacked)),
+                              np.float64)
+            profile[:g.rmax - 1] += vals
+        return profile

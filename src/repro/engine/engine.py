@@ -34,6 +34,7 @@ from ..core.plan import (Plan, balance_report, build_plan,
                          partition_for_workers)
 from ..core.split import SplitPlan, split_heavy
 from ..graphs.formats import Graph
+from .allk import run_allk
 from .backends import (Backend, ExecutableCache, LocalBackend,
                        ShardMapBackend)
 from .report import CountReport, CountRequest
@@ -125,13 +126,15 @@ class PlanEntry:
         return self._balance[n_workers]
 
     def stats(self, og: OrientedGraph, method: str, p: float,
-              colors: int) -> "mrc_mod.MRCStats":
-        """compute_stats is likewise pure in (plan, method, p, colors) —
-        cached so repeat queries skip the O(n) host-side pass."""
-        key = (method, p, colors)
+              colors: int, k: Optional[int] = None) -> "mrc_mod.MRCStats":
+        """compute_stats is likewise pure in (plan, method, p, colors, k)
+        — cached so repeat queries skip the O(n) host-side pass. Since
+        plans went k-agnostic, the query's k is part of the key (the
+        work bounds are per-query)."""
+        key = (method, p, colors, k)
         if key not in self._mrc:
             self._mrc[key] = mrc_mod.compute_stats(
-                og, self.plan, method=method, p=p, colors=colors)
+                og, self.plan, method=method, p=p, colors=colors, k=k)
         return self._mrc[key]
 
 
@@ -303,11 +306,13 @@ class CliqueEngine:
             self._plan_hits += 1
             return entry, True
         self._plan_misses += 1
-        plan = build_plan(self.og, req.k, max_capacity=req.max_capacity)
+        # k-agnostic: one plan (k=3 eligibility — every k ≥ 3 query's
+        # units are a subset, extra units count 0) serves the session;
+        # the split structure depends only on the threshold
+        plan = build_plan(self.og, 3, max_capacity=req.max_capacity)
         splits: tuple[SplitPlan, ...] = ()
         if req.split_threshold is not None:
-            plan, sp = split_heavy(plan, self.og, req.k,
-                                   req.split_threshold)
+            plan, sp = split_heavy(plan, self.og, 3, req.split_threshold)
             splits = tuple(sp)
         entry = PlanEntry(plan=plan, splits=splits)
         self._plans[key] = entry
@@ -317,8 +322,8 @@ class CliqueEngine:
                   splits: Sequence[SplitPlan] = ()) -> None:
         """Seed the plan cache with an externally built plan (legacy
         ``count_cliques(..., plan=...)`` path)."""
-        self._plans[(plan.k, None, None)] = PlanEntry(plan=plan,
-                                                      splits=tuple(splits))
+        self._plans[(None, None)] = PlanEntry(plan=plan,
+                                              splits=tuple(splits))
 
     # -- queries -----------------------------------------------------------
 
@@ -330,6 +335,7 @@ class CliqueEngine:
                 "build a new session for this graph")
         req.validate()
         backend = self._backend(req.backend or self.default_backend)
+        backend.validate(req)
         if req.return_per_node and backend.name == "shard_map":
             raise ValueError("per-node attribution is a local/pallas "
                              "backend feature (workers psum tile sums)")
@@ -340,7 +346,11 @@ class CliqueEngine:
         t1 = time.perf_counter()
         adaptive_info = None
         cliques = listing_stats = None
-        if req.mode == "list":
+        profile = allk_tel = None
+        if req.k == "all":
+            profile, allk_tel = run_allk(self, entry, req, backend)
+            estimate, per_node = float(profile.sum()), None
+        elif req.mode == "list":
             from ..listing import collect_cliques
             cliques, listing_stats = collect_cliques(self, req)
             estimate, per_node = float(len(cliques)), None
@@ -355,7 +365,10 @@ class CliqueEngine:
         h1, m1 = self.executables.snapshot()
 
         W = backend.n_workers
-        stats = entry.stats(self.og, req.method, req.p, req.colors)
+        # the all-k profile's MRC accounting is reported at the k=3
+        # reference (one pass, triangle-round volumes dominate)
+        stats = entry.stats(self.og, req.method, req.p, req.colors,
+                            k=3 if req.k == "all" else req.k)
         csr_bytes = 4.0 * (self.og.n + 1 + 2 * self.og.m + self.og.n)
         self.n_queries += 1
         report = CountReport(
@@ -380,6 +393,9 @@ class CliqueEngine:
         tel = backend.pop_telemetry()
         if tel is not None:
             report.cache["scheduler"] = tel
+        if profile is not None:
+            report.profile = profile
+            report.cache["allk"] = allk_tel
         if cliques is not None:
             report.cliques = cliques
             report.listing = dict(listing_stats,
@@ -419,10 +435,18 @@ class CliqueEngine:
         return stream_cliques(self, req)
 
     def submit_many(self, reqs: Iterable[CountRequest], *,
-                    decorrelate: bool = True) -> list[CountReport]:
+                    decorrelate: bool = True,
+                    coalesce_sweeps: bool = True) -> list[CountReport]:
         """Batched sweep over one session — e.g. k=3..7 exact+color in
         one call; every query reuses the device CSR, and repeat
         (capacity, r, method) combinations hit the executable cache.
+
+        Exact k-sweeps coalesce: when every entry is a plain exact count
+        (no listing/adaptive/per-node/split, same backend and knobs),
+        the batch routes through ONE ``k="all"`` profile execution with
+        ``max_k = max(k)`` and each report reads its q_k off the profile
+        — N tile passes become 1. Pass ``coalesce_sweeps=False`` to run
+        each entry separately (the benchmark baseline does).
 
         Sampled entries get per-request seeds derived by folding the
         sweep index into their seed (``jax.random.fold_in``): a sweep of
@@ -432,6 +456,30 @@ class CliqueEngine:
         is not answer-defining there). Pass ``decorrelate=False`` to
         submit requests verbatim.
         """
+        reqs = list(reqs)
+        if coalesce_sweeps and len(reqs) >= 2 and all(
+                isinstance(r.k, int) and not isinstance(r.k, bool)
+                and r.mode == "count" and r.method == "exact"
+                and not r.return_per_node and r.split_threshold is None
+                for r in reqs) and len(
+                    {(r.backend, r.engine, r.max_capacity)
+                     for r in reqs}) == 1:
+            allreq = dataclasses.replace(
+                reqs[0], k="all", method="exact",
+                max_k=max(r.k for r in reqs))
+            rep = self.submit(allreq)
+            prof = (rep.profile if rep.profile is not None
+                    else np.zeros(0, np.int64))
+            out = []
+            for r in reqs:
+                j = r.k - 3
+                est = float(prof[j]) if 0 <= j < prof.size else 0.0
+                out.append(dataclasses.replace(
+                    rep, k=r.k, method=r.method, estimate=est,
+                    profile=None, timings=dict(rep.timings),
+                    cache=dict(rep.cache, sweep_coalesced=len(reqs)),
+                    params=dict(rep.params)))
+            return out
         out = []
         for i, req in enumerate(reqs):
             if decorrelate and req.effective_method != "exact":

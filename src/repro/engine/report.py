@@ -55,8 +55,16 @@ class CountRequest:
     — or falls through to exact counting when the work model says exact
     is cheaper. For these requests ``p``/``colors``/``seed`` stop being
     answer-defining (the controller owns the operating point).
+
+    All-k profiles: ``k="all"`` asks for the full clique-number profile
+    q_3..q_kmax from one tile pass (the Pivoter-carried recursion —
+    ``report.profile[j]`` is q_{j+3}). Exact counting only: no listing,
+    no adaptive methods, no sampling, no per-node attribution, no §6
+    split round. ``max_k`` caps the discovered profile (and the device
+    recursion depth) — required when the certificate pass finds a clique
+    bound deeper than the auto limit.
     """
-    k: int
+    k: "int | str"                       # k ≥ 3, or "all" for the profile
     method: str = "exact"
     p: float = 0.1                       # edge-sampling rate
     colors: int = 10                     # SIC_k color count c
@@ -73,10 +81,44 @@ class CountRequest:
     limit: Optional[int] = None          # stop after this many cliques
     chunk: int = 1 << 16                 # listing buffer rows per chunk
     predicate: Optional[Callable[[np.ndarray], np.ndarray]] = None
+    # all-k (k="all") only: cap the profile at q_max_k (and the device
+    # recursion depth at max_k − 1)
+    max_k: Optional[int] = None
 
     def validate(self) -> None:
-        if self.k < 3:
+        if self.k == "all":
+            if self.mode == "list":
+                raise ValueError(
+                    'k="all" returns the clique-number profile; listing '
+                    "enumerates one fixed size — pick a concrete k")
+            if self.is_adaptive or self.rel_error is not None:
+                raise ValueError(
+                    'k="all" is exact-only; adaptive (accuracy-targeted) '
+                    "methods need a single target q_k")
+            if self.effective_method != "exact":
+                raise ValueError(
+                    'k="all" is exact-only: one sampled pass cannot '
+                    "rescale every profile column at once "
+                    f"(got method={self.method!r})")
+            if self.return_per_node:
+                raise ValueError(
+                    'per-node attribution of k="all" is a (n, kmax) '
+                    "matrix; not supported — query a concrete k")
+            if self.split_threshold is not None:
+                raise ValueError(
+                    "the §6 split round runs units at one fixed depth; "
+                    'not supported with k="all" — drop split_threshold')
+            if self.max_k is not None and (
+                    not isinstance(self.max_k, int) or self.max_k < 3):
+                raise ValueError(f"max_k must be an int ≥ 3, "
+                                 f"got {self.max_k!r}")
+        elif not isinstance(self.k, int) or isinstance(self.k, bool):
+            raise ValueError(f'k must be an int ≥ 3 or "all", '
+                             f"got {self.k!r}")
+        elif self.k < 3:
             raise ValueError(f"k must be ≥ 3, got {self.k}")
+        elif self.max_k is not None:
+            raise ValueError('max_k only applies to k="all" requests')
         if self.method not in METHODS:
             raise ValueError(f"unknown method {self.method!r}")
         if self.method == "ni++" and self.k != 3:
@@ -159,7 +201,9 @@ class CountRequest:
                                                              "color"))
 
     def plan_key(self) -> tuple:
-        return (self.k, self.max_capacity, self.split_threshold)
+        # k-agnostic: one plan (built at the k=3 eligibility reference)
+        # serves every k of a session, including k="all"
+        return (self.max_capacity, self.split_threshold)
 
     def query_key(self, default_backend: str = "local") -> tuple:
         """Identity of the *answer* this request produces — the coalescing
@@ -193,14 +237,14 @@ class CountRequest:
                          else id(self.predicate)))
         return (self.k, self.method, p, colors, seed, backend,
                 self.engine, self.return_per_node, self.split_threshold,
-                self.max_capacity, target, listing)
+                self.max_capacity, target, listing, self.max_k)
 
 
 @dataclasses.dataclass
 class CountReport:
     """Unified per-query result: estimate + MRC accounting + balance +
     timings + cache telemetry, identical across backends."""
-    k: int
+    k: "int | str"
     method: str
     backend: str
     estimate: float
@@ -225,6 +269,9 @@ class CountReport:
     # memory by construction.
     cliques: Optional[np.ndarray] = None   # (N, k) int32 global node ids
     listing: Optional[dict] = None         # stream telemetry (see docs)
+    # all-k (k="all") queries only: profile[j] = q_{j+3}, trimmed at the
+    # clique number (or max_k); estimate is then sum(profile)
+    profile: Optional[np.ndarray] = None   # (kmax−2,) int64
 
     @property
     def count(self) -> int:

@@ -456,6 +456,13 @@ def run_adaptive(eng, backend, entry, req,
     ``(estimate, per_node, info)``; ``info`` carries the CI fields and
     controller telemetry the engine folds into the CountReport."""
     policy = policy or DEFAULT_POLICY
+    if not isinstance(req.k, int):
+        # CountRequest.validate rejects k="all" adaptive requests before
+        # the engine dispatches here; keep the guard anyway so a caller
+        # reaching the controller directly gets an answerable error, not
+        # a type crash on r = k − 1 below
+        raise ValueError('adaptive queries target one q_k; k="all" is '
+                         "exact-only")
     if backend.name not in ("local", "pallas"):
         raise ValueError("adaptive (accuracy-targeted) queries need the "
                          "per-node replicate structure; use the local or "

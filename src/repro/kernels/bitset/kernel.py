@@ -58,6 +58,36 @@ def _count_one_bits(mat: jax.Array, r: int, D: int) -> jax.Array:
     return jax.lax.fori_loop(0, D, pivot, jnp.float32(0.0))
 
 
+def _profile_one_bits(mat: jax.Array, rmax: int, D: int) -> jax.Array:
+    """Clique-size profile of one (D, W) packed adjacency: (rmax−1,) f32
+    with entry j = number of (j+2)-cliques — the Pivoter-carried variant
+    of :func:`_count_one_bits` (one traversal at depth rmax, every level
+    prepends its own edge count; see ``repro.core.count.dag_profile``)."""
+    edges = jnp.sum(jax.lax.population_count(mat).astype(jnp.float32))
+    if rmax == 2:
+        return edges[None]
+    if rmax == 3:
+        def edge_level(i, acc):
+            row = jax.lax.dynamic_slice_in_dim(mat, i, 1, axis=0)  # (1, W)
+            inter = jnp.bitwise_and(mat, row)                      # (D, W)
+            common = jnp.sum(jax.lax.population_count(inter)
+                             .astype(jnp.float32), axis=1)         # (D,)
+            return acc + jnp.sum(common * _unpack_row(row[0], D))
+
+        tri = jax.lax.fori_loop(0, D, edge_level, jnp.float32(0.0))
+        return jnp.stack([edges, tri])
+
+    def pivot(v, acc):
+        row = jax.lax.dynamic_slice_in_dim(mat, v, 1, axis=0)      # (1, W)
+        colmask = jnp.bitwise_and(mat, row)                        # (D, W)
+        sel = _unpack_row(row[0], D) > 0.0                         # (D,)
+        bv = jnp.where(sel[:, None], colmask, jnp.uint32(0))
+        return acc + _profile_one_bits(bv, rmax - 1, D)
+
+    sub = jax.lax.fori_loop(0, D, pivot, jnp.zeros(rmax - 2, jnp.float32))
+    return jnp.concatenate([edges[None], sub])
+
+
 def _bits_kernel(bits_ref, out_ref, *, r: int, D: int):
     tb = bits_ref.shape[0]
 
@@ -83,6 +113,37 @@ def count_bits_kernel(bits: jax.Array, r: int, tile_b: int,
         in_specs=[pl.BlockSpec((tile_b, D, W), lambda i: (i, 0, 0))],
         out_specs=pl.BlockSpec((tile_b,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((B,), jnp.float32),
+        interpret=interpret,
+    )(bits)
+
+
+def _pbits_kernel(bits_ref, out_ref, *, rmax: int, D: int):
+    tb = bits_ref.shape[0]
+
+    def per_mat(b, _):
+        out_ref[b] = _profile_one_bits(bits_ref[b], rmax, D)
+        return 0
+
+    jax.lax.fori_loop(0, tb, per_mat, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("rmax", "tile_b", "interpret"))
+def profile_bits_kernel(bits: jax.Array, rmax: int, tile_b: int,
+                        interpret: bool = False) -> jax.Array:
+    """bits: (B, D, W) uint32 packed rows → (B, rmax−1) f32 clique-size
+    profiles (column j = count of (j+2)-cliques).
+
+    B must be a multiple of tile_b (ops.py pads).
+    """
+    B, D, W = bits.shape
+    assert B % tile_b == 0, (B, tile_b)
+    L = rmax - 1
+    return pl.pallas_call(
+        functools.partial(_pbits_kernel, rmax=rmax, D=D),
+        grid=(B // tile_b,),
+        in_specs=[pl.BlockSpec((tile_b, D, W), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile_b, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.float32),
         interpret=interpret,
     )(bits)
 

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.extract import packed_words
-from .kernel import count_bits_kernel
+from .kernel import count_bits_kernel, profile_bits_kernel
 from .ref import pack_rows
 
 VMEM_BUDGET_BYTES = 12 * 1024 * 1024
@@ -37,6 +37,21 @@ def dag_count_bits_pallas(bits: jax.Array, r: int) -> jax.Array:
         bits = jnp.concatenate(
             [bits, jnp.zeros((pad,) + bits.shape[1:], bits.dtype)], axis=0)
     return count_bits_kernel(bits, r, tb, interpret=interpret)[:B]
+
+
+def dag_profile_bits_pallas(bits: jax.Array, rmax: int) -> jax.Array:
+    """(B, D, W) uint32 packed adjacencies → (B, rmax−1) f32 clique-size
+    profiles (the one-pass all-k path). Same tiling/padding contract as
+    :func:`dag_count_bits_pallas`; padded all-zero matrices contribute
+    all-zero profile rows."""
+    B, D, _ = bits.shape
+    interpret = jax.default_backend() != "tpu"
+    tb = pick_tile_bits(D)
+    pad = (-B) % tb
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros((pad,) + bits.shape[1:], bits.dtype)], axis=0)
+    return profile_bits_kernel(bits, rmax, tb, interpret=interpret)[:B]
 
 
 def dag_list_bits_pallas(bits: jax.Array, r: int, *, chunk: int,

@@ -121,7 +121,12 @@ def main() -> int:
                     help="rmat:S[:EF] | ba:N:K | er:N:M | complete:N | "
                          "npz:path | snap:path")
     ap.add_argument("--k", default="3",
-                    help="clique size, or comma list (session sweep)")
+                    help="clique size, a comma list (session sweep), or "
+                         "'all' for the one-pass clique-number profile "
+                         "q_3..q_kmax")
+    ap.add_argument("--max-k", type=int, default=None,
+                    help="with --k all: cap the profile (and the device "
+                         "recursion depth) at q_max_k")
     ap.add_argument("--method", default="exact",
                     help="exact | edge | color | color_smooth | ni++ | "
                          "auto, or comma list (crossed with every k); "
@@ -225,7 +230,12 @@ def main() -> int:
 
     from ..engine import ADAPTIVE_METHODS
 
-    ks = [int(x) for x in str(args.k).split(",")]
+    if str(args.k).strip() == "all":
+        ks: list = ["all"]
+    else:
+        ks = [int(x) for x in str(args.k).split(",")]
+        if args.max_k is not None:
+            ap.error('--max-k only applies to --k all')
     methods = args.method.split(",")
     if args.rel_error is not None and methods == ["exact"]:
         methods = ["auto"]   # bare --rel-error means "auto, to this bar"
@@ -253,7 +263,8 @@ def main() -> int:
                                  else 1 << 16))
     reqs = [CountRequest(
         **listing_kw,
-        k=k, method=m, p=args.p, colors=args.colors, seed=args.seed,
+        k=k, max_k=args.max_k if k == "all" else None,
+        method=m, p=args.p, colors=args.colors, seed=args.seed,
         engine=tile_engine,
         # the accuracy target rides only the methods that can adapt, so
         # e.g. --method auto,exact --rel-error 0.05 compares the
@@ -327,6 +338,12 @@ def main() -> int:
             "cache": rep.cache,
             "count_s": round(rep.timings["count_s"], 4),
         }
+        if rep.profile is not None:
+            row["profile"] = {f"q_{j + 3}": int(v)
+                              for j, v in enumerate(rep.profile)}
+            row["kmax"] = int(rep.profile.size) + 2 if rep.profile.size \
+                else 0
+            row["allk"] = rep.cache.get("allk")
         if rep.ci_low is not None:
             row["ci"] = [rep.ci_low, rep.ci_high]
             row["achieved_rel_error"] = rep.achieved_rel_error
@@ -359,7 +376,21 @@ def main() -> int:
             sched_totals = {k: sched_totals.get(k, 0) + tel[k]
                             for k in ("retried", "speculated", "run",
                                       "resumed")}
-        if golden is not None:
+        if golden is not None and rep.k == "all":
+            want = golden[g.name].get("profile")
+            assert want is not None, \
+                (f"--assert-golden: no profile pinned for {g.name}; "
+                 "re-run scripts/regen_golden.py")
+            got = [] if rep.profile is None else \
+                [int(v) for v in rep.profile]
+            for j, truth in enumerate(want):
+                if args.max_k is not None and j + 3 > args.max_k:
+                    break
+                have = got[j] if j < len(got) else 0
+                assert have == truth, (f"q_{j + 3}", have, truth)
+            print(f"golden ok: profile matches the pinned "
+                  f"q_3..q_{len(want) + 2}")
+        elif golden is not None:
             pinned = golden[g.name]["counts"]
             assert str(rep.k) in pinned, \
                 (f"--assert-golden: k={rep.k} is not pinned for "

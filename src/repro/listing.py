@@ -120,6 +120,10 @@ def stream_cliques(eng, req, *, stats: Optional[dict] = None
     if req.mode != "list":
         raise ValueError("stream_cliques needs a mode='list' request")
     backend = eng._backend(req.backend or eng.default_backend)
+    # a request with backend=None must hit the same guard an explicit
+    # backend="ooc" does (the ooc backend has no in-memory emit path —
+    # without this it would die on a missing tile budget mid-stream)
+    backend.validate(req)
     entry, _ = eng._plan_entry(req)
     r, chunk = req.k - 1, req.chunk
     s = stats if stats is not None else {}

@@ -13,11 +13,12 @@ from typing import Optional
 import numpy as np
 
 from ..engine.backends import Backend
-from .driver import SchedulerConfig, run_query
+from .driver import SchedulerConfig, run_profile_query, run_query
 
 
 class OocBackend(Backend):
     name = "ooc"
+    supports_listing = False     # spilled slices have no emit residency
 
     def __init__(self, cfg: Optional[SchedulerConfig] = None) -> None:
         self.cfg = cfg if cfg is not None else SchedulerConfig()
@@ -27,12 +28,28 @@ class OocBackend(Backend):
     def n_workers(self) -> int:
         return self.cfg.n_workers
 
+    def validate(self, req) -> None:
+        # the same guards CountRequest.validate applies to an *explicit*
+        # backend="ooc" — enforced here too so a request that merely
+        # resolves to ooc (engine default) cannot slip past them
+        super().validate(req)
+        if req.is_adaptive:
+            raise ValueError(
+                "adaptive (accuracy-targeted) queries probe "
+                "interactively; run them on local/pallas and save the "
+                "ooc backend for the full-size exact pass")
+
     def run(self, eng, entry, req, key) -> tuple[float,
                                                  Optional[np.ndarray]]:
         estimate, per_node, stats = run_query(eng, entry, req, key,
                                               self.cfg)
         self._last_stats = stats
         return estimate, per_node
+
+    def run_profile(self, eng, groups, L, req) -> np.ndarray:
+        profile, stats = run_profile_query(eng, req, self.cfg, groups, L)
+        self._last_stats = stats
+        return profile
 
     def pop_telemetry(self) -> Optional[dict]:
         stats, self._last_stats = self._last_stats, None

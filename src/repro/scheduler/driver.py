@@ -47,7 +47,8 @@ from ..core.extract import DeviceCSR
 from ..runtime.faults import FaultDomain, backoff_delay
 from .ledger import TaskLedger, TaskResult, query_signature
 from .store import ShardStore, csr_footprint_bytes
-from .tasks import Task, compile_tasks, lpt_assign, plan_signature
+from .tasks import (Task, compile_profile_tasks, compile_tasks, lpt_assign,
+                    plan_signature)
 
 
 @dataclasses.dataclass
@@ -106,8 +107,10 @@ def _fixed_batches(arr: np.ndarray, B: int, fill: int):
 def _make_runner(eng, store: ShardStore, req, key, cfg: SchedulerConfig):
     """Build the pure per-task execution body. Returns
     ``run(task) -> (TaskResult, loaded_bytes)``."""
-    from ..engine.backends import split_executable, tile_executable
-    r = req.k - 1
+    from ..engine.backends import (profile_executable, split_executable,
+                                   tile_executable)
+    # profile (k="all") tasks carry their own depth in task.r
+    r = req.k - 1 if isinstance(req.k, int) else 0
     method = req.effective_method
     p, c = float(req.p), int(req.colors)
     per_node = bool(req.return_per_node)
@@ -143,6 +146,16 @@ def _make_runner(eng, store: ShardStore, req, key, cfg: SchedulerConfig):
                 ids.append(tile[sel].astype(np.int64))
                 vals.append(v[sel])
 
+        if task.kind == "profile":
+            fn = profile_executable(eng, "jnp", task.tile_repr,
+                                    task.capacity, task.r)
+            prof = np.zeros(task.r - 1, np.float64)
+            for tile in _fixed_batches(task.units, B, -1):
+                prof += np.asarray(jax.block_until_ready(
+                    fn(csr, jnp.asarray(tile))), np.float64).sum(axis=0)
+            return TaskResult(task_sum=float(prof.sum()),
+                              elapsed_s=time.perf_counter() - t0,
+                              profile=prof), loaded
         if task.kind == "bucket":
             fn = tile_executable(eng, "jnp", task.tile_repr,
                                  task.capacity, r, method)
@@ -367,26 +380,19 @@ def aggregate(results: dict[str, TaskResult], n: int,
     return total, out
 
 
-def run_query(eng, entry, req, key,
-              cfg: SchedulerConfig) -> tuple[float, Optional[np.ndarray],
-                                             dict]:
-    """Execute one counting query out-of-core. Returns
-    (estimate, per_node, scheduler telemetry)."""
-    t0 = time.perf_counter()
-    og = eng.og
-    tasks = compile_tasks(entry, og, req,
-                          elem_budget=cfg.tile_elem_budget,
-                          target_tasks=cfg.target_tasks,
-                          max_units_per_task=cfg.max_units_per_task)
-    csr_bytes = csr_footprint_bytes(og)
-    if not tasks:
-        per = np.zeros(og.n, np.float64) if req.return_per_node else None
-        return 0.0, per, {"tasks": 0, "run": 0, "stolen": 0,
-                          "speculated": 0, "speculation_wins": 0,
-                          "retried": 0, "resumed": 0, "spill": "empty",
-                          "csr_bytes": csr_bytes,
-                          "wall_s": time.perf_counter() - t0}
+def _empty_stats(og, t0: float) -> dict:
+    return {"tasks": 0, "run": 0, "stolen": 0,
+            "speculated": 0, "speculation_wins": 0,
+            "retried": 0, "resumed": 0, "spill": "empty",
+            "csr_bytes": csr_footprint_bytes(og),
+            "wall_s": time.perf_counter() - t0}
 
+
+def _drive_tasks(eng, req, key, cfg: SchedulerConfig, tasks: list[Task],
+                 t0: float) -> tuple[dict[str, TaskResult], dict]:
+    """Spill, replay, and run one compiled ledger to completion — the
+    scaffolding shared by the per-k and all-k query paths."""
+    og = eng.og
     fp = eng.fingerprint
     plan_sig = plan_signature(fp, tasks)
     root = cfg.spill_dir or os.path.join(tempfile.gettempdir(),
@@ -412,15 +418,59 @@ def run_query(eng, entry, req, key,
         results = driver.run()
     finally:
         ledger.close()
-    total, per_node = aggregate(results, og.n,
-                                bool(req.return_per_node))
     stats = {"tasks": len(tasks), "resumed": len(completed),
              **{k: int(v) for k, v in driver.stats.items()},
              "n_workers": cfg.n_workers,
              "peak_task_bytes": driver.peak_task_bytes,
              "max_slice_bytes": spill.get("max_slice_bytes", 0),
-             "csr_bytes": csr_bytes, "spill": spill["spill"],
+             "csr_bytes": csr_footprint_bytes(og),
+             "spill": spill["spill"],
              "spill_bytes": spill.get("spill_bytes", 0),
              "ledger": ledger.path,
              "wall_s": time.perf_counter() - t0}
+    return results, stats
+
+
+def run_query(eng, entry, req, key,
+              cfg: SchedulerConfig) -> tuple[float, Optional[np.ndarray],
+                                             dict]:
+    """Execute one counting query out-of-core. Returns
+    (estimate, per_node, scheduler telemetry)."""
+    t0 = time.perf_counter()
+    og = eng.og
+    tasks = compile_tasks(entry, og, req,
+                          elem_budget=cfg.tile_elem_budget,
+                          target_tasks=cfg.target_tasks,
+                          max_units_per_task=cfg.max_units_per_task)
+    if not tasks:
+        per = np.zeros(og.n, np.float64) if req.return_per_node else None
+        return 0.0, per, _empty_stats(og, t0)
+    results, stats = _drive_tasks(eng, req, key, cfg, tasks, t0)
+    total, per_node = aggregate(results, og.n,
+                                bool(req.return_per_node))
     return total, per_node, stats
+
+
+def run_profile_query(eng, req, cfg: SchedulerConfig, groups,
+                      L: int) -> tuple[np.ndarray, dict]:
+    """Execute one k="all" profile pass out-of-core over the
+    depth-regrouped units. Returns ((L,) f64 device profile, scheduler
+    telemetry). Aggregation zero-pads each task's (r−1,) profile into
+    the common length, in sorted-task-id order — bit-exact against the
+    in-memory backends for the same reason the scalar path is."""
+    t0 = time.perf_counter()
+    og = eng.og
+    tasks = compile_profile_tasks(groups, og, req,
+                                  elem_budget=cfg.tile_elem_budget,
+                                  target_tasks=cfg.target_tasks,
+                                  max_units_per_task=cfg.max_units_per_task)
+    if not tasks:
+        return np.zeros(L, np.float64), _empty_stats(og, t0)
+    results, stats = _drive_tasks(eng, req, key=None, cfg=cfg,
+                                  tasks=tasks, t0=t0)
+    profile = np.zeros(L, np.float64)
+    for tid in sorted(results):
+        p = results[tid].profile
+        if p is not None:
+            profile[:p.size] += p
+    return profile, stats

@@ -35,6 +35,7 @@ class TaskResult:
     elapsed_s: float
     unit_ids: Optional[np.ndarray] = None     # per-node queries only
     unit_vals: Optional[np.ndarray] = None
+    profile: Optional[np.ndarray] = None      # k="all" tasks: (r−1,) f64
 
 
 def query_signature(fingerprint: str, plan_sig: str, req) -> str:
@@ -48,6 +49,10 @@ def query_signature(fingerprint: str, plan_sig: str, req) -> str:
     else:
         knobs = (req.effective_method, float(req.p), int(req.colors),
                  int(req.seed))
+    if req.k == "all":
+        # max_k changes the per-unit recursion depths, hence the answer;
+        # int-k signatures stay byte-stable with prior releases
+        knobs = knobs + (req.max_k,)
     payload = (fingerprint, plan_sig, req.k, req.engine,
                bool(req.return_per_node)) + knobs
     return hashlib.sha256(repr(payload).encode()).hexdigest()[:16]
@@ -90,6 +95,8 @@ class TaskLedger:
             if "units" in rec:
                 res.unit_ids = np.asarray(rec["units"], np.int64)
                 res.unit_vals = np.asarray(rec["values"], np.float64)
+            if "profile" in rec:
+                res.profile = np.asarray(rec["profile"], np.float64)
             done[rec["task"]] = res
         return done
 
@@ -127,6 +134,8 @@ class TaskLedger:
         if res.unit_ids is not None:
             rec["units"] = [int(u) for u in res.unit_ids]
             rec["values"] = [float(v) for v in res.unit_vals]
+        if res.profile is not None:
+            rec["profile"] = [float(v) for v in res.profile]
         self._write(rec)
 
     def close(self) -> None:

@@ -40,12 +40,13 @@ class Task:
     row indices within each unit's adjacency for §6 split tasks.
     """
     task_id: str
-    kind: str                       # "bucket" | "split"
+    kind: str                       # "bucket" | "split" | "profile"
     capacity: int
     tile_repr: str                  # "dense" | "bits"
     units: np.ndarray               # (U,) int32 global node ids
     pivots: Optional[np.ndarray]    # (U,) int32, split tasks only
     cost: float                     # Σ analytic unit cost (LPT + straggler)
+    r: int = 0                      # profile tasks: recursion depth rmax
 
     @property
     def n_units(self) -> int:
@@ -83,8 +84,10 @@ def compile_tasks(entry, og: OrientedGraph, req, *,
                   max_units_per_task: int = 4096) -> list[Task]:
     """Turn a cached :class:`~repro.engine.PlanEntry` into the task
     ledger. Deterministic in (plan, request knobs, chunking config) —
-    the resume contract."""
-    k = entry.plan.k
+    the resume contract. The depth comes from the *request*: plans are
+    k-agnostic (built once per session at the k=3 reference), so
+    ``entry.plan.k`` is not this query's k."""
+    k = req.k
     r = k - 1
     split_costs = []
     for sp in entry.splits:
@@ -129,6 +132,37 @@ def compile_tasks(entry, og: OrientedGraph, req, *,
                 task_id=f"s{sp.capacity}-{i:04d}-{_unit_hash(u, p)}",
                 kind="split", capacity=sp.capacity, tile_repr=repr_,
                 units=u, pivots=p, cost=float(costs[sl].sum())))
+    return tasks
+
+
+def compile_profile_tasks(groups, og: OrientedGraph, req, *,
+                          elem_budget: int, target_tasks: int = 32,
+                          max_units_per_task: int = 4096) -> list[Task]:
+    """Task ledger for one all-k profile pass: one chunked task stream
+    per :class:`~repro.core.plan.DepthGroup` (same-capacity units
+    sharing a certificate-clamped recursion depth). Task ids carry the
+    depth — two ledgers differing only in ``max_k`` never collide."""
+    group_costs = []
+    for g in groups:
+        real = g.nodes[g.nodes >= 0]
+        group_costs.append(unit_cost(og.out_deg[real], g.rmax + 1))
+    total = sum(float(c.sum()) for c in group_costs)
+    target = max(total / max(target_tasks, 1), 1.0)
+    tasks: list[Task] = []
+    for g, costs in zip(groups, group_costs):
+        real = g.nodes[g.nodes >= 0]
+        if real.size == 0:
+            continue
+        repr_ = pick_tile_repr(r=g.rmax, capacity=g.capacity,
+                               choice=req.engine, elem_budget=elem_budget)
+        for i, sl in enumerate(_chunk_by_cost(costs, target,
+                                              max_units_per_task)):
+            u = np.ascontiguousarray(real[sl], np.int32)
+            tasks.append(Task(
+                task_id=f"p{g.capacity}-r{g.rmax}-{i:04d}-{_unit_hash(u)}",
+                kind="profile", capacity=g.capacity, tile_repr=repr_,
+                units=u, pivots=None, cost=float(costs[sl].sum()),
+                r=g.rmax))
     return tasks
 
 

@@ -42,7 +42,8 @@ import dataclasses
 import threading
 from typing import Iterable, Optional, Union
 
-from ...engine import CountReport, CountRequest, graph_fingerprint
+from ...engine import (CountReport, CountRequest, derive_sweep_seed,
+                       graph_fingerprint)
 from ...graphs.formats import Graph
 from .pool import EngineFactory, EnginePool
 
@@ -207,9 +208,25 @@ class CliqueService:
             self._cv.notify_all()
         return ticket
 
-    def submit_many(self, jobs: Iterable[tuple[GraphRef, CountRequest]]
-                    ) -> list[Ticket]:
-        return [self.submit(ref, req) for ref, req in jobs]
+    def submit_many(self, jobs: Iterable[tuple[GraphRef, CountRequest]],
+                    *, decorrelate: bool = True) -> list[Ticket]:
+        """Batch submission with the same sampled-seed decorrelation as
+        :meth:`CliqueEngine.submit_many` — and it must happen HERE,
+        before :meth:`submit` computes each job's coalescing key: a
+        batch of R sampled replicates built from one template would
+        otherwise coalesce into ONE execution (sampled keys carry the
+        seed), silently collapsing R "independent" replicates into R
+        copies of a single estimate. Exact/adaptive entries are
+        untouched (their keys normalize the seed away). Pass
+        ``decorrelate=False`` to submit verbatim."""
+        out = []
+        for i, (ref, req) in enumerate(jobs):
+            if decorrelate and req.effective_method != "exact" \
+                    and not req.is_adaptive:
+                req = dataclasses.replace(
+                    req, seed=derive_sweep_seed(req.seed, i))
+            out.append(self.submit(ref, req))
+        return out
 
     # -- execution ---------------------------------------------------------
 

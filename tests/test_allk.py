@@ -1,0 +1,164 @@
+"""One-pass all-k profile conformance and validation.
+
+``CountRequest(k="all")`` answers the whole clique-number profile
+q_3..q_kmax from one tile pass. The profile must equal the per-k
+brute-force oracle (via the golden fixture, itself regenerated only
+from ``clique_count_bruteforce``) on every backend and both tile
+representations, bit-exactly; degenerate requests must be rejected up
+front; and same-graph exact k-sweeps through ``submit_many`` must
+coalesce into a single all-k execution.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.engine import BACKENDS, CliqueEngine, CountRequest
+from repro.engine.allk import MAX_AUTO_RMAX
+from repro.graphs import conformance_corpus
+from repro.graphs.generators import erdos_renyi
+
+FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "fixtures", "golden_counts.json")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return conformance_corpus()
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(FIXTURE) as f:
+        return json.load(f)
+
+
+def padded(profile, width: int) -> np.ndarray:
+    """Zero-pad a (possibly clique-number-trimmed) profile to width."""
+    out = np.zeros(width, np.int64)
+    out[:min(profile.size, width)] = profile[:width]
+    return out
+
+
+# -- conformance -----------------------------------------------------------
+
+def test_profile_matches_oracle_all_backends_and_reprs(corpus, golden):
+    """4 backends x {bitset, dense}: every profile column must equal the
+    pinned per-k oracle counts, from ONE pass per (backend, repr)."""
+    for g in corpus:
+        pinned = np.asarray(golden[g.name]["profile"], np.int64)
+        kmax = 2 + len(pinned)
+        eng = CliqueEngine(g)
+        for b in BACKENDS:
+            for engine in ("bitset", "dense"):
+                rep = eng.submit(CountRequest(k="all", max_k=kmax,
+                                              backend=b, engine=engine))
+                got = padded(rep.profile, len(pinned))
+                np.testing.assert_array_equal(
+                    got, pinned, err_msg=f"{g.name} {b}/{engine}")
+                assert rep.estimate == float(rep.profile.sum())
+
+
+def test_uncapped_profile_extends_to_clique_number(golden):
+    """Without max_k the profile runs to the graph's clique number —
+    the complete-unit host path is exact at any depth, so K10's q_8..
+    q_10 appear beyond the fixture's pinned k <= 7 range."""
+    corpus = conformance_corpus()
+    g = next(g for g in corpus if g.name == "K10")
+    rep = CliqueEngine(g).submit(CountRequest(k="all"))
+    want = np.array([120, 210, 252, 210, 120, 45, 10, 1], np.int64)
+    np.testing.assert_array_equal(rep.profile, want)
+    pinned = np.asarray(golden["K10"]["profile"], np.int64)
+    np.testing.assert_array_equal(rep.profile[:len(pinned)], pinned)
+
+
+def test_profile_trims_trailing_zeros(corpus):
+    """A graph whose clique number is below the pinned range returns a
+    short profile, not trailing zero columns."""
+    for g in corpus:
+        rep = CliqueEngine(g).submit(CountRequest(k="all", max_k=7))
+        if rep.profile.size:
+            assert rep.profile[-1] > 0, (g.name, rep.profile)
+
+
+# -- depth guard -----------------------------------------------------------
+
+def test_auto_depth_guard_requires_max_k():
+    """A graph with a deep non-complete unit must refuse an uncapped
+    all-k (device recursion past MAX_AUTO_RMAX) and point at max_k."""
+    g = erdos_renyi(32, 0.85, seed=7)
+    eng = CliqueEngine(g)
+    with pytest.raises(ValueError, match="max_k"):
+        eng.submit(CountRequest(k="all"))
+    # the same request capped runs, and matches the per-k exact path
+    rep = eng.submit(CountRequest(k="all", max_k=5))
+    for j, k in enumerate((3, 4, 5)):
+        want = eng.submit(CountRequest(k=k)).count
+        got = int(rep.profile[j]) if j < rep.profile.size else 0
+        assert got == want, (k, rep.profile)
+    assert MAX_AUTO_RMAX == 8   # docs + error message quote this bound
+
+
+# -- validation ------------------------------------------------------------
+
+def test_degenerate_k_rejected_up_front():
+    for bad in (2, 0, -1, True, 3.0, "al", None):
+        with pytest.raises(ValueError):
+            CountRequest(k=bad).validate()
+
+
+def test_allk_rejects_non_exact_modes():
+    for kw in (dict(mode="list", limit=5),
+               dict(method="color", colors=4),
+               dict(method="edge", p=0.5),
+               dict(rel_error=0.1, method="auto"),
+               dict(return_per_node=True),
+               dict(split_threshold=8),
+               dict(max_k=2),
+               dict(max_k="7")):
+        with pytest.raises(ValueError):
+            CountRequest(k="all", **kw).validate()
+    # max_k is an all-k knob only
+    with pytest.raises(ValueError):
+        CountRequest(k=4, max_k=6).validate()
+
+
+def test_ooc_resolved_default_backend_rejects_listing(corpus):
+    """A mode="list" request with backend=None on an ooc-default engine
+    must fail validation (no in-memory emit path) instead of dying on
+    a missing tile budget mid-stream."""
+    eng = CliqueEngine(corpus[0], backend="ooc")
+    with pytest.raises(ValueError, match="listing|list"):
+        list(eng.stream(CountRequest(k=3, mode="list", chunk=8)))
+
+
+# -- sweep coalescing ------------------------------------------------------
+
+def test_submit_many_coalesces_exact_sweep(corpus):
+    g = next(g for g in corpus if g.n <= 64)
+    eng = CliqueEngine(g)
+    ks = (3, 4, 5)
+    want = {k: eng.submit(CountRequest(k=k)).count for k in ks}
+    reps = eng.submit_many([CountRequest(k=k) for k in ks])
+    assert [r.k for r in reps] == list(ks)
+    for r in reps:
+        assert r.cache["sweep_coalesced"] == len(ks)
+        assert r.profile is None          # fan-out reports are per-k
+        assert int(round(r.estimate)) == want[r.k]
+
+
+def test_submit_many_coalescing_opt_out_and_mixed_batches(corpus):
+    g = next(g for g in corpus if g.n <= 64)
+    eng = CliqueEngine(g)
+    reps = eng.submit_many([CountRequest(k=k) for k in (3, 4)],
+                           coalesce_sweeps=False)
+    assert all("sweep_coalesced" not in r.cache for r in reps)
+    # a sampled entry breaks eligibility: the batch runs per-request
+    mixed = eng.submit_many([CountRequest(k=3),
+                             CountRequest(k=4, method="color", colors=4)])
+    assert all("sweep_coalesced" not in r.cache for r in mixed)
+    # per-request backends must also match for the batch to coalesce
+    split = eng.submit_many([CountRequest(k=3),
+                             CountRequest(k=4, backend="shard_map")])
+    assert all("sweep_coalesced" not in r.cache for r in split)

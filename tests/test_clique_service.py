@@ -76,6 +76,35 @@ def test_exact_queries_coalesce_across_seeds_sampled_do_not(graphs):
     assert stats["coalesced"] == 1 and stats["executed"] == 3
 
 
+def test_submit_many_decorrelates_sampled_replicates(graphs):
+    """Ordering pin: submit_many must fold each batch index into the
+    sampled seeds BEFORE submit() computes the coalescing key. R
+    identical sampled replicates in one batch are meant as independent
+    estimates — submitted verbatim they would share a query key and
+    collapse into R copies of ONE execution."""
+    g = graphs[1]
+    base = CountRequest(k=3, method="color", colors=3, seed=7)
+    svc = CliqueService()
+    tickets = svc.submit_many([(g, base)] * 3)
+    svc.drain()
+    stats = svc.stats()
+    assert stats["coalesced"] == 0 and stats["executed"] == 3
+    seeds = {t.result().params["seed"] for t in tickets}
+    assert len(seeds) == 3                     # distinct derived seeds
+    # exact replicates still coalesce (their keys normalize the seed)
+    svc2 = CliqueService()
+    svc2.submit_many([(g, CountRequest(k=3, seed=s)) for s in (0, 1, 2)])
+    svc2.drain()
+    s2 = svc2.stats()
+    assert s2["coalesced"] == 2 and s2["executed"] == 1
+    # and the escape hatch submits verbatim: one execution, R copies
+    svc3 = CliqueService()
+    svc3.submit_many([(g, base)] * 3, decorrelate=False)
+    svc3.drain()
+    s3 = svc3.stats()
+    assert s3["coalesced"] == 2 and s3["executed"] == 1
+
+
 def test_lru_eviction_closes_session_and_readmits(graphs, bf):
     a, b, _ = graphs
     svc = CliqueService(max_sessions=1)

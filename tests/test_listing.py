@@ -160,6 +160,32 @@ def test_predicate_filters_and_composes_with_limit():
     assert (np.sort(rep.cliques, axis=1)[:, 0] == 0).all()
 
 
+def test_sparse_predicate_limit_counts_matches_only():
+    """Ordering pin: the limit budget is spent on predicate *matches*,
+    never on enumerated-then-filtered rows. With a sparse predicate
+    (10 of K12's 220 triangles contain both 0 and 1) and limit=4, a
+    limit applied before filtering would stop the stream after 4
+    enumerated triangles and return almost nothing; the contract is
+    exactly 4 rows, every one a match."""
+    g = complete_graph(12)
+    eng = CliqueEngine(g)
+    req = CountRequest(k=3, mode="list", chunk=8,
+                       predicate=containing(0, 1), limit=4)
+    rep = eng.submit(req)
+    assert rep.count == 4 and len(rep.cliques) == 4
+    assert rep.listing["truncated"]
+    srt = np.sort(rep.cliques, axis=1)
+    assert (srt[:, 0] == 0).all() and (srt[:, 1] == 1).all()
+    # the stream kept enumerating past the first `limit` candidates to
+    # find its matches — the filter ran before the budget
+    assert rep.listing["enumerated"] > 4
+    # and with the limit above the match count, all 10 matches arrive
+    rep = eng.submit(CountRequest(k=3, mode="list", chunk=8,
+                                  predicate=containing(0, 1)))
+    assert rep.count == 10 and not rep.listing["truncated"]
+    assert_valid_cliques(g, rep.cliques)
+
+
 def test_per_node_attribution_header(corpus, oracle_sets):
     """Column 0 of each row is the ≺-minimum responsible node: the
     per-node listing histogram must match the exact per-node counts."""
