@@ -1,0 +1,166 @@
+"""Gateway serving latency: store hits vs recompute.
+
+The scenario the result store exists for: repeated production traffic
+over a small set of hot graphs. Phase 1 (cold) runs a mixed workload
+through a fresh :class:`ServingGateway` — every query executes on an
+engine and is persisted. Phase 2 (warm) replays the workload against
+the *same store from a fresh gateway* (the restart path: new process,
+nothing resident but the disk), measuring pure store-hit latency.
+
+Reported per workload row:
+
+- ``cold_p50_us`` / ``cold_p99_us`` — per-query execute latency;
+- ``warm_p50_us`` / ``warm_p99_us`` — per-query store-hit latency
+  (submit → born-resolved ticket → result);
+- ``speedup`` — cold p50 / warm p50; the store contract asserts ≥ 10×
+  before the record is appended;
+- ``hit_rate`` — store hits / lookups during the warm phase (must be
+  1.0: every replayed query is persistable and persisted).
+
+Every warm answer is checked bit-exact against its cold original
+(estimate, count, and the CI fields round-trip through JSON + a
+process restart). One record per run is appended to
+``BENCH_serving.json`` — the trajectory ``scripts/check_bench.py
+--serving`` gates nightly.
+"""
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from repro.engine import CountRequest
+from repro.serving.gateway import ServingGateway
+
+from .common import emit
+
+TRAJECTORY = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_serving.json")
+
+WARM_REPLAYS = 5   # store hits are cheap; replay for stable percentiles
+
+
+def _graphs():
+    """Serving-scale graphs (the service_throughput regime): small
+    enough that per-query fixed costs dominate, which is exactly what
+    a store hit skips."""
+    from repro.graphs import barabasi_albert, erdos_renyi_m, rmat
+    return [rmat(8, 6, seed=7, name="gw-rmat8"),
+            barabasi_albert(500, 7, seed=13, name="gw-ba500"),
+            erdos_renyi_m(400, 1800, seed=21, name="gw-er400")]
+
+
+def _workload(graphs):
+    """12 distinct persistable queries: exact k ∈ {3,4,5} and one color
+    probe per graph — the method families a production mix spans."""
+    jobs = []
+    for g in graphs:
+        jobs += [(g, CountRequest(k=k)) for k in (3, 4, 5)]
+        jobs += [(g, CountRequest(k=4, method="color", colors=10,
+                                  seed=3))]
+    return jobs
+
+
+def _timed_pass(gw, jobs):
+    """Sequential per-query latencies (us) + the reports, submit →
+    result one at a time so each sample isolates one query's cost."""
+    lat, reports = [], []
+    for g, req in jobs:
+        t0 = time.perf_counter()
+        reports.append(gw.submit(g, req).result(timeout=600))
+        lat.append((time.perf_counter() - t0) * 1e6)
+    return np.asarray(lat), reports
+
+
+def _append_trajectory(rows: list) -> None:
+    """Same atomic accumulate-across-PRs idiom as kernels_bench."""
+    import jax
+    history = []
+    if os.path.exists(TRAJECTORY):
+        try:
+            with open(TRAJECTORY) as f:
+                history = json.load(f)
+        except ValueError:
+            os.replace(TRAJECTORY, TRAJECTORY + ".corrupt")
+            print(f"# unreadable {TRAJECTORY} moved aside; starting a "
+                  f"fresh trajectory", file=sys.stderr, flush=True)
+    history.append({
+        "ran_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "bench": "gateway",
+        "backend": jax.default_backend(),
+        "host": "ci" if os.environ.get("CI") else "dev",
+        "rows": rows,
+    })
+    tmp = TRAJECTORY + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, TRAJECTORY)
+    print(f"# serving trajectory appended to {TRAJECTORY} "
+          f"({len(history)} records)", file=sys.stderr, flush=True)
+
+
+def main() -> None:
+    graphs = _graphs()
+    jobs = _workload(graphs)
+    store_dir = tempfile.mkdtemp(prefix="gw-bench-")
+    try:
+        # untimed: absorb process-global one-time costs (device init,
+        # module jits) so the cold phase times the per-query work
+        warmup = ServingGateway()
+        warmup.submit(graphs[0], CountRequest(k=3)).result(timeout=600)
+        warmup.shutdown()
+
+        gw = ServingGateway(store_dir=store_dir)
+        cold, cold_reports = _timed_pass(gw, jobs)
+        assert gw.stats()["store"]["entries"] == len(jobs)
+        gw.shutdown()
+
+        # the restart path: fresh gateway, nothing resident but the disk
+        gw2 = ServingGateway(store_dir=store_dir, warm_start=False)
+        warm, warm_reports = _timed_pass(
+            gw2, [j for _ in range(WARM_REPLAYS) for j in jobs])
+        store = gw2.stats()["store"]
+        assert store["hits"] == len(jobs) * WARM_REPLAYS
+        hit_rate = store["hit_rate"]
+        for i, rep in enumerate(warm_reports):
+            orig = cold_reports[i % len(jobs)]
+            assert rep.estimate == orig.estimate, (i, rep.k)
+            assert rep.count == orig.count
+            assert rep.ci_low == orig.ci_low
+            assert rep.ci_high == orig.ci_high
+        assert gw2.stats()["service"]["executed"] == 0
+        gw2.shutdown()
+    finally:
+        shutil.rmtree(store_dir, ignore_errors=True)
+
+    cold_p50, cold_p99 = np.percentile(cold, [50, 99])
+    warm_p50, warm_p99 = np.percentile(warm, [50, 99])
+    speedup = cold_p50 / max(warm_p50, 1e-9)
+    emit("gateway_load/cold_execute", cold_p50 / 1e6,
+         f"p50_us={cold_p50:.0f};p99_us={cold_p99:.0f};"
+         f"queries={len(jobs)}")
+    emit("gateway_load/warm_store_hit", warm_p50 / 1e6,
+         f"p50_us={warm_p50:.0f};p99_us={warm_p99:.0f};"
+         f"speedup={speedup:.1f};hit_rate={hit_rate:.2f}")
+    assert speedup >= 10.0, \
+        f"store hit must be ≥10x faster than recompute, got {speedup:.1f}x"
+    assert hit_rate == 1.0, f"warm phase missed the store: {hit_rate}"
+    _append_trajectory([{
+        "workload": "mixed3",
+        "graphs": len(graphs),
+        "queries": len(jobs),
+        "warm_replays": WARM_REPLAYS,
+        "cold_p50_us": float(cold_p50),
+        "cold_p99_us": float(cold_p99),
+        "warm_p50_us": float(warm_p50),
+        "warm_p99_us": float(warm_p99),
+        "speedup": float(speedup),
+        "hit_rate": float(hit_rate),
+    }])
+
+
+if __name__ == "__main__":
+    main()

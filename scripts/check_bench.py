@@ -8,13 +8,15 @@ packed uint32 paths) to ``BENCH_kernels.json``;
 records (one-pass all-k profile vs the equivalent per-k sweep) to the
 same file; ``benchmarks/fig6_stragglers.py --scheduler`` appends the
 out-of-core scheduler's speculation-recovery and memory-footprint
-record to ``BENCH_scheduler.json``. This script turns those logs into
-gates:
+record to ``BENCH_scheduler.json``; ``benchmarks/gateway_load.py``
+appends the serving gateway's store-hit latency record to
+``BENCH_serving.json``. This script turns those logs into gates:
 
   PYTHONPATH=src python scripts/check_bench.py --run     # nightly CI
   PYTHONPATH=src python scripts/check_bench.py           # compare last 2
   PYTHONPATH=src python scripts/check_bench.py --scheduler --run
   PYTHONPATH=src python scripts/check_bench.py --allk --run
+  PYTHONPATH=src python scripts/check_bench.py --serving --run
 
 ``--run`` executes a fresh benchmark (appending the new record), then
 compares it against the latest *prior* record. Failure conditions, per
@@ -50,6 +52,7 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TRAJECTORY = os.path.join(REPO, "BENCH_kernels.json")
 SCHED_TRAJECTORY = os.path.join(REPO, "BENCH_scheduler.json")
+SERVING_TRAJECTORY = os.path.join(REPO, "BENCH_serving.json")
 
 
 def row_key(row: dict) -> tuple:
@@ -167,6 +170,46 @@ def compare_scheduler(prev: dict, new: dict, ratio: float) -> list:
     return regressions
 
 
+def compare_serving(prev: dict, new: dict, ratio: float) -> list:
+    """Serving-trajectory gate, per workload row:
+
+    - ``warm_p50_us`` / ``warm_p99_us`` (the store-hit latencies the
+      gateway is accountable for) may not regress past ``ratio`` —
+      same provenance rules as the kernel wall gate; the cold phase is
+      engine-sweep territory and is not gated here;
+    - ``hit_rate`` may not drop at all: the warm phase replays only
+      persistable queries, so any miss means persistence broke;
+    - ``speedup`` must stay ≥ 10.0 — the benchmark asserts this before
+      appending, so tripping it here means the record was edited by
+      hand or the contract was weakened."""
+    regressions = []
+    prev_rows = {r["workload"]: r for r in prev["rows"]}
+    new_rows = {r["workload"]: r for r in new["rows"]}
+    for key in sorted(prev_rows.keys() | new_rows.keys()):
+        if key not in new_rows:
+            print(f"  note: row {key} vanished from the new run")
+            continue
+        if key not in prev_rows:
+            print(f"  note: row {key} is new in this run")
+            continue
+        p, n = prev_rows[key], new_rows[key]
+        for field in ("warm_p50_us", "warm_p99_us"):
+            if n[field] > ratio * p[field]:
+                regressions.append(
+                    f"({key}) {field}: {p[field]:.0f} -> "
+                    f"{n[field]:.0f}us "
+                    f"({n[field] / p[field]:.2f}x > {ratio}x)")
+        if n["hit_rate"] < p["hit_rate"]:
+            regressions.append(
+                f"({key}) hit_rate: {p['hit_rate']:.2f} -> "
+                f"{n['hit_rate']:.2f} (any drop fails)")
+        if n["speedup"] < 10.0:
+            regressions.append(
+                f"({key}) speedup: {n['speedup']:.1f}x < 10x "
+                f"(store-hit contract)")
+    return regressions
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--run", action="store_true",
@@ -182,17 +225,23 @@ def main() -> int:
                     help="gate the allk_profile-tagged records in "
                          "BENCH_kernels.json (one-pass all-k profile "
                          "vs per-k sweep) instead of the kernel rows")
+    ap.add_argument("--serving", action="store_true",
+                    help="gate BENCH_serving.json (the gateway store-"
+                         "hit latency trajectory) instead of the "
+                         "kernel one")
     args = ap.parse_args()
-    if args.scheduler and args.allk:
-        ap.error("--scheduler and --allk are mutually exclusive")
+    if sum((args.scheduler, args.allk, args.serving)) > 1:
+        ap.error("--scheduler/--allk/--serving are mutually exclusive")
 
-    trajectory = SCHED_TRAJECTORY if args.scheduler else TRAJECTORY
+    trajectory = (SCHED_TRAJECTORY if args.scheduler else
+                  SERVING_TRAJECTORY if args.serving else TRAJECTORY)
     if args.run:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
             env.get("PYTHONPATH", "")
         cmd = (["-m", "benchmarks.fig6_stragglers", "--scheduler"]
                if args.scheduler else
+               ["-m", "benchmarks.gateway_load"] if args.serving else
                ["-m", "benchmarks.allk_profile"] if args.allk else
                ["-m", "benchmarks.kernels_bench"])
         print(f"running {cmd[1]} ...", flush=True)
@@ -205,7 +254,7 @@ def main() -> int:
     with open(trajectory) as f:
         full_history = json.load(f)
     history = full_history
-    if not args.scheduler:
+    if not args.scheduler and not args.serving:
         # BENCH_kernels.json interleaves kernel and allk_profile
         # records; compare like against like (untagged = kernels)
         want = "allk_profile" if args.allk else "kernels"
@@ -229,6 +278,7 @@ def main() -> int:
     print(f"comparing run {new.get('ran_at')} against "
           f"{prev.get('ran_at')} ({len(new['rows'])} rows)")
     gate = (compare_scheduler if args.scheduler else
+            compare_serving if args.serving else
             compare_allk if args.allk else compare)
     regressions = gate(prev, new,
                        args.ratio if same_machine else float("inf"))

@@ -39,10 +39,20 @@ python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
 # an injected task fault (retried) AND a forced straggler (speculated —
 # both asserted by the launcher), still reproducing the golden count
 ooc_spill="$(mktemp -d)"
-trap 'rm -rf "$ooc_spill"' EXIT
+gw_store="$(mktemp -d)"
+trap 'rm -rf "$ooc_spill" "$gw_store"' EXIT
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 4 \
     --backend ooc --workers 4 --spill-dir "$ooc_spill" \
     --inject-fault 1 --inject-straggler 4 --assert-golden
 
 python -m repro.launch.count --serve --graph rmat:7:4,er:60:150 \
     --k 3,4 --repeat 2 --max-sessions 1
+
+# gateway smoke, two invocations against one store: the first executes
+# and persists (its own second pass must be all store hits), the second
+# is a cold-process restart that must answer everything from disk with
+# zero engine executions — both asserted by --serve-gateway itself
+python -m repro.launch.count --serve-gateway --graph rmat:7:4,er:60:150 \
+    --k 3,4 --store-dir "$gw_store" --deadline 300
+python -m repro.launch.count --serve-gateway --graph rmat:7:4,er:60:150 \
+    --k 3,4 --store-dir "$gw_store" --deadline 300

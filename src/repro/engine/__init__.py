@@ -15,11 +15,12 @@ from .engine import (CliqueEngine, PlanEntry, derive_sweep_seed,
                      graph_fingerprint)
 from .report import (ADAPTIVE_METHODS, BACKENDS, LISTING_BACKENDS,
                      METHODS, MODES, TILE_ENGINES, CountReport,
-                     CountRequest)
+                     CountRequest, report_from_json, report_to_json)
 
 __all__ = [
     "CliqueEngine", "CountRequest", "CountReport", "PlanEntry",
     "Backend", "LocalBackend", "ShardMapBackend", "ExecutableCache",
     "ADAPTIVE_METHODS", "BACKENDS", "LISTING_BACKENDS", "METHODS",
     "MODES", "TILE_ENGINES", "derive_sweep_seed", "graph_fingerprint",
+    "report_from_json", "report_to_json",
 ]

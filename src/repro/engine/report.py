@@ -205,6 +205,19 @@ class CountRequest:
         # serves every k of a session, including k="all"
         return (self.max_capacity, self.split_threshold)
 
+    @property
+    def is_persistable(self) -> bool:
+        """True when the answer's identity survives a process restart.
+
+        Listing predicates coalesce by *callable identity*
+        (``id(self.predicate)`` inside :meth:`query_key`) — an address
+        that means nothing in the next process, so no store could ever
+        match a persisted entry back to the "same" predicate. Every
+        other request is content-keyed end to end and safe to persist
+        in :class:`repro.serving.store.ResultStore`.
+        """
+        return self.predicate is None
+
     def query_key(self, default_backend: str = "local") -> tuple:
         """Identity of the *answer* this request produces — the coalescing
         key used by ``repro.serving.cliques``. Two requests with equal
@@ -216,6 +229,18 @@ class CountRequest:
         instead: two users asking for "q_k within 5% at 99%" are served
         by one controller run regardless of their seeds or the sampling
         starting points the controller will escalate past anyway.
+
+        Stability contract: for persistable requests (see
+        :attr:`is_persistable`) the key is also the *durable* content
+        address of :class:`repro.serving.store.ResultStore` — it is
+        hashed via ``repr()`` and compared across process restarts, so
+        it must contain only process-independent primitives (ints,
+        floats, strings, bools, None, nested tuples thereof; the one
+        exception, ``id(predicate)``, is exactly what
+        ``is_persistable`` excludes). Reordering or widening this tuple
+        silently invalidates every persisted store entry — acceptable
+        (the store recomputes misses) but never free, so change the
+        layout deliberately, not incidentally.
         """
         backend = self.backend or default_backend
         if self.is_adaptive:
@@ -276,3 +301,116 @@ class CountReport:
     @property
     def count(self) -> int:
         return int(round(self.estimate))
+
+
+# -- JSON round-trip ---------------------------------------------------------
+#
+# The persistent result store (repro.serving.store) saves every report
+# as JSON. Python's json module prints floats with repr (shortest
+# round-tripping form), so float64 payloads — estimate, per_node, the
+# CI fields — survive save→load bit-exactly; int payloads (profile,
+# cliques) are exact by construction. Tuples inside telemetry dicts
+# (plan_summary buckets, estimator knobs) normalize to lists: telemetry
+# is for reading, not re-keying, so list-vs-tuple identity is not part
+# of the round-trip contract. numpy scalars are converted to their
+# Python equivalents on the way out.
+
+REPORT_SCHEMA = 1
+
+
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, np.integer):
+        return int(obj)
+    if isinstance(obj, np.floating):
+        return float(obj)
+    if isinstance(obj, np.bool_):
+        return bool(obj)
+    return obj
+
+
+def report_to_json(report: CountReport) -> dict:
+    """Serialize a :class:`CountReport` to a JSON-able dict.
+
+    ``report_from_json(report_to_json(r))`` reconstructs every
+    answer-bearing field bit-exactly: ``estimate``/``count``,
+    ``per_node`` (float64), ``profile`` (int64), ``cliques`` (int32,
+    shape preserved), and the CI fields. ``mrc`` round-trips as a flat
+    scalar dataclass.
+    """
+    cliques = report.cliques
+    return {
+        "schema": REPORT_SCHEMA,
+        "k": report.k,
+        "method": report.method,
+        "backend": report.backend,
+        "estimate": float(report.estimate),
+        "per_node": (None if report.per_node is None
+                     else [float(v) for v in report.per_node]),
+        "mrc": _jsonable(dataclasses.asdict(report.mrc)),
+        "plan_summary": _jsonable(report.plan_summary),
+        "balance": _jsonable(report.balance),
+        "per_round_bytes": _jsonable(report.per_round_bytes),
+        "timings": _jsonable(report.timings),
+        "cache": _jsonable(report.cache),
+        "n_workers": int(report.n_workers),
+        "params": _jsonable(report.params),
+        "ci_low": None if report.ci_low is None else float(report.ci_low),
+        "ci_high": (None if report.ci_high is None
+                    else float(report.ci_high)),
+        "achieved_rel_error": (None if report.achieved_rel_error is None
+                               else float(report.achieved_rel_error)),
+        "escalations": int(report.escalations),
+        "estimator": _jsonable(report.estimator),
+        "cliques": (None if cliques is None
+                    else {"shape": [int(s) for s in cliques.shape],
+                          "rows": _jsonable(cliques)}),
+        "listing": _jsonable(report.listing),
+        "profile": (None if report.profile is None
+                    else [int(v) for v in report.profile]),
+    }
+
+
+def report_from_json(obj: dict) -> CountReport:
+    """Inverse of :func:`report_to_json`. Raises ``KeyError`` /
+    ``TypeError`` / ``ValueError`` on malformed input — callers that
+    must tolerate corruption (the result store's disk reads) catch and
+    treat it as a miss, mirroring the task ledger's torn-tail
+    discipline."""
+    schema = obj["schema"]
+    if schema != REPORT_SCHEMA:
+        raise ValueError(f"unknown report schema {schema!r}")
+    cliques = obj["cliques"]
+    if cliques is not None:
+        cliques = np.asarray(cliques["rows"], np.int32).reshape(
+            cliques["shape"])
+    return CountReport(
+        k=obj["k"],
+        method=obj["method"],
+        backend=obj["backend"],
+        estimate=float(obj["estimate"]),
+        per_node=(None if obj["per_node"] is None
+                  else np.asarray(obj["per_node"], np.float64)),
+        mrc=mrc_mod.MRCStats(**obj["mrc"]),
+        plan_summary=obj["plan_summary"],
+        balance=obj["balance"],
+        per_round_bytes=obj["per_round_bytes"],
+        timings=obj["timings"],
+        cache=obj["cache"],
+        n_workers=int(obj["n_workers"]),
+        params=obj["params"],
+        ci_low=obj["ci_low"],
+        ci_high=obj["ci_high"],
+        achieved_rel_error=obj["achieved_rel_error"],
+        escalations=int(obj["escalations"]),
+        estimator=obj["estimator"],
+        cliques=cliques,
+        listing=obj["listing"],
+        profile=(None if obj["profile"] is None
+                 else np.asarray(obj["profile"], np.int64)),
+    )

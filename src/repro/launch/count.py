@@ -27,6 +27,16 @@ graphs exercises eviction):
 
   PYTHONPATH=src python -m repro.launch.count --serve \
       --graph rmat:7:4,er:60:150 --k 3,4 --repeat 2 --max-sessions 1
+
+``--serve-gateway`` layers the production front end on top: admission
+control, per-request deadlines (``--deadline``), and — with
+``--store-dir`` — a persistent result store. The workload runs twice:
+the second pass must be answered entirely from the store. Re-running
+the same command against the same ``--store-dir`` exercises the
+restart path (every answer served without touching an engine):
+
+  PYTHONPATH=src python -m repro.launch.count --serve-gateway \
+      --graph rmat:7:4,er:60:150 --k 3,4 --store-dir /tmp/clique-store
 """
 import argparse
 import os
@@ -112,6 +122,84 @@ def _serve(args, backend: str, reqs) -> int:
     if len(set(refs)) > args.max_sessions:   # duplicate specs share a session
         assert stats["pool"]["evictions"] > 0, \
             "graphs exceed the pool but nothing was evicted"
+    return 0
+
+
+def _serve_gateway(args, backend: str, reqs) -> int:
+    """--serve-gateway: the full production path — gateway → store →
+    service → engine. Runs the workload twice: pass 1 executes (or, on
+    a restarted store, serves every answer from disk), pass 2 must be
+    100% store hits. The invariants are asserted, so this doubles as
+    the tier-1 gateway smoke."""
+    import dataclasses
+    import json
+    import time
+
+    from ..serving.gateway import ServingGateway
+
+    specs = args.graph.split(",")
+    graphs = [_make_graph(s, args.seed) for s in specs]
+    if args.per_node:
+        print("warning: --per-node is ignored in --serve-gateway mode",
+              file=sys.stderr)
+    sweep = [dataclasses.replace(r, return_per_node=False) for r in reqs]
+
+    gw = ServingGateway(store_dir=args.store_dir,
+                        max_sessions=args.max_sessions,
+                        default_backend=backend,
+                        default_deadline_s=args.deadline)
+    restarted = False
+    if args.store_dir is not None:
+        s0 = gw.stats()
+        restarted = s0["store"]["entries"] > 0
+        if restarted:
+            print(f"restart: {s0['store']['entries']} stored answers, "
+                  f"{s0['warmed_graphs']} persisted graphs, "
+                  f"{s0['warmed_sessions']} sessions pre-warmed")
+    jobs = [(g, r) for _ in range(max(args.repeat, 1))
+            for g in graphs for r in sweep]
+    for g in graphs:
+        print(f"graph {g.name}: n={g.n} m={g.m}")
+
+    def run_pass(name: str):
+        t0 = time.perf_counter()
+        tickets = [gw.submit(g, r) for g, r in jobs]
+        reports = [t.result(timeout=600) for t in tickets]
+        wall = time.perf_counter() - t0
+        hits = sum(t.from_store for t in tickets)
+        print(f"{name}: {len(jobs)} queries in {wall:.2f}s "
+              f"({hits} store hits)")
+        return tickets, reports, wall
+
+    t1, r1, wall1 = run_pass("pass 1")
+    for (g, _), rep in zip(jobs[:len(graphs) * len(sweep)], r1):
+        print(json.dumps({
+            "graph": g.name, "k": rep.k, "method": rep.method,
+            "backend": rep.backend, "estimate": rep.estimate,
+            "count": rep.count, "cache": rep.cache,
+        }, default=str))
+    if restarted:
+        # every answer must come off disk without touching an engine
+        assert all(t.from_store for t in t1), \
+            "restarted gateway missed its own store"
+        assert gw.stats()["service"]["executed"] == 0, \
+            "restarted gateway re-executed a stored answer"
+        print("restart warm-start ok: every answer served from the "
+              "store, zero engine executions")
+    t2, r2, wall2 = run_pass("pass 2")
+    if args.store_dir is not None:
+        assert all(t.from_store for t in t2), \
+            "second pass was not fully served from the store"
+        for a, b in zip(r1, r2):
+            assert a.estimate == b.estimate, (a.k, a.estimate, b.estimate)
+        print(f"store ok: pass 2 bit-exact from disk "
+              f"({wall1 / max(wall2, 1e-9):.0f}x faster)")
+    stats = gw.stats()
+    print(json.dumps({"gateway": stats}, indent=1, default=str))
+    assert stats["service"]["failed"] == 0, "gateway reported failures"
+    assert stats["deadline_expired"] == 0, \
+        "workload blew its --deadline"
+    gw.shutdown()
     return 0
 
 
@@ -205,7 +293,21 @@ def main() -> int:
                     help="--serve: submit the workload this many times "
                          "(duplicate users; exercises coalescing)")
     ap.add_argument("--max-sessions", type=int, default=4,
-                    help="--serve: LRU engine-pool capacity")
+                    help="--serve/--serve-gateway: LRU engine-pool "
+                         "capacity")
+    ap.add_argument("--serve-gateway", action="store_true",
+                    help="drive the production ServingGateway (admission "
+                         "control, deadlines, persistent result store); "
+                         "runs the workload twice and asserts the second "
+                         "pass is served from the store")
+    ap.add_argument("--store-dir", default=None,
+                    help="--serve-gateway: persistent result-store "
+                         "directory; reuse across invocations to "
+                         "exercise the restart warm-start path")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="--serve-gateway: per-request deadline in "
+                         "seconds (expired tickets fail with "
+                         "DeadlineExceeded)")
     args = ap.parse_args()
 
     if args.devices and "XLA_FLAGS" not in os.environ:
@@ -280,6 +382,13 @@ def main() -> int:
     except ValueError as e:
         ap.error(str(e))
 
+    if args.serve and args.serve_gateway:
+        ap.error("--serve and --serve-gateway are mutually exclusive")
+    if not args.serve_gateway and (args.store_dir is not None
+                                   or args.deadline is not None):
+        ap.error("--store-dir/--deadline are --serve-gateway knobs")
+    if args.serve_gateway:
+        return _serve_gateway(args, backend, reqs)
     if args.serve:
         return _serve(args, backend, reqs)
 

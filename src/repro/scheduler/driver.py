@@ -96,7 +96,10 @@ def _pow2_pad(a: np.ndarray, fill: int) -> np.ndarray:
 
 
 def _fixed_batches(arr: np.ndarray, B: int, fill: int):
-    for i in range(0, max(len(arr), 1), B):
+    """Yield fixed-width (B,) tiles of ``arr``, padding the last with
+    ``fill``. An empty input yields nothing: a zero-unit task must do
+    zero device work, not dispatch one tile of pure padding."""
+    for i in range(0, len(arr), B):
         tile = arr[i:i + B]
         if len(tile) < B:
             tile = np.concatenate(
@@ -216,7 +219,8 @@ class Driver:
         self.failure: Optional[BaseException] = None
         self.failed_task: Optional[str] = None
         self.stats = collections.Counter(
-            run=0, stolen=0, speculated=0, speculation_wins=0, retried=0)
+            run=0, stolen=0, speculated=0, speculation_wins=0, retried=0,
+            abandoned_failures=0)
         self.peak_task_bytes = 0
 
     # -- scheduling --------------------------------------------------------
@@ -280,10 +284,27 @@ class Driver:
                     give_up = attempt > self.cfg.max_retries
                     if give_up:
                         self.stats["retried"] -= 1  # last one wasn't a retry
-                        if self.failure is None:
+                        self.running.pop((task.task_id, exec_idx), None)
+                        # an exhausted execution is only terminal when it
+                        # was the LAST path to a result. A speculative
+                        # duplicate dying of its own retries while the
+                        # healthy original still grinds (or already
+                        # finished) is a discard, not a run failure —
+                        # and symmetrically for a dead original whose
+                        # speculation is still alive or queued.
+                        alive = (
+                            task.task_id in self.results
+                            or any(tid == task.task_id
+                                   for tid, _ in self.running)
+                            or any(t.task_id == task.task_id
+                                   for t in self.spec_queue)
+                            or any(t.task_id == task.task_id
+                                   for dq in self.deques for t in dq))
+                        if alive:
+                            self.stats["abandoned_failures"] += 1
+                        elif self.failure is None:
                             self.failure = e
                             self.failed_task = task.task_id
-                        self.running.pop((task.task_id, exec_idx), None)
                         self.cond.notify_all()
                         return
                 time.sleep(backoff_delay(
@@ -362,6 +383,19 @@ class Driver:
                 f"{self.cfg.max_retries} retries; completed work is "
                 f"journaled in {self.ledger.path} — rerun with "
                 f"resume=True") from self.failure
+        if not self._finished():
+            # the monitor's break path: queues drained, nothing running,
+            # no recorded failure — yet tasks are missing results. A
+            # partial dict here would flow into ``aggregate`` and sum to
+            # a silently wrong count; fail loudly and point at the
+            # ledger instead.
+            missing = sorted(set(self.tasks) - set(self.results))
+            raise RuntimeError(
+                f"scheduler lost {len(missing)} task(s) without a "
+                f"recorded failure (e.g. {missing[0]}); refusing to "
+                f"aggregate a partial result — completed work is "
+                f"journaled in {self.ledger.path}, rerun with "
+                f"resume=True")
         return self.results
 
 
@@ -421,6 +455,7 @@ def _drive_tasks(eng, req, key, cfg: SchedulerConfig, tasks: list[Task],
     stats = {"tasks": len(tasks), "resumed": len(completed),
              **{k: int(v) for k, v in driver.stats.items()},
              "n_workers": cfg.n_workers,
+             "ledger_errors": ledger.errors,
              "peak_task_bytes": driver.peak_task_bytes,
              "max_slice_bytes": spill.get("max_slice_bytes", 0),
              "csr_bytes": csr_footprint_bytes(og),

@@ -65,6 +65,9 @@ class TaskLedger:
         self.path = path
         self.query_sig = query_sig
         self._fh = None
+        # journal writes that failed at the OS layer (disk full, dead
+        # volume); surfaced as ``ledger_errors`` in scheduler telemetry
+        self.errors = 0
 
     # -- replay ------------------------------------------------------------
 
@@ -127,6 +130,14 @@ class TaskLedger:
             os.fsync(self._fh.fileno())
         except ValueError:  # closed between the check and the write
             pass
+        except OSError:
+            # write/flush/fsync failure (disk full, dead volume). The
+            # result is already recorded in memory — the run stays
+            # correct, only resume coverage degrades (this task would be
+            # recounted). Raising here would kill a worker inside the
+            # completion lock and silently shrink the pool, which is
+            # strictly worse; count it and drop to in-memory completion.
+            self.errors += 1
 
     def append(self, task_id: str, res: TaskResult) -> None:
         rec = {"task": task_id, "sum": res.task_sum,

@@ -13,7 +13,7 @@
 See ``docs/serving.md``.
 """
 from .pool import EngineFactory, EnginePool
-from .service import CliqueService, GraphRef, Ticket
+from .service import CancelledError, CliqueService, GraphRef, Ticket
 
-__all__ = ["CliqueService", "EnginePool", "EngineFactory", "GraphRef",
-           "Ticket"]
+__all__ = ["CancelledError", "CliqueService", "EnginePool",
+           "EngineFactory", "GraphRef", "Ticket"]

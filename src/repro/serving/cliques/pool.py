@@ -46,6 +46,7 @@ class EnginePool:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.warmed = 0    # sessions prebuilt outside the serving path
         # per-session telemetry survives eviction: close hooks fold the
         # dying session's stats in here so service totals stay monotone.
         self._retired_queries = 0
@@ -101,6 +102,21 @@ class EnginePool:
             evicted.append((lru_fp, lru))
         return evicted
 
+    def warm(self, graph: Graph,
+             fingerprint: Optional[str] = None) -> bool:
+        """Prebuild + admit a session outside the serving path (the
+        gateway's store-driven warm start). Counted in ``warmed``, not
+        hits/misses, so serving telemetry stays traffic-only. Returns
+        False when the session was already resident."""
+        fp = fingerprint or graph_fingerprint(graph)
+        if fp in self._engines:
+            return False
+        eng = self.build(graph)
+        for _, lru in self.admit(fp, eng):
+            lru.close()
+        self.warmed += 1
+        return True
+
     def peek(self, fingerprint: str) -> Optional[CliqueEngine]:
         """Resident engine for ``fingerprint`` without touching LRU order."""
         return self._engines.get(fingerprint)
@@ -142,6 +158,7 @@ class EnginePool:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "warmed": self.warmed,
             "queries": self._retired_queries + sum(s["n_queries"]
                                                    for s in live),
             "plan_hits": self._retired_plan_hits + sum(s["plans"]["hits"]

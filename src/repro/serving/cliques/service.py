@@ -40,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Iterable, Optional, Union
+from typing import Callable, Iterable, Optional, Union
 
 from ...engine import (CountReport, CountRequest, derive_sweep_seed,
                        graph_fingerprint)
@@ -48,6 +48,15 @@ from ...graphs.formats import Graph
 from .pool import EngineFactory, EnginePool
 
 GraphRef = Union[Graph, str]
+
+# observer of every successfully executed query, called BEFORE fan-out:
+# (fingerprint, request-as-executed, raw engine report). The gateway's
+# result store persists from here.
+ReportHook = Callable[[str, CountRequest, CountReport], None]
+
+
+class CancelledError(RuntimeError):
+    """The ticket was cancelled before its job executed."""
 
 
 class Ticket:
@@ -80,6 +89,18 @@ class Ticket:
             raise self._exc
         assert self._report is not None
         return self._report
+
+    def cancel(self, exc: Optional[BaseException] = None) -> bool:
+        """Withdraw this ticket before its job runs (deadline expiry,
+        caller giving up). Returns True if the ticket was cancelled —
+        ``result()`` then raises ``exc`` (default
+        :class:`CancelledError`) — or False when the report already
+        landed (cancellation lost the race; the result stands). A job
+        whose every ticket cancelled is skipped at drain time without
+        touching an engine."""
+        return self._service._cancel(
+            self, exc if exc is not None
+            else CancelledError("ticket cancelled before execution"))
 
     def _fulfill(self, report: Optional[CountReport],
                  exc: Optional[BaseException] = None) -> None:
@@ -127,8 +148,10 @@ class CliqueService:
 
     def __init__(self, max_sessions: int = 4, *,
                  default_backend: str = "local",
-                 engine_factory: Optional[EngineFactory] = None) -> None:
+                 engine_factory: Optional[EngineFactory] = None,
+                 on_report: Optional[ReportHook] = None) -> None:
         self.default_backend = default_backend
+        self._on_report = on_report
         self.pool = EnginePool(max_sessions,
                                factory=engine_factory,
                                default_backend=default_backend)
@@ -148,6 +171,9 @@ class CliqueService:
         self.adaptive_executed = 0     # accuracy-targeted queries served
         self.adaptive_escalations = 0  # controller escalations across them
         self.adaptive_fallthroughs = 0  # resolved exact by the work model
+        self.cancelled = 0             # tickets withdrawn pre-execution
+        self.cancelled_jobs = 0        # jobs skipped: every waiter gone
+        self.report_hook_errors = 0    # on_report raised (query unaffected)
 
     # -- graph registry ----------------------------------------------------
 
@@ -256,6 +282,24 @@ class CliqueService:
         and mutations hold it, so concurrent submits never stall behind
         an engine build. Safe because drains are serialized: no second
         thread can admit the same fingerprint concurrently."""
+        with self._lock:
+            # drop jobs whose every waiter cancelled (deadline expiry):
+            # done BEFORE admission so a fully-cancelled group never
+            # builds an engine session at all. Popping from pending
+            # under the lock means a submit racing this check either
+            # joined in time (job stays live) or starts a fresh job.
+            live = []
+            for job in group:
+                if job.tickets:
+                    live.append(job)
+                else:
+                    self._pending.pop(
+                        (fp, job.request.query_key(self.default_backend)),
+                        None)
+                    self.cancelled_jobs += 1
+            group = live
+        if not group:
+            return 0
         try:
             with self._lock:
                 engine = self.pool.lookup(fp)
@@ -283,6 +327,16 @@ class CliqueService:
             try:
                 report = engine.submit(job.request)
                 executed += 1
+                if self._on_report is not None:
+                    # persist/observe BEFORE fan-out so a fulfilled
+                    # ticket implies the hook already saw the report; a
+                    # hook failure (store disk full) must not fail the
+                    # query it observed
+                    try:
+                        self._on_report(fp, job.request, report)
+                    except Exception:
+                        with self._lock:
+                            self.report_hook_errors += 1
                 if report.estimator is not None:
                     with self._lock:
                         self.adaptive_executed += 1
@@ -317,6 +371,28 @@ class CliqueService:
             else:
                 assert report is not None
                 t._fulfill(_annotated_copy(report, fanout, session))
+
+    def _cancel(self, ticket: Ticket, exc: BaseException) -> bool:
+        """Back end of :meth:`Ticket.cancel`: remove the ticket from its
+        pending job (if still queued) and fail it with ``exc``. The
+        pending entry itself stays until drain so late duplicates keep
+        coalescing; a job stripped of every ticket is skipped there."""
+        with self._lock:
+            if ticket.done():
+                return False       # report already delivered; result stands
+            found = False
+            for job in self._pending.values():
+                if ticket in job.tickets:
+                    job.tickets.remove(ticket)
+                    found = True
+                    break
+            if not found:
+                # _fulfill claimed the job's tickets under this lock and
+                # is delivering right now — the report wins the race
+                return False
+            self.cancelled += 1
+        ticket._fulfill(None, exc)
+        return True
 
     def _forget(self, fp: str) -> None:
         """Drop an evicted graph from the registry (unless work still
@@ -383,6 +459,9 @@ class CliqueService:
                 "coalesced": self.coalesced,
                 "executed": self.executed,
                 "failed": self.failed,
+                "cancelled": self.cancelled,
+                "cancelled_jobs": self.cancelled_jobs,
+                "report_hook_errors": self.report_hook_errors,
                 "coalesce_rate": self.coalesced / max(self.submitted, 1),
                 "queue_depth": len(self._queue),
                 "registered_graphs": len(self._graphs),

@@ -1,0 +1,338 @@
+"""Production serving gateway: admission control, deadlines, and a
+persistent result store over :class:`~repro.serving.cliques.CliqueService`.
+
+The service (PR 2) solved *efficiency* — pooled sessions, coalescing,
+batching. The gateway adds the *operational* layer a server facing real
+traffic needs:
+
+- **admission control** — a bounded in-flight queue
+  (``max_queue_depth``) and per-tenant in-flight quotas
+  (``tenant_quota``). Work past either bound is shed at submit time
+  with :class:`GatewayOverloaded` (and counted), instead of growing an
+  unbounded queue whose tail latencies nobody asked for. Store hits
+  bypass admission entirely: they cost one file read, not an engine.
+- **deadlines** — per-request ``deadline_s`` (or a gateway-wide
+  default). An expired ticket is cancelled cleanly: the waiter gets
+  :class:`DeadlineExceeded`, the service skips jobs whose every waiter
+  expired before touching an engine, and late results of already-failed
+  tickets are discarded, never delivered twice.
+- **persistent results** — every executed report is written through to
+  a content-addressed :class:`~repro.serving.store.ResultStore` keyed
+  by ``(graph_fingerprint, query_key)``. A repeated analytics query is
+  served from disk without building an engine session; a restarted
+  gateway re-registers persisted graphs and pre-warms its pool
+  (``warm_start``). Identity-keyed listing predicates are excluded
+  (see the store's module docs).
+- **graceful shutdown** — ``shutdown()`` stops admitting, drains queued
+  work to completion, then closes the pool; anything still unresolved
+  fails with :class:`GatewayClosed` rather than hanging.
+
+Synchronous callers block on ``ticket.result()``; async front ends
+await ``ticket.async_result()`` (the same wait, run in an executor —
+the engine's dispatch is thread-serial anyway, so an asyncio-native
+execution path would buy nothing).
+
+    gw = ServingGateway(store_dir="/var/lib/clique-store")
+    t = gw.submit(graph, CountRequest(k=4), tenant="analytics",
+                  deadline_s=30.0)
+    t.result().count
+    gw.stats()["store"]["hit_rate"]
+    gw.shutdown()
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from typing import Optional
+
+from ..engine import CountReport, CountRequest
+from ..graphs.formats import Graph
+from .cliques import CliqueService, GraphRef, Ticket
+from .store import ResultStore
+
+
+class GatewayError(RuntimeError):
+    """Base class for gateway-level (non-query) failures."""
+
+
+class GatewayOverloaded(GatewayError):
+    """Admission control shed this request (queue depth or tenant
+    quota); retry with backoff."""
+
+
+class GatewayClosed(GatewayError):
+    """The gateway is shutting down and no longer admits work."""
+
+
+class DeadlineExceeded(GatewayError, TimeoutError):
+    """The request's deadline expired before its report landed."""
+
+
+class GatewayTicket:
+    """Handle to one admitted query. ``result()`` blocks (bounded by the
+    request deadline, if any); ``async_result()`` is the awaitable
+    adapter. Store hits are born resolved."""
+
+    def __init__(self, gateway: "ServingGateway", tenant: str,
+                 deadline_at: Optional[float],
+                 inner: Optional[Ticket] = None,
+                 report: Optional[CountReport] = None) -> None:
+        self._gateway = gateway
+        self.tenant = tenant
+        self._deadline_at = deadline_at     # time.monotonic() timestamp
+        self._inner = inner                 # None ⇔ resolved from store
+        self._report = report
+
+    @property
+    def from_store(self) -> bool:
+        return self._inner is None
+
+    def done(self) -> bool:
+        return self._inner is None or self._inner.done()
+
+    def cancel(self) -> bool:
+        """Withdraw the query (True if it had not produced a report)."""
+        if self._inner is None:
+            return False
+        return self._inner.cancel()
+
+    def result(self, timeout: Optional[float] = None) -> CountReport:
+        if self._inner is None:
+            assert self._report is not None
+            return self._report
+        if self._deadline_at is not None:
+            remaining = self._deadline_at - time.monotonic()
+            timeout = remaining if timeout is None \
+                else min(timeout, remaining)
+            if timeout <= 0 and not self._inner.done():
+                self._gateway._expire(self)
+                # short grace: if cancellation lost the race to an
+                # in-flight delivery, let the report land
+                return self._inner.result(0.1)
+        try:
+            return self._inner.result(timeout)
+        except DeadlineExceeded:
+            raise
+        except TimeoutError:
+            if self._deadline_at is not None and \
+                    time.monotonic() >= self._deadline_at:
+                # the wait outlived the deadline: expire (unless a
+                # report won the race at the boundary) and re-read
+                self._gateway._expire(self)
+                return self._inner.result(0.1)
+            raise
+
+    async def async_result(self,
+                           timeout: Optional[float] = None) -> CountReport:
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(
+            None, lambda: self.result(timeout))
+
+
+class ServingGateway:
+    """Admission-controlled, deadline-aware, store-backed front end.
+
+    Parameters
+    ----------
+    store_dir: result-store directory; None disables persistence (the
+        gateway is then admission control + deadlines only).
+    max_sessions: engine-pool capacity of the underlying service.
+    default_backend: backend for requests that don't pick one.
+    max_queue_depth: most queries in flight (queued or executing) at
+        once; submits past it shed with :class:`GatewayOverloaded`.
+    tenant_quota: most in-flight queries per tenant.
+    default_deadline_s: deadline applied when ``submit`` doesn't pass
+        one; None = no default.
+    store_max_entries: result-store eviction bound (None = unbounded).
+    warm_start: re-register persisted graphs (and pre-admit up to the
+        pool capacity) at startup.
+    monitor_poll_s: deadline-monitor period.
+    """
+
+    def __init__(self, *, store_dir: Optional[str] = None,
+                 max_sessions: int = 4,
+                 default_backend: str = "local",
+                 max_queue_depth: int = 64,
+                 tenant_quota: int = 8,
+                 default_deadline_s: Optional[float] = None,
+                 store_max_entries: Optional[int] = None,
+                 warm_start: bool = True,
+                 monitor_poll_s: float = 0.05) -> None:
+        if max_queue_depth < 1:
+            raise ValueError(
+                f"max_queue_depth must be ≥ 1, got {max_queue_depth}")
+        if tenant_quota < 1:
+            raise ValueError(f"tenant_quota must be ≥ 1, got {tenant_quota}")
+        self.store = (ResultStore(store_dir, max_entries=store_max_entries)
+                      if store_dir else None)
+        self.service = CliqueService(max_sessions,
+                                     default_backend=default_backend,
+                                     on_report=self._persist)
+        self.max_queue_depth = max_queue_depth
+        self.tenant_quota = tenant_quota
+        self.default_deadline_s = default_deadline_s
+        self._lock = threading.Lock()
+        self._live: list[GatewayTicket] = []
+        self._closed = False
+        self.shed = 0                 # queue-depth rejections
+        self.shed_tenant = 0          # tenant-quota rejections
+        self.deadline_expired = 0
+        self.warmed_graphs = 0
+        self.warmed_sessions = 0
+        if self.store is not None and warm_start:
+            self.warm_start()
+        # worker first, monitor second: deadlines only matter once jobs
+        # can actually execute
+        self.service.start()
+        self._monitor_stop = threading.Event()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, args=(monitor_poll_s,),
+            name="gateway-deadline-monitor", daemon=True)
+        self._monitor.start()
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, graph_ref: GraphRef, req: CountRequest, *,
+               tenant: str = "default",
+               deadline_s: Optional[float] = None) -> GatewayTicket:
+        """Admit one query. Order of checks: closed → validity → store
+        (a persisted answer is served even when the gateway is at
+        capacity — it costs a file read) → admission → service submit."""
+        if self._closed:
+            raise GatewayClosed("gateway is shut down")
+        req.validate()   # invalid requests are neither shed nor stored
+        if deadline_s is None:
+            deadline_s = self.default_deadline_s
+        deadline_at = (None if deadline_s is None
+                       else time.monotonic() + deadline_s)
+        default_backend = self.service.default_backend
+        if isinstance(graph_ref, Graph):
+            fp = self.service.register(graph_ref)
+            if self.store is not None and req.is_persistable:
+                self.store.save_graph(fp, graph_ref)
+        else:
+            fp = graph_ref
+        if self.store is not None and req.is_persistable:
+            stored = self.store.get(fp, req, default_backend)
+            if stored is not None:
+                stored.cache["store"] = "hit"
+                return GatewayTicket(self, tenant, deadline_at,
+                                     report=stored)
+        with self._lock:
+            self._prune_locked()
+            if len(self._live) >= self.max_queue_depth:
+                self.shed += 1
+                raise GatewayOverloaded(
+                    f"queue depth {self.max_queue_depth} reached; "
+                    "retry with backoff")
+            tenant_live = sum(1 for t in self._live if t.tenant == tenant)
+            if tenant_live >= self.tenant_quota:
+                self.shed += 1
+                self.shed_tenant += 1
+                raise GatewayOverloaded(
+                    f"tenant {tenant!r} has {tenant_live} queries in "
+                    f"flight (quota {self.tenant_quota})")
+            # graph_ref resolution errors (unknown fingerprint) raise
+            # KeyError out of service.submit below — after admission,
+            # but admission state is pruned lazily so nothing leaks
+            inner = self.service.submit(graph_ref, req)
+            ticket = GatewayTicket(self, tenant, deadline_at, inner=inner)
+            self._live.append(ticket)
+        return ticket
+
+    def _prune_locked(self) -> None:
+        """In-flight = not yet resolved. Resolved tickets leave the
+        admission set lazily, on the next submit or monitor tick."""
+        self._live = [t for t in self._live if not t.done()]
+
+    # -- deadlines ---------------------------------------------------------
+
+    def _expire(self, ticket: GatewayTicket) -> None:
+        if ticket._inner is None:
+            return
+        if ticket._inner.cancel(DeadlineExceeded(
+                "deadline expired before the query executed")):
+            with self._lock:
+                self.deadline_expired += 1
+
+    def _monitor_loop(self, poll_s: float) -> None:
+        while not self._monitor_stop.wait(poll_s):
+            now = time.monotonic()
+            with self._lock:
+                expired = [t for t in self._live
+                           if t._deadline_at is not None
+                           and now >= t._deadline_at and not t.done()]
+                self._prune_locked()
+            for t in expired:       # outside the lock: _expire re-takes it
+                self._expire(t)
+
+    # -- persistence / warm start ------------------------------------------
+
+    def _persist(self, fingerprint: str, req: CountRequest,
+                 report: CountReport) -> None:
+        """Service ``on_report`` hook: write-through every executed
+        report (non-persistable requests are skipped inside put)."""
+        if self.store is not None:
+            self.store.put(fingerprint, req, report,
+                           self.service.default_backend)
+
+    def warm_start(self, build_sessions: Optional[int] = None) -> dict:
+        """Re-register every graph the store persisted, and prebuild
+        engine sessions for the ``build_sessions`` most recently saved
+        (default: pool capacity). After this, bare-fingerprint refs
+        resolve again and the first queries on warmed graphs are
+        session hits — a restarted server picks up where it left off."""
+        assert self.store is not None
+        if build_sessions is None:
+            build_sessions = self.service.pool.max_sessions
+        graphs = self.store.load_graphs()
+        for i, (fp, g) in enumerate(graphs):
+            self.service.register(g)
+            self.warmed_graphs += 1
+            if i < build_sessions:
+                # safe outside the service lock: called from __init__
+                # (before the worker starts) or by an operator during a
+                # quiet spell; drains serialize behind _drain_lock
+                with self.service._drain_lock:
+                    if self.service.pool.warm(g, fp):
+                        self.warmed_sessions += 1
+        return {"graphs": self.warmed_graphs,
+                "sessions": self.warmed_sessions}
+
+    # -- shutdown ----------------------------------------------------------
+
+    def shutdown(self, close_pool: bool = True) -> None:
+        """Graceful: stop admitting, drain everything already admitted,
+        stop the worker (and optionally release the pool), fail any
+        straggler ticket with :class:`GatewayClosed`. Idempotent."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._monitor_stop.set()
+        self._monitor.join(timeout=5.0)
+        self.service.stop(close_pool=close_pool)
+        with self._lock:
+            leftovers, self._live = list(self._live), []
+        for t in leftovers:
+            if not t.done() and t._inner is not None:
+                t._inner.cancel(GatewayClosed("gateway shut down"))
+
+    # -- telemetry ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            self._prune_locked()
+            out = {
+                "inflight": len(self._live),
+                "shed": self.shed,
+                "shed_tenant": self.shed_tenant,
+                "deadline_expired": self.deadline_expired,
+                "warmed_graphs": self.warmed_graphs,
+                "warmed_sessions": self.warmed_sessions,
+                "closed": self._closed,
+            }
+        out["store"] = None if self.store is None else self.store.stats()
+        out["service"] = self.service.stats()
+        return out

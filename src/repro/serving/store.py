@@ -1,0 +1,232 @@
+"""Content-addressed persistent store of served :class:`CountReport`\\ s.
+
+Every answer the serving stack produces is a pure function of
+``(graph_fingerprint, CountRequest.query_key)`` — the same
+signature-keyed idiom the out-of-core scheduler already relies on
+(``ShardStore`` keys spill slices by ``(fingerprint, plan_sig)``,
+``TaskLedger`` headers carry a query signature). The
+:class:`ResultStore` persists that function: one JSON file per answer,
+
+    <root>/reports/<fingerprint>/<query_hash>.json
+    <root>/graphs/<fingerprint>.npz          (for gateway warm starts)
+
+with ``query_hash = sha256(repr(query_key))[:16]``. Writes are atomic
+(tmp + rename, the ShardStore manifest discipline) so a killed server
+never leaves a half-written entry a later read could trust; reads are
+tolerant (corrupt or truncated entries count as misses, are dropped,
+and never poison the store — the ledger's torn-tail discipline).
+
+What is persisted: every executed report whose request
+``is_persistable`` — exact, sampled, adaptive, all-k, per-node, and
+predicate-free listing queries. What is NOT: listing queries carrying a
+``predicate`` — those coalesce by callable *identity*
+(``id(predicate)``), which no store can reconstruct after a restart
+(see :meth:`CountRequest.query_key`'s stability contract).
+
+Thread-safe: the gateway's submit path reads while the service worker
+writes.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import threading
+from typing import Optional
+
+from ..engine import (CountReport, CountRequest, report_from_json,
+                      report_to_json)
+from ..graphs.formats import Graph
+from ..graphs.io import load_npz, save_npz
+
+STORE_SCHEMA = 1
+
+
+def result_key(req: CountRequest, default_backend: str = "local") -> str:
+    """Durable content address of a request's answer: the hex-digested
+    ``query_key``. Raises ``ValueError`` for non-persistable requests
+    (identity-keyed listing predicates) rather than minting a key that
+    could never match across restarts."""
+    if not req.is_persistable:
+        raise ValueError(
+            "listing predicates coalesce by callable identity and cannot "
+            "be content-addressed across restarts; this request is not "
+            "persistable")
+    key = req.query_key(default_backend)
+    return hashlib.sha256(repr(key).encode()).hexdigest()[:16]
+
+
+class ResultStore:
+    """Persist every served ``CountReport``, keyed by
+    ``(graph_fingerprint, query_key)``.
+
+    Parameters
+    ----------
+    root: store directory (created if absent).
+    max_entries: evict oldest report entries past this bound (None =
+        unbounded). Eviction is by file mtime — a RE-stored entry counts
+        as fresh.
+    """
+
+    def __init__(self, root: str,
+                 max_entries: Optional[int] = None) -> None:
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(f"max_entries must be ≥ 1, got {max_entries}")
+        self.root = root
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.corrupt = 0
+        self._lock = threading.Lock()
+        self._reports_dir = os.path.join(root, "reports")
+        self._graphs_dir = os.path.join(root, "graphs")
+        os.makedirs(self._reports_dir, exist_ok=True)
+        os.makedirs(self._graphs_dir, exist_ok=True)
+        # (fingerprint, query_hash) -> path; scanned once at startup —
+        # this is the restart warm start — then maintained by put/evict
+        self._index: dict[tuple[str, str], str] = {}
+        self._scan()
+
+    def _scan(self) -> None:
+        for fp in sorted(os.listdir(self._reports_dir)):
+            fp_dir = os.path.join(self._reports_dir, fp)
+            if not os.path.isdir(fp_dir):
+                continue
+            for f in sorted(os.listdir(fp_dir)):
+                if f.endswith(".json"):
+                    self._index[(fp, f[:-5])] = os.path.join(fp_dir, f)
+
+    # -- reports -----------------------------------------------------------
+
+    def put(self, fingerprint: str, req: CountRequest,
+            report: CountReport, default_backend: str = "local") -> bool:
+        """Persist one report; returns False (without writing) for
+        non-persistable requests. Atomic: concurrent readers see either
+        the old entry or the new one, never a torn file."""
+        if not req.is_persistable:
+            return False
+        qhash = result_key(req, default_backend)
+        payload = json.dumps({
+            "schema": STORE_SCHEMA,
+            "fingerprint": fingerprint,
+            "query_key": qhash,
+            "report": report_to_json(report),
+        })
+        fp_dir = os.path.join(self._reports_dir, fingerprint)
+        path = os.path.join(fp_dir, qhash + ".json")
+        with self._lock:
+            os.makedirs(fp_dir, exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(payload)
+            os.replace(tmp, path)
+            self._index[(fingerprint, qhash)] = path
+            self._evict_over_capacity()
+        return True
+
+    def get(self, fingerprint: str, req: CountRequest,
+            default_backend: str = "local") -> Optional[CountReport]:
+        """The persisted report for ``(fingerprint, req)``, or None.
+        Counts a hit or a miss; a corrupt entry counts both ``corrupt``
+        and a miss, and is dropped so it is rebuilt on the next put."""
+        if not req.is_persistable:
+            return None
+        qhash = result_key(req, default_backend)
+        with self._lock:
+            path = self._index.get((fingerprint, qhash))
+            if path is None:
+                self.misses += 1
+                return None
+            try:
+                with open(path) as f:
+                    obj = json.load(f)
+                if obj["schema"] != STORE_SCHEMA or \
+                        obj["fingerprint"] != fingerprint or \
+                        obj["query_key"] != qhash:
+                    raise ValueError("store entry does not match its key")
+                report = report_from_json(obj["report"])
+            except (OSError, ValueError, KeyError, TypeError):
+                # torn/corrupt/foreign entry: distrust it entirely —
+                # drop file + index so the next execution re-persists
+                self.corrupt += 1
+                self.misses += 1
+                self._index.pop((fingerprint, qhash), None)
+                try:
+                    os.unlink(path)
+                except OSError:
+                    pass
+                return None
+            self.hits += 1
+            return report
+
+    def _evict_over_capacity(self) -> None:
+        """Caller holds the lock. Oldest-mtime-first eviction past
+        ``max_entries``."""
+        if self.max_entries is None or \
+                len(self._index) <= self.max_entries:
+            return
+        def mtime(item):
+            try:
+                return os.path.getmtime(item[1])
+            except OSError:
+                return 0.0
+        for key, path in sorted(self._index.items(), key=mtime)[
+                :len(self._index) - self.max_entries]:
+            self._index.pop(key, None)
+            try:
+                os.unlink(path)
+            except OSError:
+                pass
+            self.evictions += 1
+
+    # -- graphs (warm start) -----------------------------------------------
+
+    def save_graph(self, fingerprint: str, graph: Graph) -> None:
+        """Persist the graph itself so a restarted gateway can
+        re-register (and optionally pre-admit) it. Idempotent per
+        fingerprint; failures are swallowed — graph persistence is an
+        optimization, never a serving dependency."""
+        path = os.path.join(self._graphs_dir, fingerprint + ".npz")
+        if os.path.exists(path):
+            return
+        try:
+            save_npz(graph, path)
+        except OSError:
+            pass
+
+    def load_graphs(self) -> list[tuple[str, Graph]]:
+        """Every persisted ``(fingerprint, graph)``, most recently saved
+        first (so a capacity-bounded warm start pre-admits the hottest
+        graphs). Unreadable files are skipped, not fatal."""
+        entries = []
+        for f in os.listdir(self._graphs_dir):
+            if f.endswith(".npz"):
+                path = os.path.join(self._graphs_dir, f)
+                try:
+                    entries.append((os.path.getmtime(path), f[:-4],
+                                    load_npz(path)))
+                except (OSError, ValueError, KeyError):
+                    continue
+        entries.sort(key=lambda e: -e[0])
+        return [(fp, g) for _, fp, g in entries]
+
+    # -- telemetry ---------------------------------------------------------
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._index)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {
+                "root": self.root,
+                "entries": len(self._index),
+                "graphs": sum(1 for f in os.listdir(self._graphs_dir)
+                              if f.endswith(".npz")),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "corrupt": self.corrupt,
+                "hit_rate": self.hits / max(self.hits + self.misses, 1),
+            }

@@ -179,7 +179,9 @@ def test_run_adaptive_reuses_certificates_and_exact_parts(big_planted):
     certificates nor the key-independent exact bucket partials."""
     eng = CliqueEngine(big_planted)
     eng.submit(CountRequest(k=5, method="auto", rel_error=0.05, seed=0))
-    entry = eng._plans[(5, None, None)]
+    # plans went k-agnostic in the all-k PR: keyed by plan_key() =
+    # (max_capacity, split_threshold), not (k, ...)
+    entry = eng._plans[(None, None)]
     assert "certificates" in entry._aux
     n_keys = len(entry._aux["subset_exact"])
     h0 = eng.executables.hits

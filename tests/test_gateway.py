@@ -1,0 +1,300 @@
+"""ServingGateway: admission control, per-tenant quotas, deadlines,
+store write-through / short-circuit, restart warm start, and graceful
+shutdown.
+
+Slow-execution scenarios monkeypatch ``CliqueEngine.submit`` with a
+sleeping wrapper — the admission and deadline machinery only cares that
+work is *in flight*, not what it computes.
+"""
+import asyncio
+import threading
+import time
+
+import pytest
+
+from repro.core import clique_count_bruteforce
+from repro.engine import CliqueEngine, CountRequest, graph_fingerprint
+from repro.graphs import barabasi_albert, erdos_renyi
+from repro.serving.cliques import CancelledError, CliqueService
+from repro.serving.gateway import (DeadlineExceeded, GatewayClosed,
+                                   GatewayOverloaded, ServingGateway)
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return (erdos_renyi(40, 0.25, seed=1),
+            barabasi_albert(80, 5, seed=2))
+
+
+@pytest.fixture(scope="module")
+def bf(graphs):
+    return {g.name: {k: clique_count_bruteforce(g, k) for k in (3, 4)}
+            for g in graphs}
+
+
+def _slow_submit(monkeypatch, delay_s: float):
+    orig = CliqueEngine.submit
+
+    def slow(self, req):
+        time.sleep(delay_s)
+        return orig(self, req)
+
+    monkeypatch.setattr(CliqueEngine, "submit", slow)
+
+
+# ---------------- store write-through / short-circuit ----------------
+
+def test_miss_then_hit_short_circuits_the_service(tmp_path, graphs, bf):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path))
+    t1 = gw.submit(g, CountRequest(k=4))
+    assert t1.result(timeout=120).count == bf[g.name][4]
+    assert not t1.from_store
+    t2 = gw.submit(g, CountRequest(k=4))
+    assert t2.from_store and t2.done()
+    rep = t2.result()
+    assert rep.count == bf[g.name][4]
+    assert rep.cache["store"] == "hit"
+    s = gw.stats()
+    assert s["store"]["hits"] == 1 and s["store"]["misses"] == 1
+    assert s["service"]["executed"] == 1          # hit never executed
+    gw.shutdown()
+
+
+def test_restarted_gateway_serves_from_store_and_warms_pool(
+        tmp_path, graphs, bf):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path))
+    first = gw.submit(g, CountRequest(k=4)).result(timeout=120)
+    gw.shutdown()
+
+    gw2 = ServingGateway(store_dir=str(tmp_path))
+    s = gw2.stats()
+    assert s["warmed_graphs"] == 1 and s["warmed_sessions"] == 1
+    assert s["service"]["pool"]["warmed"] == 1
+    # bit-exact across save → restart → load
+    rep = gw2.submit(g, CountRequest(k=4)).result()
+    assert rep.estimate == first.estimate
+    assert gw2.stats()["service"]["executed"] == 0
+    # a bare fingerprint ref resolves (the store re-registered it)
+    fp = graph_fingerprint(g)
+    assert gw2.submit(fp, CountRequest(k=4)).result().count == \
+        bf[g.name][4]
+    # a NEW query on the warmed graph is a session hit, not a rebuild
+    rep3 = gw2.submit(fp, CountRequest(k=3)).result(timeout=120)
+    assert rep3.count == bf[g.name][3]
+    assert rep3.cache["session"] == "hit"
+    gw2.shutdown()
+
+
+def test_predicate_listing_served_but_never_persisted(tmp_path, graphs):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path))
+    req = CountRequest(k=3, mode="list",
+                       predicate=lambda rows: rows[:, 0] >= 0)
+    assert gw.submit(g, req).result(timeout=120).cliques is not None
+    again = gw.submit(g, req)
+    assert not again.from_store                   # identity-keyed: re-run
+    again.result(timeout=120)
+    s = gw.stats()
+    assert s["store"]["entries"] == 0
+    assert s["service"]["executed"] == 2
+    gw.shutdown()
+
+
+def test_gateway_without_store(graphs, bf):
+    g = graphs[1]
+    gw = ServingGateway()
+    assert gw.submit(g, CountRequest(k=3)).result(timeout=120).count == \
+        bf[g.name][3]
+    assert gw.stats()["store"] is None
+    gw.shutdown()
+
+
+# ---------------- admission control ----------------
+
+def test_queue_depth_sheds(graphs, monkeypatch):
+    _slow_submit(monkeypatch, 0.5)
+    gw = ServingGateway(max_queue_depth=1)
+    t1 = gw.submit(graphs[0], CountRequest(k=3))
+    with pytest.raises(GatewayOverloaded, match="queue depth"):
+        gw.submit(graphs[0], CountRequest(k=4))
+    assert t1.result(timeout=120).count >= 0
+    assert gw.stats()["shed"] == 1
+    # capacity freed once the first query resolved
+    assert gw.submit(graphs[0], CountRequest(k=4)).result(
+        timeout=120).count >= 0
+    gw.shutdown()
+
+
+def test_tenant_quota_isolates_tenants(graphs, monkeypatch):
+    _slow_submit(monkeypatch, 0.5)
+    gw = ServingGateway(max_queue_depth=8, tenant_quota=1)
+    ta = gw.submit(graphs[0], CountRequest(k=3), tenant="a")
+    with pytest.raises(GatewayOverloaded, match="tenant"):
+        gw.submit(graphs[0], CountRequest(k=4), tenant="a")
+    tb = gw.submit(graphs[0], CountRequest(k=4), tenant="b")
+    assert ta.result(timeout=120).count >= 0
+    assert tb.result(timeout=120).count >= 0
+    s = gw.stats()
+    assert s["shed"] == 1 and s["shed_tenant"] == 1
+    gw.shutdown()
+
+
+def test_store_hits_bypass_admission(tmp_path, graphs, monkeypatch):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path), max_queue_depth=1)
+    gw.submit(g, CountRequest(k=3)).result(timeout=120)
+    _slow_submit(monkeypatch, 0.5)
+    blocker = gw.submit(g, CountRequest(k=4))     # fills the queue
+    # at capacity — but the persisted answer still serves instantly
+    hit = gw.submit(g, CountRequest(k=3))
+    assert hit.from_store and hit.result().count >= 0
+    blocker.result(timeout=120)
+    assert gw.stats()["shed"] == 0
+    gw.shutdown()
+
+
+# ---------------- deadlines ----------------
+
+def test_deadline_expires_queued_ticket(graphs, monkeypatch):
+    _slow_submit(monkeypatch, 0.6)
+    gw = ServingGateway(monitor_poll_s=0.01)
+    slow = gw.submit(graphs[0], CountRequest(k=3))
+    # let the worker pick up the slow job first, so the doomed one lands
+    # in a later batch and its expiry is visible at that batch's filter
+    end = time.time() + 5.0
+    while gw.stats()["service"]["queue_depth"] > 0 and time.time() < end:
+        time.sleep(0.005)
+    doomed = gw.submit(graphs[0], CountRequest(k=4), deadline_s=0.05)
+    with pytest.raises(DeadlineExceeded):
+        doomed.result(timeout=120)
+    assert slow.result(timeout=120).count >= 0
+    assert gw.stats()["deadline_expired"] >= 1
+    # the doomed job was stripped of its only waiter before its turn, so
+    # the next drain skips it without touching an engine (poll: the skip
+    # is counted when the worker reaches the now-empty job)
+    end = time.time() + 5.0
+    while gw.stats()["service"]["cancelled_jobs"] < 1 and time.time() < end:
+        time.sleep(0.01)
+    s = gw.stats()
+    assert s["service"]["executed"] == 1
+    assert s["service"]["cancelled_jobs"] >= 1
+    gw.shutdown()
+
+
+def test_generous_deadline_is_met(graphs, bf):
+    g = graphs[0]
+    gw = ServingGateway(default_deadline_s=120.0)
+    assert gw.submit(g, CountRequest(k=4)).result().count == bf[g.name][4]
+    assert gw.stats()["deadline_expired"] == 0
+    gw.shutdown()
+
+
+def test_monitor_expires_without_a_waiter(graphs, monkeypatch):
+    """Nobody calls result(): the background monitor alone must expire
+    the ticket and free its admission slot."""
+    _slow_submit(monkeypatch, 0.6)
+    gw = ServingGateway(monitor_poll_s=0.01, max_queue_depth=2)
+    gw.submit(graphs[0], CountRequest(k=3))                    # occupies
+    doomed = gw.submit(graphs[0], CountRequest(k=4), deadline_s=0.05)
+    deadline = time.time() + 5.0
+    while not doomed.done() and time.time() < deadline:
+        time.sleep(0.01)
+    assert doomed.done()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert gw.stats()["deadline_expired"] >= 1
+    gw.shutdown()
+
+
+# ---------------- ticket cancellation (service level) ----------------
+
+def test_ticket_cancel_skips_job_without_engine_work(graphs):
+    svc = CliqueService()
+    t = svc.submit(graphs[0], CountRequest(k=3))
+    assert t.cancel()
+    assert not t.cancel()                          # idempotent: already done
+    with pytest.raises(CancelledError):
+        t.result()
+    assert svc.drain() == 0                        # skipped, not executed
+    s = svc.stats()
+    assert s["cancelled"] == 1 and s["cancelled_jobs"] == 1
+    assert s["executed"] == 0
+    # a coalesced job survives losing ONE of its waiters
+    t1 = svc.submit(graphs[0], CountRequest(k=3))
+    t2 = svc.submit(graphs[0], CountRequest(k=3))
+    assert t1.cancel()
+    assert t2.result(timeout=120).count >= 0
+
+
+def test_cancel_after_result_returns_false(graphs):
+    svc = CliqueService()
+    t = svc.submit(graphs[0], CountRequest(k=3))
+    assert t.result(timeout=120).count >= 0
+    assert not t.cancel()
+
+
+# ---------------- shutdown / async ----------------
+
+def test_graceful_shutdown_drains_then_refuses(tmp_path, graphs, bf):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path))
+    t = gw.submit(g, CountRequest(k=4))
+    gw.shutdown()                                  # drains queued work
+    assert t.result(timeout=10).count == bf[g.name][4]
+    with pytest.raises(GatewayClosed):
+        gw.submit(g, CountRequest(k=3))
+    gw.shutdown()                                  # idempotent
+    assert gw.stats()["closed"]
+    assert gw.stats()["service"]["pool"]["live"] == 0
+
+
+def test_async_result_adapter(tmp_path, graphs, bf):
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path))
+
+    async def drive():
+        miss = gw.submit(g, CountRequest(k=4))
+        hit = gw.submit(g, CountRequest(k=3))
+        a, b = await asyncio.gather(miss.async_result(120),
+                                    hit.async_result(120))
+        return a.count, b.count
+
+    ka, kb = asyncio.run(drive())
+    assert ka == bf[g.name][4] and kb == bf[g.name][3]
+    gw.shutdown()
+
+
+def test_concurrent_tenants_under_load(tmp_path, graphs, bf):
+    """Many threads, mixed tenants, quotas generous enough that nothing
+    sheds: every query lands, the store absorbs the repeats."""
+    g = graphs[0]
+    gw = ServingGateway(store_dir=str(tmp_path), max_queue_depth=64,
+                        tenant_quota=32)
+    results: dict[int, int] = {}
+
+    def user(i):
+        t = gw.submit(g, CountRequest(k=3 + (i % 2)),
+                      tenant=f"t{i % 3}")
+        results[i] = t.result(timeout=120).count
+
+    threads = [threading.Thread(target=user, args=(i,))
+               for i in range(12)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert all(results[i] == bf[g.name][3 + (i % 2)] for i in range(12))
+    s = gw.stats()
+    assert s["shed"] == 0
+    # at most one execution per distinct answer; the rest coalesced or hit
+    assert s["service"]["executed"] <= 2
+    gw.shutdown()
+
+
+def test_gateway_rejects_bad_knobs():
+    with pytest.raises(ValueError):
+        ServingGateway(max_queue_depth=0)
+    with pytest.raises(ValueError):
+        ServingGateway(tenant_quota=0)

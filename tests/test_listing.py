@@ -30,6 +30,21 @@ REPRS = ("dense", "bitset")
 BIG = 100    # corpus graphs above this n get the reduced combo matrix
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_jit_state():
+    """Compile this module's listing executables from a clean client.
+
+    Late in a full-suite run the accumulated XLA CPU JIT state makes
+    the first listing compile segfault inside
+    ``jax._src.compiler.backend_compile`` (deterministically at
+    test_listing_matches_oracle_sets_small; the module passes in
+    isolation). Dropping jax's caches first trades a few recompiles
+    for a crash-free compile."""
+    import jax
+    jax.clear_caches()
+    yield
+
+
 def canon(rows: np.ndarray) -> np.ndarray:
     """Canonical set form: sort within each clique, then lexsort rows."""
     rows = np.sort(np.asarray(rows, np.int64), axis=1)

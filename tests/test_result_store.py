@@ -1,0 +1,259 @@
+"""CountReport JSON round-trip + the persistent ResultStore.
+
+The round-trip contract is *bit-exactness* of every answer-bearing
+field — ``estimate``/``count``, ``per_node`` (float64), ``profile``
+(int64), ``cliques`` (int32), the CI fields — across save→load for
+every method family. The store contract is the ledger's: atomic
+writes, tolerant reads (corruption is a miss, never a crash), and
+content addressing that keeps two graphs' answers to the same request
+apart.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import clique_count_bruteforce
+from repro.engine import (CliqueEngine, CountRequest, graph_fingerprint,
+                          report_from_json, report_to_json)
+from repro.graphs import barabasi_albert, erdos_renyi
+from repro.serving.store import ResultStore, result_key
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return (erdos_renyi(40, 0.25, seed=1),
+            barabasi_albert(80, 5, seed=2))
+
+
+@pytest.fixture(scope="module")
+def engines(graphs):
+    return tuple(CliqueEngine(g) for g in graphs)
+
+
+def _roundtrip(report):
+    # through actual JSON text, not just the dict: the store writes text
+    return report_from_json(json.loads(json.dumps(report_to_json(report))))
+
+
+def _assert_bit_exact(back, rep):
+    assert back.estimate == rep.estimate          # float64 repr round-trip
+    assert back.count == rep.count
+    assert back.k == rep.k and back.method == rep.method
+    assert back.backend == rep.backend
+    assert back.mrc == rep.mrc                    # frozen scalar dataclass
+    assert back.n_workers == rep.n_workers
+    assert back.ci_low == rep.ci_low and back.ci_high == rep.ci_high
+    assert back.achieved_rel_error == rep.achieved_rel_error
+    assert back.escalations == rep.escalations
+    for name in ("per_node", "profile", "cliques"):
+        a, b = getattr(back, name), getattr(rep, name)
+        if b is None:
+            assert a is None
+        else:
+            assert a.dtype == b.dtype and a.shape == b.shape
+            np.testing.assert_array_equal(a, b)
+
+
+# ---------------- round-trip, every method family ----------------
+
+def test_roundtrip_exact(engines):
+    rep = engines[0].submit(CountRequest(k=4))
+    _assert_bit_exact(_roundtrip(rep), rep)
+
+
+def test_roundtrip_per_node(engines):
+    rep = engines[0].submit(CountRequest(k=3, return_per_node=True))
+    assert rep.per_node is not None and rep.per_node.dtype == np.float64
+    _assert_bit_exact(_roundtrip(rep), rep)
+
+
+def test_roundtrip_sampled(engines):
+    rep = engines[1].submit(CountRequest(k=3, method="color", colors=3,
+                                         seed=7))
+    _assert_bit_exact(_roundtrip(rep), rep)
+    rep = engines[1].submit(CountRequest(k=3, method="edge", p=0.5,
+                                         seed=7))
+    _assert_bit_exact(_roundtrip(rep), rep)
+
+
+def test_roundtrip_adaptive_ci_fields(engines):
+    rep = engines[1].submit(CountRequest(k=4, method="auto",
+                                         rel_error=0.5, seed=3))
+    assert rep.ci_low is not None and rep.ci_high is not None
+    back = _roundtrip(rep)
+    _assert_bit_exact(back, rep)
+    assert back.estimator["resolved"] == rep.estimator["resolved"]
+
+
+def test_roundtrip_allk_profile(engines):
+    rep = engines[0].submit(CountRequest(k="all"))
+    assert rep.profile is not None and rep.profile.dtype == np.int64
+    back = _roundtrip(rep)
+    _assert_bit_exact(back, rep)
+    assert back.k == "all"
+
+
+def test_roundtrip_listing(engines):
+    rep = engines[0].submit(CountRequest(k=3, mode="list"))
+    assert rep.cliques is not None and rep.cliques.dtype == np.int32
+    back = _roundtrip(rep)
+    _assert_bit_exact(back, rep)
+    assert back.listing == rep.listing
+
+
+def test_from_json_rejects_foreign_schema(engines):
+    obj = report_to_json(engines[0].submit(CountRequest(k=3)))
+    obj["schema"] = 999
+    with pytest.raises(ValueError, match="schema"):
+        report_from_json(obj)
+
+
+# ---------------- persistability / key stability ----------------
+
+def test_predicate_listing_is_not_persistable():
+    plain = CountRequest(k=3, mode="list")
+    pred = CountRequest(k=3, mode="list",
+                        predicate=lambda rows: rows[:, 0] >= 0)
+    assert plain.is_persistable and not pred.is_persistable
+    with pytest.raises(ValueError, match="persistable"):
+        result_key(pred)
+
+
+def test_result_key_is_process_stable():
+    """The durable address must not depend on anything process-local:
+    equal requests (fresh objects) → equal keys, and exact requests
+    normalize seeds away just like coalescing does."""
+    assert result_key(CountRequest(k=4, seed=1)) == \
+        result_key(CountRequest(k=4, seed=2))
+    assert result_key(CountRequest(k=4)) != result_key(CountRequest(k=5))
+    assert result_key(CountRequest(k=4, method="color", seed=1)) != \
+        result_key(CountRequest(k=4, method="color", seed=2))
+
+
+# ---------------- the store ----------------
+
+def test_store_roundtrip_and_counters(tmp_path, engines, graphs):
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graphs[0])
+    req = CountRequest(k=4)
+    assert store.get(fp, req) is None             # cold miss
+    rep = engines[0].submit(req)
+    assert store.put(fp, req, rep)
+    back = store.get(fp, req)
+    _assert_bit_exact(back, rep)
+    s = store.stats()
+    assert s["entries"] == 1 and s["hits"] == 1 and s["misses"] == 1
+    # a fresh store over the same directory warms its index from disk
+    again = ResultStore(str(tmp_path))
+    _assert_bit_exact(again.get(fp, req), rep)
+
+
+def test_store_key_collision_two_graphs_same_request(tmp_path, engines,
+                                                     graphs):
+    """Same request, different graphs: entries must not collide — each
+    graph gets its own (different) answer back."""
+    store = ResultStore(str(tmp_path))
+    req = CountRequest(k=3)
+    fps = [graph_fingerprint(g) for g in graphs]
+    reps = [eng.submit(req) for eng in engines]
+    assert reps[0].count != reps[1].count         # the collision would show
+    for fp, rep in zip(fps, reps):
+        store.put(fp, req, rep)
+    for g, fp in zip(graphs, fps):
+        assert store.get(fp, req).count == \
+            clique_count_bruteforce(g, 3)
+
+
+def test_store_tolerates_corrupt_entries(tmp_path, engines, graphs):
+    """The ledger's torn-tail discipline: a corrupt entry is a miss (and
+    is dropped), never an exception — and the store recovers on the
+    next put."""
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graphs[0])
+    req = CountRequest(k=4)
+    rep = engines[0].submit(req)
+    store.put(fp, req, rep)
+    path = store._index[(fp, result_key(req))]
+    for garbage in ('{"schema": 1, "truncated',       # torn write
+                    '{"schema": 1, "fingerprint": "f", '
+                    '"query_key": "q", "report": {}}',  # foreign/missing
+                    ""):                               # empty file
+        store.put(fp, req, rep)
+        with open(path, "w") as f:
+            f.write(garbage)
+        assert store.get(fp, req) is None
+        assert not os.path.exists(path)           # distrusted → dropped
+    assert store.stats()["corrupt"] == 3
+    store.put(fp, req, rep)
+    _assert_bit_exact(store.get(fp, req), rep)
+
+
+def test_store_eviction_oldest_first(tmp_path, engines, graphs):
+    store = ResultStore(str(tmp_path), max_entries=2)
+    fp = graph_fingerprint(graphs[0])
+    reqs = [CountRequest(k=k) for k in (3, 4, 5)]
+    reps = [engines[0].submit(r) for r in reqs]
+    for i, (req, rep) in enumerate(zip(reqs, reps)):
+        store.put(fp, req, rep)
+        os.utime(store._index[(fp, result_key(req))], (i, i))
+    assert len(store) == 2 and store.stats()["evictions"] == 1
+    assert store.get(fp, reqs[0]) is None         # oldest evicted
+    assert store.get(fp, reqs[2]).count == reps[2].count
+
+
+def test_store_skips_unpersistable(tmp_path, engines, graphs):
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graphs[0])
+    req = CountRequest(k=3, mode="list",
+                       predicate=lambda rows: rows[:, 0] >= 0)
+    rep = engines[0].submit(req)
+    assert not store.put(fp, req, rep)
+    assert store.get(fp, req) is None
+    s = store.stats()
+    assert s["entries"] == 0 and s["misses"] == 0  # not even counted
+
+
+def test_store_graph_persistence(tmp_path, graphs):
+    store = ResultStore(str(tmp_path))
+    for g in graphs:
+        store.save_graph(graph_fingerprint(g), g)
+    loaded = dict(ResultStore(str(tmp_path)).load_graphs())
+    assert set(loaded) == {graph_fingerprint(g) for g in graphs}
+    for g in graphs:
+        back = loaded[graph_fingerprint(g)]
+        assert graph_fingerprint(back) == graph_fingerprint(g)
+
+
+def test_store_rejects_bad_capacity(tmp_path):
+    with pytest.raises(ValueError):
+        ResultStore(str(tmp_path), max_entries=0)
+
+
+def test_stored_sampled_reports_keep_their_seeded_estimate(tmp_path,
+                                                           engines,
+                                                           graphs):
+    """Sampled entries are seed-specific (their keys carry the seed):
+    two seeds → two entries, each returning its own estimate."""
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graphs[1])
+    reqs = [CountRequest(k=3, method="color", colors=3, seed=s)
+            for s in (1, 2)]
+    reps = [engines[1].submit(r) for r in reqs]
+    for req, rep in zip(reqs, reps):
+        store.put(fp, req, rep)
+    assert len(store) == 2
+    for req, rep in zip(reqs, reps):
+        assert store.get(fp, req).estimate == rep.estimate
+
+
+def test_replace_refreshes_not_duplicates(tmp_path, engines, graphs):
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graphs[0])
+    req = CountRequest(k=4)
+    rep = engines[0].submit(req)
+    store.put(fp, req, rep)
+    store.put(fp, req, dataclasses.replace(rep))
+    assert len(store) == 1

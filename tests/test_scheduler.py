@@ -22,7 +22,7 @@ import pytest
 from repro.engine import CliqueEngine, CountRequest
 from repro.graphs import conformance_corpus, planted_cliques
 from repro.runtime.faults import FaultDomain
-from repro.scheduler import (SchedulerConfig, ShardStore, TaskLedger,
+from repro.scheduler import (SchedulerConfig, ShardStore, Task, TaskLedger,
                              TaskResult, compile_tasks,
                              csr_footprint_bytes, lpt_assign,
                              plan_signature, query_signature)
@@ -258,6 +258,151 @@ def test_speculation_can_be_disabled(tmp_path, graph):
         n_workers=2, spill_dir=str(tmp_path), speculate=False))
     rep = eng.submit(CountRequest(k=4, backend="ooc"))
     assert rep.cache["scheduler"]["speculated"] == 0
+
+
+# ---------------- driver/ledger robustness (bugfix sweep) ----------------
+
+def _mk_task(tid: str, cost: float = 1.0, n_units: int = 4) -> Task:
+    return Task(task_id=tid, kind="bucket", capacity=8, tile_repr="dense",
+                units=np.arange(n_units, dtype=np.int32), pivots=None,
+                cost=cost)
+
+
+def _open_ledger(tmp_path) -> TaskLedger:
+    led = TaskLedger(str(tmp_path / "ledger.jsonl"), "sig")
+    led.open_fresh()
+    return led
+
+
+def test_failed_speculation_does_not_poison_healthy_original(tmp_path):
+    """A speculative duplicate that exhausts its own retries must lose
+    quietly while the healthy original still grinds — before the fix it
+    set ``Driver.failure`` on give-up and the whole run raised even
+    though every task still had a live path to a result."""
+    import threading
+
+    tasks = [_mk_task(f"t{i}") for i in range(4)] + \
+        [_mk_task("victim", cost=4.0)]
+    exec_of: dict[tuple[str, int], int] = {}
+
+    def hook(tid, ei):
+        # record which execution this thread is running so the fake
+        # run_task below can fail speculative executions only
+        exec_of[(tid, threading.get_ident())] = ei
+        return 0.8 if (tid == "victim" and ei == 0) else 0.0
+
+    def run_task(task):
+        if task.task_id == "victim" and \
+                exec_of.get((task.task_id, threading.get_ident()), 0) >= 1:
+            raise RuntimeError("speculative replica is poisoned")
+        return TaskResult(task_sum=float(task.cost),
+                          elapsed_s=0.01), 0
+
+    from repro.scheduler.driver import Driver
+    cfg = SchedulerConfig(n_workers=2, speculation_min_done=3,
+                          speculation_min_s=0.05, speculation_factor=1.0,
+                          poll_s=0.005, max_retries=1,
+                          retry_backoff_s=0.001, retry_backoff_cap_s=0.01,
+                          delay_hook=hook)
+    ledger = _open_ledger(tmp_path)
+    driver = Driver(tasks, run_task, cfg, ledger, {})
+    results = driver.run()           # before the fix: RuntimeError
+    ledger.close()
+    assert set(results) == {t.task_id for t in tasks}
+    assert driver.stats["speculated"] >= 1
+    assert driver.stats["abandoned_failures"] >= 1
+    assert driver.failure is None
+
+
+def test_lost_work_raises_instead_of_partial_aggregate(tmp_path):
+    """The monitor's break path (queues drained, nothing running, no
+    recorded failure, tasks missing results) must raise — before the fix
+    it returned the partial dict and ``aggregate`` summed a silently
+    wrong count."""
+    import collections
+
+    from repro.scheduler.driver import Driver
+    tasks = [_mk_task(f"t{i}") for i in range(3)]
+    ledger = _open_ledger(tmp_path)
+    driver = Driver(tasks, lambda t: (TaskResult(1.0, 0.01), 0),
+                    SchedulerConfig(n_workers=1, speculate=False,
+                                    poll_s=0.005), ledger, {})
+    # simulate lost work: the queues drained away without results
+    driver.deques = [collections.deque() for _ in driver.deques]
+    with pytest.raises(RuntimeError, match="partial"):
+        driver.run()
+    ledger.close()
+
+
+def test_ledger_fsync_failure_degrades_to_in_memory(tmp_path, monkeypatch):
+    """An OSError inside the journal write (disk full at fsync) must not
+    propagate — before the fix it killed the completing worker inside
+    the completion lock, silently shrinking the pool."""
+    led = _open_ledger(tmp_path)
+
+    def boom(fd):
+        raise OSError(28, "No space left on device")
+
+    monkeypatch.setattr("repro.scheduler.ledger.os.fsync", boom)
+    led.append("t1", TaskResult(task_sum=3.0, elapsed_s=0.1))  # no raise
+    led.append("t2", TaskResult(task_sum=4.0, elapsed_s=0.1))
+    assert led.errors == 2
+    monkeypatch.undo()
+    led.close()
+    # whatever reached the file before/despite the failure replays fine
+    assert isinstance(TaskLedger(led.path, "sig").load(), dict)
+
+
+def test_ledger_errors_surface_in_scheduler_telemetry(tmp_path, graph):
+    eng = CliqueEngine(graph, ooc=SchedulerConfig(
+        n_workers=2, spill_dir=str(tmp_path)))
+    tel = eng.submit(CountRequest(k=4, backend="ooc")).cache["scheduler"]
+    assert tel["ledger_errors"] == 0
+    assert tel["abandoned_failures"] == 0
+
+
+def test_fixed_batches_skips_empty_input():
+    from repro.scheduler.driver import _fixed_batches
+    assert list(_fixed_batches(np.zeros(0, np.int32), 8, -1)) == []
+    tiles = list(_fixed_batches(np.arange(5, dtype=np.int32), 4, -1))
+    assert [t.tolist() for t in tiles] == [[0, 1, 2, 3], [4, -1, -1, -1]]
+
+
+def test_zero_unit_task_does_zero_device_work(graph, monkeypatch):
+    """A task with an empty ``units`` array must not dispatch a device
+    call of pure padding — before the fix ``_fixed_batches`` yielded one
+    all-fill tile per empty task."""
+    import dataclasses
+    import types
+
+    from repro.engine import backends as backends_mod
+    from repro.scheduler import driver as driver_mod
+    from repro.scheduler.store import SliceCSR
+
+    calls = []
+
+    def fake_tile_executable(eng, backend, repr_, cap, r, method):
+        def fn(csr, tile, key, p=0.0, c=0):
+            calls.append(np.asarray(tile))
+            return np.zeros(np.asarray(tile).shape[0], np.float32)
+        return fn
+
+    monkeypatch.setattr(backends_mod, "tile_executable",
+                        fake_tile_executable)
+    eng = CliqueEngine(graph)
+    sl = SliceCSR(offsets=np.zeros(graph.n + 1, np.int32),
+                  nbrs_rank=np.zeros(0, np.int32),
+                  nbrs_byid=np.zeros(0, np.int32),
+                  out_deg=np.zeros(graph.n, np.int32))
+    store = types.SimpleNamespace(load=lambda tid: sl)
+    run = driver_mod._make_runner(eng, store, CountRequest(k=4), key=None,
+                                  cfg=SchedulerConfig())
+    empty = _mk_task("empty", cost=0.0, n_units=0)
+    res, _ = run(empty)
+    assert res.task_sum == 0.0 and calls == []
+    res2, _ = run(dataclasses.replace(empty, task_id="full",
+                                      units=np.arange(3, dtype=np.int32)))
+    assert len(calls) == 1           # non-empty tasks still execute
 
 
 # ---------------- request validation ----------------
