@@ -14,8 +14,17 @@ backend (``repro.scheduler``): wall-clock with and without straggler
 speculation under an injected 10×-task-time straggler, asserting that
 speculation recovers at least 2× of the penalty, plus the out-of-core
 memory claim (largest shard slice ≪ the single-host CSR footprint).
-One record per run is appended to ``BENCH_scheduler.json`` — the
-trajectory ``scripts/check_bench.py --scheduler`` gates.
+
+``--distributed`` adds the multi-host counterpart: a clean 3-executor
+coordinator run, a chaos run with one executor SIGKILLed mid-flight
+(same count bit-exact, ≥1 lease expiry + reassignment), and a
+``resume=True`` rerun that replays the ledger without re-executing a
+single task — its ``recovery_ratio`` (chaos wall / resume wall) is the
+price of the ledger-as-commit-protocol contract and must stay ≥ 2×.
+
+One record per run (rows from every section run) is appended to
+``BENCH_scheduler.json`` — the trajectory
+``scripts/check_bench.py --scheduler`` gates.
 """
 import json
 import os
@@ -84,7 +93,7 @@ def _ooc_run(g, spill: str, *, straggle_s: float = 0.0,
     return tel
 
 
-def scheduler_section() -> None:
+def scheduler_section() -> dict:
     """Wall-clock with/without speculation under an injected straggler,
     on the planted benchmark graph, via the real ooc backend."""
     from repro.graphs import planted_cliques
@@ -144,18 +153,93 @@ def scheduler_section() -> None:
          f"max_slice_bytes={base['max_slice_bytes']};"
          f"csr_bytes={base['csr_bytes']};frac={slice_frac:.3f}")
 
-    row = {"graph": g.name, "k": 4, "tasks": base["tasks"],
-           "n_workers": base["n_workers"],
-           "base_wall_us": base_wall * 1e6,
-           "nospec_wall_us": nospec["wall_s"] * 1e6,
-           "spec_wall_us": spec["wall_s"] * 1e6,
-           "straggle_us": straggle * 1e6,
-           "recovery_ratio": recovery,
-           "stolen": base["stolen"],
-           "max_slice_bytes": base["max_slice_bytes"],
-           "csr_bytes": base["csr_bytes"],
-           "slice_frac": slice_frac}
-    _append_trajectory([row])
+    return {"graph": g.name, "k": 4, "tasks": base["tasks"],
+            "n_workers": base["n_workers"],
+            "base_wall_us": base_wall * 1e6,
+            "nospec_wall_us": nospec["wall_s"] * 1e6,
+            "spec_wall_us": spec["wall_s"] * 1e6,
+            "straggle_us": straggle * 1e6,
+            "recovery_ratio": recovery,
+            "stolen": base["stolen"],
+            "max_slice_bytes": base["max_slice_bytes"],
+            "csr_bytes": base["csr_bytes"],
+            "slice_frac": slice_frac}
+
+
+def _dist_run(g, spill: str, *, chaos: str = None, resume: bool = False,
+              task_delay: float = 0.0, lease: float = 5.0) -> dict:
+    """One fresh 3-executor coordinator query; returns the telemetry."""
+    from repro.engine import CliqueEngine, CountRequest
+    from repro.scheduler import SchedulerConfig
+
+    eng = CliqueEngine(g, ooc=SchedulerConfig(
+        executors=3, spill_dir=spill, target_tasks=24,
+        lease_s=lease, poll_s=0.005, task_delay_s=task_delay,
+        chaos=chaos, resume=resume))
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    tel["count"] = rep.count
+    return tel
+
+
+def distributed_section() -> dict:
+    """Kill-recovery on the multi-host pool: clean 3-executor run →
+    chaos run with one executor SIGKILLed mid-flight → ledger resume.
+    The gated ``recovery_ratio`` here is chaos wall / resume wall: how
+    much of a killed run's cost the commit protocol refunds."""
+    from repro.graphs import planted_cliques
+
+    g = planted_cliques(2500, 0.008, [14, 12, 12, 10], seed=3,
+                        name="planted-ooc-dist")
+    spill = tempfile.mkdtemp(prefix="bench-dist-")
+
+    # warm pass compiles + spills; base is the clean-run yardstick
+    warm = _dist_run(g, spill)
+    base = _dist_run(g, spill)
+    assert base["count"] == warm["count"]
+    assert base["executors"] == 3 and base["run"] == base["tasks"]
+
+    # per-task pacing stretches the run so the kill lands mid-flight;
+    # kill:1@1 SIGKILLs executor 1 once it holds a lease past the
+    # first commit — the EOF-expiry + reassignment path, for real
+    chaos = _dist_run(g, spill, chaos="kill:1@1", task_delay=0.05,
+                      lease=1.0)
+    assert chaos["count"] == base["count"], (chaos, base)
+    assert chaos["lease_expiries"] >= 1, chaos
+    assert chaos["reassigned"] >= 1, chaos
+    assert chaos["chaos"] == ["kill:1"], chaos
+
+    # the refund: resume replays the completed ledger — zero tasks
+    # re-executed, no port bound, no executor spawned
+    resumed = _dist_run(g, spill, resume=True)
+    assert resumed["count"] == base["count"]
+    assert resumed["run"] == 0, resumed
+    assert resumed["resumed"] == resumed["tasks"], resumed
+
+    recovery = chaos["wall_s"] / max(resumed["wall_s"], 1e-9)
+    assert recovery >= 2.0, (
+        f"ledger resume refunded only {recovery:.2f}x of the killed "
+        f"run (chaos={chaos['wall_s']:.2f}s "
+        f"resume={resumed['wall_s']:.2f}s)")
+    slice_frac = base["max_slice_bytes"] / base["csr_bytes"]
+
+    emit(f"fig6e/{g.name}/kill-recovery", chaos["wall_s"],
+         f"base={base['wall_s']:.3f}s;resume={resumed['wall_s']:.3f}s;"
+         f"lease_expiries={chaos['lease_expiries']};"
+         f"recovery={recovery:.1f}x")
+
+    return {"graph": g.name, "k": 4, "tasks": base["tasks"],
+            "n_workers": base["executors"],
+            "base_wall_us": base["wall_s"] * 1e6,
+            "chaos_wall_us": chaos["wall_s"] * 1e6,
+            "resume_wall_us": resumed["wall_s"] * 1e6,
+            "lease_expiries": chaos["lease_expiries"],
+            "reassigned": chaos["reassigned"],
+            "recovery_ratio": recovery,
+            "stolen": base["stolen"],
+            "max_slice_bytes": base["max_slice_bytes"],
+            "csr_bytes": base["csr_bytes"],
+            "slice_frac": slice_frac}
 
 
 def _append_trajectory(rows: list) -> None:
@@ -184,7 +268,7 @@ def _append_trajectory(rows: list) -> None:
           f"({len(history)} records)", file=sys.stderr, flush=True)
 
 
-def main(scheduler: bool = False) -> None:
+def main(scheduler: bool = False, distributed: bool = False) -> None:
     for g in bench_suite():
         og = build_oriented(g)
         k = 5
@@ -202,8 +286,15 @@ def main(scheduler: bool = False) -> None:
                  f"imbalance_no_split={rep['imbalance']:.2f};"
                  f"imbalance_with_split={post:.2f};"
                  f"split_units={n_units}")
+    # one record for however many sections ran, so the nightly gate
+    # compares rows like-for-like across consecutive records
+    rows = []
     if scheduler:
-        scheduler_section()
+        rows.append(scheduler_section())
+    if distributed:
+        rows.append(distributed_section())
+    if rows:
+        _append_trajectory(rows)
 
 
 if __name__ == "__main__":
@@ -212,5 +303,9 @@ if __name__ == "__main__":
     ap.add_argument("--scheduler", action="store_true",
                     help="also run the out-of-core scheduler section "
                          "(appends to BENCH_scheduler.json)")
+    ap.add_argument("--distributed", action="store_true",
+                    help="also run the multi-host kill-recovery section "
+                         "(3 executors, one SIGKILLed, ledger resume; "
+                         "appends to BENCH_scheduler.json)")
     args = ap.parse_args()
-    main(scheduler=args.scheduler)
+    main(scheduler=args.scheduler, distributed=args.distributed)

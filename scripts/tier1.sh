@@ -39,11 +39,24 @@ python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
 # an injected task fault (retried) AND a forced straggler (speculated —
 # both asserted by the launcher), still reproducing the golden count
 ooc_spill="$(mktemp -d)"
+dist_spill="$(mktemp -d)"
 gw_store="$(mktemp -d)"
-trap 'rm -rf "$ooc_spill" "$gw_store"' EXIT
+trap 'rm -rf "$ooc_spill" "$dist_spill" "$gw_store"' EXIT
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 4 \
     --backend ooc --workers 4 --spill-dir "$ooc_spill" \
     --inject-fault 1 --inject-straggler 4 --assert-golden
+
+# distributed chaos smoke: 3 executor subprocesses, one SIGKILLed after
+# its first commit and one slowed — the lease must expire, the task be
+# reassigned, and the count stay golden; the second pass resumes from
+# the ledger and must re-run nothing (--assert-no-rerun)
+python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 4 \
+    --backend ooc --executors 3 --spill-dir "$dist_spill" \
+    --chaos kill:1@1,slow:2/2.0 --lease 1.5 --ooc-task-delay 0.05 \
+    --assert-golden
+python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 4 \
+    --backend ooc --executors 3 --spill-dir "$dist_spill" \
+    --resume --assert-no-rerun --assert-golden
 
 python -m repro.launch.count --serve --graph rmat:7:4,er:60:150 \
     --k 3,4 --repeat 2 --max-sessions 1

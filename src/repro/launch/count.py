@@ -18,6 +18,11 @@ query, and ``--k`` accepts a comma list for a batched session sweep.
       --inject-straggler 4 --assert-golden   # out-of-core + chaos smoke
   PYTHONPATH=src python -m repro.launch.count --graph ... --backend ooc \
       --resume                        # continue a killed run's ledger
+  PYTHONPATH=src python -m repro.launch.count \
+      --graph corpus:planted_1200_12_16_40 --k 4 --backend ooc \
+      --executors 3 --chaos kill:1@1,slow:2/2.0 --lease 1.5 \
+      --assert-golden        # multi-host: real executor subprocesses,
+                             # one SIGKILLed + one slowed mid-run
 
 ``--serve`` drives the multi-graph :class:`CliqueService` instead:
 ``--graph`` takes a comma list of specs, ``--repeat R`` submits the
@@ -286,6 +291,22 @@ def main() -> int:
                     help="--backend ooc: uniform per-execution delay in "
                          "seconds (stretches the run so a kill-and-"
                          "resume demo has a mid-run to kill into)")
+    ap.add_argument("--executors", type=int, default=0,
+                    help="--backend ooc: run the query on this many real "
+                         "executor subprocesses behind a coordinator "
+                         "(leases + heartbeats + ledger commit protocol) "
+                         "instead of the in-process pool")
+    ap.add_argument("--chaos", default=None,
+                    help="--executors: deterministic fault schedule, "
+                         "e.g. kill:1@1,slow:2/2.0 — SIGKILL executor 1 "
+                         "after 1 commit, slow executor 2's tasks by 2s "
+                         "(see repro/runtime/chaos.py for the grammar)")
+    ap.add_argument("--lease", type=float, default=None,
+                    help="--executors: task lease seconds (heartbeats "
+                         "renew it; expiry reassigns the task)")
+    ap.add_argument("--assert-no-rerun", action="store_true",
+                    help="--backend ooc --resume: assert the ledger "
+                         "replay re-executed zero committed tasks")
     ap.add_argument("--serve", action="store_true",
                     help="drive a CliqueService over a comma list of "
                          "--graph specs (multi-graph pool + coalescing)")
@@ -403,6 +424,16 @@ def main() -> int:
             golden = json.load(f)
         assert g.name in golden, \
             f"--assert-golden needs a corpus: graph, got {g.name!r}"
+    if args.executors and backend != "ooc":
+        ap.error("--executors needs --backend ooc")
+    if args.chaos and not args.executors:
+        ap.error("--chaos needs --executors (it schedules faults "
+                 "against real executor processes; use --inject-fault/"
+                 "--inject-straggler for the in-process pool)")
+    if args.executors and (args.inject_fault or args.inject_straggler):
+        ap.error("--inject-fault/--inject-straggler are in-process "
+                 "hooks; with --executors use --chaos")
+    chaos_slow = args.chaos is not None and "slow:" in args.chaos
     ooc_cfg = None
     if backend == "ooc" or any(r.backend == "ooc" for r in reqs):
         import threading
@@ -410,7 +441,8 @@ def main() -> int:
         from ..runtime.faults import FaultDomain
         from ..scheduler import SchedulerConfig
         delay_hook = None
-        if args.inject_straggler > 0 or args.ooc_task_delay > 0:
+        if not args.executors and (args.inject_straggler > 0
+                                   or args.ooc_task_delay > 0):
             armed = {"straggler": args.inject_straggler > 0}
             hook_lock = threading.Lock()
 
@@ -429,10 +461,16 @@ def main() -> int:
                                 backoff_s=0.01)
                     if args.inject_fault else None),
             delay_hook=delay_hook,
-            # tight detector knobs when a straggler is forced, so the
-            # smoke doesn't wait out production-sized envelopes
+            executors=max(args.executors, 0),
+            chaos=args.chaos,
+            task_delay_s=(args.ooc_task_delay if args.executors else 0.0),
+            # tight detector knobs when a straggler is forced (in-process
+            # --inject-straggler or a chaos slow: event), so the smoke
+            # doesn't wait out production-sized envelopes
+            **({"lease_s": args.lease} if args.lease else {}),
             **({"speculation_min_s": 0.05, "speculation_factor": 2.0,
-                "poll_s": 0.005} if args.inject_straggler > 0 else {}))
+                "poll_s": 0.005}
+               if args.inject_straggler > 0 or chaos_slow else {}))
     t0 = time.perf_counter()
     eng = CliqueEngine(g, backend=backend, ooc=ooc_cfg)
     sched_totals: dict = {}
@@ -476,15 +514,27 @@ def main() -> int:
         print(json.dumps(row, indent=1, default=str))
         tel = rep.cache.get("scheduler")
         if tel is not None:
-            print(json.dumps({"scheduler": {
-                k: tel[k] for k in
-                ("tasks", "run", "resumed", "stolen", "speculated",
-                 "speculation_wins", "retried", "n_workers", "spill",
-                 "spill_bytes", "max_slice_bytes", "csr_bytes",
-                 "wall_s")}}, indent=1, default=str))
-            sched_totals = {k: sched_totals.get(k, 0) + tel[k]
+            shown = {k: tel[k] for k in
+                     ("tasks", "run", "resumed", "stolen", "speculated",
+                      "speculation_wins", "retried", "n_workers",
+                      "spill", "spill_bytes", "max_slice_bytes",
+                      "csr_bytes", "wall_s")}
+            if tel.get("executors"):
+                shown.update({k: tel[k] for k in
+                              ("executors", "lease_expiries",
+                               "reassigned", "heartbeats_missed",
+                               "commit_dups", "per_host")
+                              if k in tel})
+                if "chaos" in tel:
+                    shown["chaos"] = tel["chaos"]
+            print(json.dumps({"scheduler": shown}, indent=1,
+                             default=str))
+            sched_totals = {k: sched_totals.get(k, 0) + tel.get(k, 0)
                             for k in ("retried", "speculated", "run",
-                                      "resumed")}
+                                      "resumed", "tasks",
+                                      "speculation_wins",
+                                      "lease_expiries", "reassigned",
+                                      "commit_dups")}
         if golden is not None and rep.k == "all":
             want = golden[g.name].get("profile")
             assert want is not None, \
@@ -520,6 +570,26 @@ def main() -> int:
         if args.inject_straggler > 0:
             assert sched_totals["speculated"] >= 1, \
                 "--inject-straggler was never speculated"
+        if args.chaos is not None:
+            if any(a + ":" in args.chaos
+                   for a in ("kill", "hang", "part")):
+                assert sched_totals["lease_expiries"] >= 1, \
+                    "--chaos lost no lease"
+                assert sched_totals["reassigned"] >= 1, \
+                    "--chaos reassigned no task"
+            if chaos_slow:
+                assert sched_totals["speculation_wins"] >= 1, \
+                    "--chaos slow: produced no cross-host " \
+                    "speculation win"
+        if args.assert_no_rerun:
+            assert args.resume, "--assert-no-rerun needs --resume"
+            assert sched_totals["run"] == 0, \
+                (f"resume re-executed {sched_totals['run']} committed "
+                 f"task(s)")
+            assert sched_totals["resumed"] == sched_totals["tasks"], \
+                "resume did not replay the full ledger"
+            print("resume ok: 0 tasks re-executed "
+                  f"({sched_totals['resumed']} replayed)")
         print(f"scheduler totals: {json.dumps(sched_totals)}")
     print(json.dumps({"session": eng.session_stats()}, indent=1,
                      default=str))

@@ -1,0 +1,150 @@
+"""Deterministic chaos schedules for the multi-host scheduler.
+
+A chaos spec is a comma-separated list of events, each anchored to the
+coordinator's *commit count* — the only clock that is deterministic
+across machines and load levels (wall-clock triggers would make the
+tier-1 smoke flaky). Grammar:
+
+- ``kill:<i>@<c>``    — SIGKILL executor ``i`` after ``c`` commits,
+  deferred until the victim actually holds a lease so the smoke's
+  "≥1 lease expiry, ≥1 reassignment" assertion is deterministic.
+- ``hang:<i>@<c>/<s>`` — SIGSTOP executor ``i`` after ``c`` commits
+  (again once it holds a lease), SIGCONT after ``s`` seconds. With
+  ``s`` ≳ 2 leases the task is reassigned *and* the thawed original
+  later reports a duplicate completion — the commit-dup path.
+- ``part:<i>@<c>``    — partition: the coordinator drops executor
+  ``i``'s connection after ``c`` commits. The process survives; its
+  leases expire and its work moves.
+- ``slow:<i>/<s>``    — every task on executor ``i`` takes ``s`` extra
+  seconds, from the start of the run. This is the deterministic
+  cross-host-speculation forcer: the slowed host's tasks blow the
+  p95-rate envelope and their speculative copies land on fast hosts.
+
+The monkey itself only decides *when*; *how* is injected by the
+coordinator as callbacks (``kill``/``stop``/``cont``/``partition``), so
+this module stays process-model-agnostic and unit-testable without
+spawning executors.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class ChaosEvent:
+    action: str             # "kill" | "hang" | "part" | "slow"
+    executor: int
+    after_commits: int = 0  # fire once this many tasks have committed
+    seconds: float = 0.0    # hang: stop duration; slow: per-task delay
+
+
+def parse_chaos(spec: str) -> list[ChaosEvent]:
+    """Parse ``kill:1@2,hang:0@3/2.0,slow:2/1.5`` into events."""
+    events: list[ChaosEvent] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            action, rest = part.split(":", 1)
+            seconds = 0.0
+            if "/" in rest:
+                rest, sec = rest.rsplit("/", 1)
+                seconds = float(sec)
+            after = 0
+            if "@" in rest:
+                rest, at = rest.split("@", 1)
+                after = int(at)
+            executor = int(rest)
+        except ValueError as e:
+            raise ValueError(
+                f"bad chaos event {part!r} (grammar: action:executor"
+                f"[@after_commits][/seconds])") from e
+        if action not in ("kill", "hang", "part", "slow"):
+            raise ValueError(f"unknown chaos action {action!r} in "
+                             f"{part!r}")
+        if action == "hang" and seconds <= 0:
+            raise ValueError(f"hang needs a /seconds duration: {part!r}")
+        if action == "slow" and seconds <= 0:
+            raise ValueError(f"slow needs a /seconds delay: {part!r}")
+        events.append(ChaosEvent(action=action, executor=executor,
+                                 after_commits=after, seconds=seconds))
+    return events
+
+
+class ChaosMonkey:
+    """Fires a parsed schedule against a set of executors.
+
+    ``on_commit`` is called by the coordinator after every committed
+    task; due events whose victim does not yet hold a lease stay armed
+    (kill/hang only — killing an idle executor would expire no lease
+    and the smoke's assertions would race). ``applied`` records what
+    actually fired, for telemetry.
+    """
+
+    def __init__(self, events: list[ChaosEvent], *,
+                 kill: Optional[Callable[[int], None]] = None,
+                 stop: Optional[Callable[[int], None]] = None,
+                 cont: Optional[Callable[[int], None]] = None,
+                 partition: Optional[Callable[[int], None]] = None
+                 ) -> None:
+        self._pending = [e for e in events if e.action != "slow"]
+        self._slow = {e.executor: e.seconds for e in events
+                      if e.action == "slow"}
+        self._kill, self._stop, self._cont = kill, stop, cont
+        self._partition = partition
+        self._timers: list[threading.Timer] = []
+        # the coordinator pokes on_commit from every connection-handler
+        # thread AND its monitor loop — without this lock two threads
+        # can both see a due event in _pending and fire it twice
+        self._lock = threading.Lock()
+        self.applied: list[str] = []
+
+    def task_delay(self, executor: int) -> float:
+        """Extra per-task seconds for ``executor`` (slow events)."""
+        return self._slow.get(executor, 0.0)
+
+    def pending(self) -> bool:
+        return bool(self._pending)
+
+    def on_commit(self, n_commits: int,
+                  holds_lease: Callable[[int], bool]) -> None:
+        """Fire every due event. Caller provides ``holds_lease`` so
+        kill/hang wait for a moment when the victim owns work.
+        Thread-safe: each event fires exactly once."""
+        with self._lock:
+            self._fire_due(n_commits, holds_lease)
+
+    def _fire_due(self, n_commits: int,
+                  holds_lease: Callable[[int], bool]) -> None:
+        still = []
+        for e in self._pending:
+            due = n_commits >= e.after_commits
+            if due and e.action in ("kill", "hang") \
+                    and not holds_lease(e.executor):
+                still.append(e)     # stay armed until the victim leases
+                continue
+            if not due:
+                still.append(e)
+                continue
+            if e.action == "kill" and self._kill is not None:
+                self._kill(e.executor)
+            elif e.action == "hang" and self._stop is not None:
+                self._stop(e.executor)
+                if self._cont is not None:
+                    t = threading.Timer(e.seconds, self._cont,
+                                        args=(e.executor,))
+                    t.daemon = True
+                    t.start()
+                    self._timers.append(t)
+            elif e.action == "part" and self._partition is not None:
+                self._partition(e.executor)
+            self.applied.append(f"{e.action}:{e.executor}")
+        self._pending = still
+
+    def cancel(self) -> None:
+        with self._lock:
+            for t in self._timers:
+                t.cancel()

@@ -12,17 +12,25 @@ idempotent bucket-chunk tasks over disk-backed CSR shard slices:
 - :mod:`repro.scheduler.driver` — work-stealing pool with straggler
   re-execution and backoff retry
 - :mod:`repro.scheduler.backend` — the engine-facing ``"ooc"`` backend
+- :mod:`repro.scheduler.transport` — length-prefixed JSON frames and
+  the task/result wire codecs
+- :mod:`repro.scheduler.coordinator` /
+  :mod:`repro.scheduler.executor` — the multi-host pool
+  (``SchedulerConfig(executors=N)``): leases, heartbeats,
+  ledger-as-commit-protocol, cross-host speculation
 
 See ``docs/scheduler.md``.
 """
 from .backend import OocBackend
-from .driver import SchedulerConfig, run_query
+from .coordinator import Coordinator
+from .driver import CompletionCore, SchedulerConfig, run_query
 from .ledger import TaskLedger, TaskResult, query_signature
 from .store import ShardStore, SliceCSR, csr_footprint_bytes
 from .tasks import Task, compile_tasks, lpt_assign, plan_signature
 
 __all__ = [
     "OocBackend", "SchedulerConfig", "run_query",
+    "Coordinator", "CompletionCore",
     "TaskLedger", "TaskResult", "query_signature",
     "ShardStore", "SliceCSR", "csr_footprint_bytes",
     "Task", "compile_tasks", "lpt_assign", "plan_signature",

@@ -26,6 +26,9 @@ class OocBackend(Backend):
 
     @property
     def n_workers(self) -> int:
+        # distributed runs: the executor count is the worker count
+        if self.cfg.executors > 0:
+            return self.cfg.executors
         return self.cfg.n_workers
 
     def validate(self, req) -> None:

@@ -1,0 +1,592 @@
+"""Coordinator for the multi-host out-of-core scheduler.
+
+One coordinator process owns the compiled task ledger and hands tasks
+to N executor processes (:mod:`repro.scheduler.executor`) over the
+length-prefixed JSON protocol in :mod:`repro.scheduler.transport`.
+Executors fetch their closure slices straight from the shared
+``ShardStore`` spill directory — the coordinator never moves graph
+bytes, only task ids and partial sums.
+
+Fault model
+-----------
+- **Leases.** Every assignment carries a monotonic-clock lease
+  (``cfg.lease_s``); any frame from the executor — heartbeat, ready,
+  result — renews all of its leases. A SIGSTOPped or wedged executor
+  stops beating, its leases expire, and the tasks are reassigned to
+  live executors; a SIGKILLed executor's socket closes, which expires
+  its leases immediately. An executor that keeps losing leases is
+  re-admitted on an exponential backoff
+  (:func:`repro.runtime.faults.backoff_delay`) so a flapping host
+  cannot keep reclaiming work it will never finish.
+- **Ledger as commit protocol.** A task counts exactly once, and only
+  once its result is fsynced to the coordinator's JSONL ledger
+  (:meth:`CompletionCore.commit`). Crashes, duplicate completions from
+  lease races, and cross-host speculation all resolve to
+  first-committed-wins, and ``resume=True`` replays the ledger across
+  topologies (in-process pool ↔ any executor count share signatures).
+- **Graceful degradation.** Down to one surviving executor the run
+  completes (work stealing drains dead executors' queues). If *every*
+  executor is lost the coordinator fails loudly pointing at the
+  ledger; a coordinator crash is recoverable the same way — ledger +
+  spill are the entire durable state.
+- **Speculation across hosts.** The same p95-rate envelope as the
+  in-process pool (:meth:`CompletionCore.straggler_envelope`), with
+  the duplicate handed only to a *different* host than every current
+  lease holder, so a systematically slow machine cannot speculate
+  against itself.
+
+Chaos (``cfg.chaos``, see :mod:`repro.runtime.chaos`) injects kills /
+hangs / partitions / slowdowns on deterministic commit-count schedules
+for the tier-1 smoke and the fault-drill tests.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import re
+import signal
+import socket
+import subprocess
+import sys
+import threading
+import time
+import zlib
+from typing import Optional
+
+from ..runtime.chaos import ChaosMonkey, parse_chaos
+from ..runtime.faults import backoff_delay
+from .driver import CompletionCore, SchedulerConfig
+from .ledger import TaskLedger, TaskResult
+from .store import ShardStore
+from .tasks import Task, lpt_assign
+from .transport import Channel, result_from_wire, task_to_wire
+
+
+@dataclasses.dataclass
+class Lease:
+    """One executor's claim on one task."""
+    task: Task
+    executor: str
+    deadline: float     # monotonic; renewed by any frame from the owner
+    since: float        # assignment time (feeds the straggler envelope)
+    spec: bool = False  # a speculative duplicate, not the original
+
+
+class Coordinator:
+    """Runs one compiled task ledger to completion on N executors."""
+
+    def __init__(self, store: ShardStore, req, cfg: SchedulerConfig,
+                 tasks: list[Task], ledger: TaskLedger,
+                 completed: dict[str, TaskResult], *,
+                 key_seed: Optional[int],
+                 lookup_iters: int) -> None:
+        self.cfg = cfg
+        self.core = CompletionCore(tasks, ledger, completed, cfg)
+        self.tasks = self.core.tasks
+        self.ledger = ledger
+        # the jobspec every executor receives right after hello; the
+        # executor rebuilds the per-task runner from this alone (plus
+        # the spill dir), so a remote host needs nothing but the wheel
+        # and the shared filesystem
+        self.job = {
+            "type": "job",
+            "spill_root": store.root,
+            "fingerprint": store.fingerprint,
+            "plan_sig": store.plan_sig,
+            "lookup_iters": int(lookup_iters),
+            "k": req.k,
+            "method": req.effective_method,
+            "p": float(req.p),
+            "colors": int(req.colors),
+            "per_node": bool(req.return_per_node),
+            "seed": key_seed,
+            "tile_elem_budget": int(cfg.tile_elem_budget),
+            "heartbeat_s": float(cfg.heartbeat_s
+                                 if cfg.heartbeat_s is not None
+                                 else cfg.lease_s / 4.0),
+        }
+        # all mutable state below is guarded by this (reentrant, so the
+        # chaos monkey's holds_lease probe works from the monitor tick)
+        self.lock = threading.RLock()
+        self.cond = threading.Condition(self.lock)
+        pending = [t for t in tasks if t.task_id not in completed]
+        n_queues = max(int(cfg.executors), 1)
+        self.queues = [collections.deque(d)
+                       for d in lpt_assign(pending, n_queues)]
+        self.reassign: collections.deque[Task] = collections.deque()
+        self.spec_queue: collections.deque[Task] = collections.deque()
+        self.spec_issued: set[str] = set()
+        self.leases: dict[tuple[str, str], Lease] = {}
+        self.hosts: dict[str, dict] = {}
+        self.retries: collections.Counter = collections.Counter()
+        self.retry_after: dict[str, float] = {}
+        self.expiries: collections.Counter = collections.Counter()
+        self.penalty_until: dict[str, float] = {}
+        self.stats = collections.Counter(
+            run=0, stolen=0, speculated=0, speculation_wins=0, retried=0,
+            abandoned_failures=0, lease_expiries=0, reassigned=0,
+            heartbeats_missed=0)
+        self.peak_task_bytes = 0
+        self.commits_run = 0
+        self.failure: Optional[BaseException] = None
+        self.failed_task: Optional[str] = None
+        self.done = False
+        self.address: Optional[tuple[str, int]] = None
+        self._listener: Optional[socket.socket] = None
+        self._threads: list[threading.Thread] = []
+        self._procs: list[subprocess.Popen] = []
+        self._stopped: set[int] = set()   # SIGSTOPped executor indices
+        self._hello_count = 0
+        self._ever_connected = False
+        self._last_alive = time.monotonic()
+        self.chaos: Optional[ChaosMonkey] = None
+        if cfg.chaos:
+            self.chaos = ChaosMonkey(
+                parse_chaos(cfg.chaos),
+                kill=self._chaos_kill, stop=self._chaos_stop,
+                cont=self._chaos_cont, partition=self._chaos_part)
+
+    # -- chaos callbacks (process-level how; chaos.py owns the when) -------
+
+    def _signal_proc(self, idx: int, sig: int) -> None:
+        if 0 <= idx < len(self._procs):
+            try:
+                os.kill(self._procs[idx].pid, sig)
+            except (OSError, ProcessLookupError):
+                pass
+
+    def _chaos_kill(self, idx: int) -> None:
+        self._signal_proc(idx, signal.SIGKILL)
+
+    def _chaos_stop(self, idx: int) -> None:
+        self._stopped.add(idx)
+        self._signal_proc(idx, signal.SIGSTOP)
+
+    def _chaos_cont(self, idx: int) -> None:
+        self._stopped.discard(idx)
+        self._signal_proc(idx, signal.SIGCONT)
+
+    def _chaos_part(self, idx: int) -> None:
+        with self.lock:
+            chans = [h["chan"] for h in self.hosts.values()
+                     if h["index"] == idx and h["alive"]]
+        for chan in chans:
+            chan.close()    # its serve thread sees EOF → disconnect path
+
+    def _holds_lease(self, idx: int) -> bool:
+        with self.lock:
+            return any(
+                e in self.hosts and self.hosts[e]["index"] == idx
+                for (_, e) in self.leases)
+
+    # -- connection lifecycle ----------------------------------------------
+
+    def _spawn(self) -> None:
+        host, port = self.address
+        src = os.path.dirname(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (src + os.pathsep + env["PYTHONPATH"]
+                             if env.get("PYTHONPATH") else src)
+        for i in range(self.cfg.executors):
+            self._procs.append(subprocess.Popen(
+                [sys.executable, "-m", "repro.scheduler.executor",
+                 "--connect", f"{host}:{port}", "--id", f"e{i}"],
+                env=env, stdout=subprocess.DEVNULL))
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                sock, _ = self._listener.accept()
+            except OSError:
+                return      # listener closed: shutdown
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            t = threading.Thread(target=self._serve, args=(Channel(sock),),
+                                 daemon=True)
+            t.start()
+            with self.lock:
+                self._threads.append(t)
+
+    def _serve(self, chan: Channel) -> None:
+        hello = chan.recv()
+        if not hello or hello.get("type") != "hello":
+            chan.close()
+            return
+        eid = str(hello.get("executor") or "anon")
+        now = time.monotonic()
+        with self.cond:
+            if self.done:
+                chan.close()
+                return
+            while eid in self.hosts:
+                eid += "+"      # never alias a reconnecting name
+            m = re.fullmatch(r"e(\d+)", eid)
+            idx = int(m.group(1)) if m else self._hello_count
+            self._hello_count += 1
+            self._ever_connected = True
+            self.hosts[eid] = {
+                "index": idx, "queue": idx % len(self.queues),
+                "chan": chan, "alive": True, "last_seen": now,
+                "assigned": 0, "committed": 0, "stolen": 0,
+                "lease_expiries": 0}
+            job = dict(self.job)
+            job["executor"] = eid
+            job["task_delay_s"] = float(
+                self.cfg.task_delay_s
+                + (self.chaos.task_delay(idx) if self.chaos else 0.0))
+        try:
+            chan.send(job)
+            while True:
+                msg = chan.recv()
+                if msg is None:
+                    break
+                typ = msg.get("type")
+                now = time.monotonic()
+                if typ == "heartbeat":
+                    with self.cond:
+                        self._renew(eid, now)
+                elif typ == "ready":
+                    if not self._handle_ready(eid, chan, now):
+                        break
+                elif typ == "result":
+                    self._handle_result(eid, msg, now)
+                elif typ == "error":
+                    self._handle_error(eid, msg, now)
+                elif typ == "goodbye":
+                    break
+        except OSError:
+            pass
+        finally:
+            self._on_disconnect(eid)
+            chan.close()
+
+    def _renew(self, eid: str, now: float) -> None:
+        """Any frame from an executor is proof of life: bump its
+        last-seen and push every lease it holds out by one period."""
+        h = self.hosts.get(eid)
+        if h is not None:
+            h["last_seen"] = now
+        for (tid, e), lease in self.leases.items():
+            if e == eid:
+                lease.deadline = now + self.cfg.lease_s
+
+    # -- scheduling --------------------------------------------------------
+
+    def _queued(self, tid: str) -> bool:
+        return (any(t.task_id == tid for t in self.reassign)
+                or any(t.task_id == tid for t in self.spec_queue)
+                or any(t.task_id == tid for q in self.queues for t in q))
+
+    def _next_task(self, eid: str, now: float
+                   ) -> Optional[tuple[Task, bool]]:
+        """Pick the next task for ``eid`` (lock held): reassigned work
+        first (it is already late), then the executor's own queue, then
+        steal from the fullest peer's tail, then a cross-host
+        speculative duplicate. Returns (task, is_speculative)."""
+        if now < self.penalty_until.get(eid, 0.0):
+            return None     # flapping host: paced re-admission
+        h = self.hosts[eid]
+        for _ in range(len(self.reassign)):
+            t = self.reassign.popleft()
+            if t.task_id in self.core.results:
+                continue    # a zombie original committed it meanwhile
+            if now < self.retry_after.get(t.task_id, 0.0):
+                self.reassign.append(t)     # still backing off
+                continue
+            return t, False
+        q = self.queues[h["queue"]]
+        if q:
+            return q.popleft(), False
+        victims = sorted(range(len(self.queues)),
+                         key=lambda w: -len(self.queues[w]))
+        for v in victims:
+            if v != h["queue"] and self.queues[v]:
+                self.stats["stolen"] += 1
+                h["stolen"] += 1
+                return self.queues[v].pop(), False  # steal the tail
+        for _ in range(len(self.spec_queue)):
+            t = self.spec_queue.popleft()
+            if t.task_id in self.core.results:
+                continue
+            holders = [e for (tid, e) in self.leases
+                       if tid == t.task_id]
+            if eid in holders:
+                self.spec_queue.append(t)   # same host: no point
+                continue
+            return t, True
+        return None
+
+    def _handle_ready(self, eid: str, chan: Channel,
+                      now: float) -> bool:
+        """Reply to a work request. Returns False once the executor has
+        been told to shut down."""
+        with self.cond:
+            self._renew(eid, now)
+            if (self.done or self.core.finished()
+                    or self.failure is not None):
+                reply: dict = {"type": "shutdown"}
+            else:
+                pick = self._next_task(eid, now)
+                if pick is None:
+                    reply = {"type": "wait",
+                             "wait_s": max(self.cfg.poll_s, 0.02)}
+                else:
+                    task, spec = pick
+                    self.leases[(task.task_id, eid)] = Lease(
+                        task=task, executor=eid,
+                        deadline=now + self.cfg.lease_s, since=now,
+                        spec=spec)
+                    self.hosts[eid]["assigned"] += 1
+                    reply = {"type": "task", "task": task_to_wire(task)}
+        try:
+            chan.send(reply)
+        except OSError:
+            return False    # disconnect path cleans up the fresh lease
+        return reply["type"] != "shutdown"
+
+    def _handle_result(self, eid: str, msg: dict, now: float) -> None:
+        tid = msg.get("task")
+        try:
+            res = result_from_wire(msg)
+        except (KeyError, ValueError, TypeError):
+            return          # malformed frame: drop; the lease recovers it
+        fire = None
+        with self.cond:
+            self._renew(eid, now)
+            lease = self.leases.pop((tid, eid), None)
+            if tid in self.tasks and self.core.commit(tid, res):
+                self.stats["run"] += 1
+                self.commits_run += 1
+                self.retry_after.pop(tid, None)
+                h = self.hosts.get(eid)
+                if h is not None:
+                    h["committed"] += 1
+                if lease is not None and lease.spec:
+                    self.stats["speculation_wins"] += 1
+                if self.chaos is not None:
+                    fire = self.commits_run
+            self.peak_task_bytes = max(self.peak_task_bytes,
+                                       int(msg.get("loaded", 0)))
+            self.cond.notify_all()
+        if fire is not None:
+            self.chaos.on_commit(fire, self._holds_lease)
+
+    def _handle_error(self, eid: str, msg: dict, now: float) -> None:
+        tid = msg.get("task")
+        with self.cond:
+            self._renew(eid, now)
+            self.leases.pop((tid, eid), None)
+            if tid not in self.tasks or tid in self.core.results:
+                self.cond.notify_all()
+                return
+            self.retries[tid] += 1
+            if self.retries[tid] > self.cfg.max_retries:
+                # terminal only when this was the last path to a result
+                # (same discipline as the in-process pool)
+                alive = (any(t == tid for (t, _) in self.leases)
+                         or self._queued(tid))
+                if alive:
+                    self.stats["abandoned_failures"] += 1
+                elif self.failure is None:
+                    self.failure = RuntimeError(
+                        f"executor {eid}: {msg.get('error')}")
+                    self.failed_task = tid
+            else:
+                self.stats["retried"] += 1
+                self.retry_after[tid] = now + backoff_delay(
+                    self.retries[tid], base_s=self.cfg.retry_backoff_s,
+                    factor=2.0, cap_s=self.cfg.retry_backoff_cap_s,
+                    jitter=self.cfg.retry_jitter,
+                    seed=zlib.crc32(tid.encode()))
+                if not any(t == tid for (t, _) in self.leases) \
+                        and not self._queued(tid):
+                    self.reassign.append(self.tasks[tid])
+            self.cond.notify_all()
+
+    def _on_disconnect(self, eid: str) -> None:
+        """A closed socket (SIGKILL, partition, clean exit) expires the
+        executor's leases immediately — no need to wait out the clock;
+        the kernel told us the owner is gone."""
+        with self.cond:
+            h = self.hosts.get(eid)
+            if h is None or not h["alive"]:
+                return
+            h["alive"] = False
+            if not (self.done or self.core.finished()):
+                for (tid, e) in list(self.leases):
+                    if e != eid:
+                        continue
+                    del self.leases[(tid, e)]
+                    if tid in self.core.results:
+                        continue
+                    self.stats["lease_expiries"] += 1
+                    h["lease_expiries"] += 1
+                    self._requeue_lost(tid)
+            self.cond.notify_all()
+
+    def _requeue_lost(self, tid: str) -> None:
+        """Put an expired lease's task back in rotation unless some
+        other live lease or queue already covers it (lock held)."""
+        if any(t == tid for (t, _) in self.leases) or self._queued(tid):
+            return
+        self.reassign.append(self.tasks[tid])
+        self.stats["reassigned"] += 1
+
+    # -- monitor -----------------------------------------------------------
+
+    def _tick(self, now: float, t_start: float) -> Optional[int]:
+        """One monitor pass (lock held): expire overdue leases, issue
+        speculation, check liveness. Returns a commit count when the
+        chaos monkey should be poked (outside the tick's hot path)."""
+        # lease expiry: the owner stopped heartbeating but its socket
+        # is still open (SIGSTOP, wedged GC, network half-up)
+        for (tid, eid), lease in list(self.leases.items()):
+            if now <= lease.deadline:
+                continue
+            del self.leases[(tid, eid)]
+            self.stats["lease_expiries"] += 1
+            self.expiries[eid] += 1
+            h = self.hosts.get(eid)
+            if h is not None and h["alive"]:
+                self.stats["heartbeats_missed"] += 1
+                h["lease_expiries"] += 1
+            # pace re-admission: each expiry doubles the penalty window
+            self.penalty_until[eid] = now + backoff_delay(
+                self.expiries[eid], base_s=self.cfg.host_backoff_s,
+                factor=2.0, cap_s=self.cfg.host_backoff_cap_s,
+                jitter=self.cfg.retry_jitter,
+                seed=zlib.crc32(eid.encode()))
+            if tid not in self.core.results:
+                self._requeue_lost(tid)
+        # cross-host speculation: same envelope as the in-process pool
+        tail = (not any(self.queues) and not self.reassign
+                and not self.spec_queue)
+        threshold = self.core.straggler_envelope(tail)
+        if threshold is not None:
+            live = sum(1 for h in self.hosts.values() if h["alive"])
+            for (tid, eid), lease in list(self.leases.items()):
+                if (live < 2 or tid in self.core.results
+                        or tid in self.spec_issued):
+                    continue
+                if now - lease.since > threshold(lease.task.cost):
+                    self.spec_issued.add(tid)
+                    self.spec_queue.append(lease.task)
+                    self.stats["speculated"] += 1
+                    self.cond.notify_all()
+        # liveness: every executor gone and none coming back
+        if not any(h["alive"] for h in self.hosts.values()) \
+                and self.failure is None:
+            procs_dead = self._procs and all(
+                p.poll() is not None for p in self._procs)
+            waited_out = (now - max(self._last_alive, t_start)
+                          > self.cfg.connect_timeout_s)
+            if (self._ever_connected and (procs_dead or waited_out)) \
+                    or (not self._ever_connected and waited_out):
+                self.failure = RuntimeError(
+                    "all executors lost" if self._ever_connected
+                    else "no executor connected within "
+                         f"{self.cfg.connect_timeout_s:.0f}s")
+        else:
+            self._last_alive = now
+        if self.chaos is not None and self.chaos.pending():
+            return self.commits_run
+        return None
+
+    def run(self) -> dict[str, TaskResult]:
+        if self.core.finished():
+            # a fully-replayed resume: nothing to execute — do not bind
+            # a port or spawn a single process
+            return self.core.results
+        self._listener = socket.socket(socket.AF_INET,
+                                       socket.SOCK_STREAM)
+        self._listener.bind((self.cfg.bind_host, self.cfg.bind_port))
+        self._listener.listen(64)
+        self.address = self._listener.getsockname()[:2]
+        acceptor = threading.Thread(target=self._accept_loop,
+                                    daemon=True, name="ooc-accept")
+        acceptor.start()
+        if self.cfg.spawn_executors:
+            self._spawn()
+        t_start = time.monotonic()
+        period = min(self.cfg.poll_s, max(self.cfg.lease_s / 8.0, 0.005))
+        try:
+            with self.cond:
+                while not self.core.finished() \
+                        and self.failure is None:
+                    self.cond.wait(period)
+                    fire = self._tick(time.monotonic(), t_start)
+                    if fire is not None:
+                        self.chaos.on_commit(fire, self._holds_lease)
+        finally:
+            self._shutdown(acceptor)
+        if self.failure is not None:
+            raise RuntimeError(
+                f"task {self.failed_task} failed after "
+                f"{self.cfg.max_retries} retries; completed work is "
+                f"journaled in {self.ledger.path} — rerun with "
+                f"resume=True"
+                if self.failed_task is not None else
+                f"{self.failure}; completed work is journaled in "
+                f"{self.ledger.path} — rerun with resume=True"
+            ) from self.failure
+        return self.core.results
+
+    def _shutdown(self, acceptor: threading.Thread) -> None:
+        with self.cond:
+            self.done = True
+            self.cond.notify_all()
+        if self.chaos is not None:
+            self.chaos.cancel()
+            for idx in list(self._stopped):
+                self._chaos_cont(idx)   # let frozen executors exit
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+        with self.lock:
+            chans = [h["chan"] for h in self.hosts.values()]
+            threads = list(self._threads)
+        for chan in chans:
+            try:
+                chan.send({"type": "shutdown"})
+            except OSError:
+                pass
+            chan.close()
+        # serve threads must be parked before the caller closes the
+        # ledger: a result landing after close would be dropped on the
+        # floor *silently* (ledger._write tolerates closed handles)
+        for t in threads:
+            t.join(timeout=5.0)
+        acceptor.join(timeout=5.0)
+        for p in self._procs:
+            if p.poll() is None:
+                p.terminate()
+        for p in self._procs:
+            if p.poll() is None:
+                try:
+                    p.wait(timeout=2.0)
+                except subprocess.TimeoutExpired:
+                    p.kill()
+            try:
+                p.wait(timeout=5.0)
+            except subprocess.TimeoutExpired:
+                pass
+
+    # -- telemetry ---------------------------------------------------------
+
+    def extra_stats(self) -> dict:
+        with self.lock:
+            per_host = {
+                eid: {"assigned": h["assigned"],
+                      "committed": h["committed"],
+                      "stolen": h["stolen"],
+                      "lease_expiries": h["lease_expiries"]}
+                for eid, h in self.hosts.items()}
+            out = {"executors": int(self.cfg.executors),
+                   "spawned": len(self._procs),
+                   "per_host": per_host}
+            if self.chaos is not None:
+                out["chaos"] = list(self.chaos.applied)
+        return out

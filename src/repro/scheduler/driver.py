@@ -80,6 +80,22 @@ class SchedulerConfig:
     # delay_hook(task_id, execution_index) -> extra seconds; execution 0
     # is the original run, ≥1 are speculative re-executions — so a test
     # can delay only the original and watch speculation win
+    # multi-host: executors > 0 switches the run from the in-process
+    # worker pool to a coordinator driving that many real executor
+    # subprocesses over sockets (:mod:`repro.scheduler.coordinator`);
+    # faults/delay_hook are in-process hooks and don't cross the
+    # boundary — use ``chaos``/``task_delay_s`` there instead
+    executors: int = 0
+    lease_s: float = 5.0                 # task lease; any frame renews it
+    heartbeat_s: Optional[float] = None  # executor beat; default lease/4
+    bind_host: str = "127.0.0.1"
+    bind_port: int = 0                   # 0 = ephemeral
+    spawn_executors: bool = True         # False: external --connect hosts
+    connect_timeout_s: float = 120.0     # first hello must land by then
+    host_backoff_s: float = 0.25         # flapping-host re-admission base
+    host_backoff_cap_s: float = 5.0
+    task_delay_s: float = 0.0            # uniform executor-side delay
+    chaos: Optional[str] = None          # runtime.chaos schedule spec
 
 
 def _pow2_pad(a: np.ndarray, fill: int) -> np.ndarray:
@@ -185,27 +201,24 @@ def _make_runner(eng, store: ShardStore, req, key, cfg: SchedulerConfig):
     return run
 
 
-class Driver:
-    """Runs one compiled task ledger to completion."""
+class CompletionCore:
+    """The completion/speculation state machine shared by the
+    in-process pool (:class:`Driver`) and the distributed pool
+    (:class:`repro.scheduler.coordinator.Coordinator`): first-
+    committed-wins ledger commit, per-cost rate tracking, and the p95
+    straggler envelope. The caller provides its own locking — every
+    method here must be invoked under the pool's completion lock."""
 
-    def __init__(self, tasks: list[Task], run_task, cfg: SchedulerConfig,
-                 ledger: TaskLedger,
-                 completed: dict[str, TaskResult]) -> None:
+    def __init__(self, tasks: list[Task], ledger: TaskLedger,
+                 completed: dict[str, TaskResult],
+                 cfg: SchedulerConfig) -> None:
         self.cfg = cfg
         self.tasks = {t.task_id: t for t in tasks}
-        self.run_task = run_task
         self.ledger = ledger
         self.results: dict[str, TaskResult] = dict(completed)
-        pending = [t for t in tasks if t.task_id not in completed]
-        self.deques = [collections.deque(d)
-                       for d in lpt_assign(pending, cfg.n_workers)]
-        self.spec_queue: collections.deque[Task] = collections.deque()
-        self.spec_issued: set[str] = set()
-        self.lock = threading.Lock()
-        self.cond = threading.Condition(self.lock)
-        # (task_id, execution_idx) -> {"since": t, "cost": c}
-        self.running: dict[tuple[str, int], dict] = {}
-        self.exec_counts: collections.Counter = collections.Counter()
+        # duplicate completions discarded by first-committed-wins
+        # (lease races, cross-host speculation losers, thawed hangs)
+        self.commit_dups = 0
         # per-cost completion rates feed the straggler detector; resumed
         # completions contribute too, so a resumed run can speculate
         # from its first fresh task
@@ -216,6 +229,72 @@ class Driver:
         self.elapsed: list[float] = [
             res.elapsed_s for tid, res in completed.items()
             if res.elapsed_s > 0 and tid in self.tasks]
+
+    def finished(self) -> bool:
+        return len(self.results) >= len(self.tasks)
+
+    def commit(self, task_id: str, res: TaskResult) -> bool:
+        """First-committed-wins: a task counts exactly once, and only
+        once its result is fsynced to the ledger. Returns False for the
+        duplicate (discarded) completion."""
+        if task_id in self.results:
+            self.commit_dups += 1
+            return False
+        self.results[task_id] = res
+        self.ledger.append(task_id, res)
+        self.rates.append(res.elapsed_s
+                          / max(self.tasks[task_id].cost, 1.0))
+        self.elapsed.append(res.elapsed_s)
+        return True
+
+    def straggler_envelope(self, tail: bool):
+        """``None`` while speculation can't run (disabled, or too few
+        completions to estimate rates), else ``threshold(cost)`` — the
+        elapsed seconds past which a running task of that analytic cost
+        is declared a straggler. In the tail of the run (every queue
+        drained — the paper's last-reducer regime) the envelope is
+        capped by absolute p95 completion time: per-cost normalization
+        is the right model when runtime tracks cost, but a straggler
+        whose slowness is *not* cost (bad node, page-cache miss storm,
+        injected delay) must not hide behind a large cost either."""
+        cfg = self.cfg
+        if not cfg.speculate or len(self.rates) < cfg.speculation_min_done:
+            return None
+        q = cfg.speculation_quantile
+        p95_rate = float(np.quantile(np.asarray(self.rates), q))
+        p95_elapsed = float(np.quantile(np.asarray(self.elapsed), q))
+
+        def threshold(cost: float) -> float:
+            expected = p95_rate * max(cost, 1.0)
+            if tail:
+                expected = min(expected, p95_elapsed)
+            return max(cfg.speculation_min_s,
+                       cfg.speculation_factor * expected)
+
+        return threshold
+
+
+class Driver:
+    """Runs one compiled task ledger to completion."""
+
+    def __init__(self, tasks: list[Task], run_task, cfg: SchedulerConfig,
+                 ledger: TaskLedger,
+                 completed: dict[str, TaskResult]) -> None:
+        self.cfg = cfg
+        self.core = CompletionCore(tasks, ledger, completed, cfg)
+        self.tasks = self.core.tasks
+        self.run_task = run_task
+        self.ledger = ledger
+        pending = [t for t in tasks if t.task_id not in completed]
+        self.deques = [collections.deque(d)
+                       for d in lpt_assign(pending, cfg.n_workers)]
+        self.spec_queue: collections.deque[Task] = collections.deque()
+        self.spec_issued: set[str] = set()
+        self.lock = threading.Lock()
+        self.cond = threading.Condition(self.lock)
+        # (task_id, execution_idx) -> {"since": t, "cost": c}
+        self.running: dict[tuple[str, int], dict] = {}
+        self.exec_counts: collections.Counter = collections.Counter()
         self.failure: Optional[BaseException] = None
         self.failed_task: Optional[str] = None
         self.stats = collections.Counter(
@@ -223,10 +302,14 @@ class Driver:
             abandoned_failures=0)
         self.peak_task_bytes = 0
 
+    @property
+    def results(self) -> dict[str, TaskResult]:
+        return self.core.results
+
     # -- scheduling --------------------------------------------------------
 
     def _finished(self) -> bool:
-        return len(self.results) >= len(self.tasks)
+        return self.core.finished()
 
     def _take(self, wid: int) -> Optional[tuple[Task, bool]]:
         """Next task for worker ``wid`` (caller holds the lock)."""
@@ -314,11 +397,7 @@ class Driver:
                     seed=zlib.crc32(task.task_id.encode())))
         with self.cond:
             self.running.pop((task.task_id, exec_idx), None)
-            if task.task_id not in self.results:   # first result wins
-                self.results[task.task_id] = res
-                self.ledger.append(task.task_id, res)
-                self.rates.append(res.elapsed_s / max(task.cost, 1.0))
-                self.elapsed.append(res.elapsed_s)
+            if self.core.commit(task.task_id, res):  # first result wins
                 self.stats["run"] += 1
                 if is_spec:
                     self.stats["speculation_wins"] += 1
@@ -328,31 +407,15 @@ class Driver:
     def _check_stragglers(self) -> None:
         """Caller holds the lock. Re-enqueue any running task whose
         elapsed time exceeds the cost-normalized p95 envelope."""
-        if not self.cfg.speculate:
-            return
-        if len(self.rates) < self.cfg.speculation_min_done:
-            return
-        q = self.cfg.speculation_quantile
-        p95_rate = float(np.quantile(np.asarray(self.rates), q))
-        p95_elapsed = float(np.quantile(np.asarray(self.elapsed), q))
-        # tail of the run: every queue is drained, so any worker we'd
-        # borrow for a duplicate is idle anyway — the paper's
-        # last-reducer regime. Cap the envelope by absolute completion
-        # times there: per-cost normalization is the right model when
-        # runtime tracks analytic cost, but a straggler whose slowness
-        # is *not* cost (bad node, page-cache miss storm, injected
-        # delay) must not hide behind a large cost either.
         tail = not self.spec_queue and not any(self.deques)
+        threshold = self.core.straggler_envelope(tail)
+        if threshold is None:
+            return
         now = time.perf_counter()
         for (tid, _), info in list(self.running.items()):
             if tid in self.results or tid in self.spec_issued:
                 continue
-            expected = p95_rate * max(info["cost"], 1.0)
-            if tail:
-                expected = min(expected, p95_elapsed)
-            threshold = max(self.cfg.speculation_min_s,
-                            self.cfg.speculation_factor * expected)
-            if now - info["since"] > threshold:
+            if now - info["since"] > threshold(info["cost"]):
                 self.spec_issued.add(tid)
                 self.spec_queue.append(self.tasks[tid])
                 self.stats["speculated"] += 1
@@ -446,23 +509,36 @@ def _drive_tasks(eng, req, key, cfg: SchedulerConfig, tasks: list[Task],
     else:
         ledger.open_fresh()
 
-    runner = _make_runner(eng, store, req, key, cfg)
-    driver = Driver(tasks, runner, cfg, ledger, completed)
+    if cfg.executors > 0:
+        # distributed pool: a coordinator hands tasks to real executor
+        # subprocesses; the ledger write below IS the commit protocol
+        from .coordinator import Coordinator
+        pool = Coordinator(store, req, cfg, tasks, ledger, completed,
+                           key_seed=(None if key is None
+                                     else int(req.seed)),
+                           lookup_iters=int(og.lookup_iters))
+    else:
+        runner = _make_runner(eng, store, req, key, cfg)
+        pool = Driver(tasks, runner, cfg, ledger, completed)
     try:
-        results = driver.run()
+        results = pool.run()
     finally:
         ledger.close()
     stats = {"tasks": len(tasks), "resumed": len(completed),
-             **{k: int(v) for k, v in driver.stats.items()},
+             **{k: int(v) for k, v in pool.stats.items()},
              "n_workers": cfg.n_workers,
+             "commit_dups": pool.core.commit_dups,
              "ledger_errors": ledger.errors,
-             "peak_task_bytes": driver.peak_task_bytes,
+             "ledger_warnings": ledger.replay_warnings,
+             "peak_task_bytes": pool.peak_task_bytes,
              "max_slice_bytes": spill.get("max_slice_bytes", 0),
              "csr_bytes": csr_footprint_bytes(og),
              "spill": spill["spill"],
              "spill_bytes": spill.get("spill_bytes", 0),
              "ledger": ledger.path,
              "wall_s": time.perf_counter() - t0}
+    if cfg.executors > 0:
+        stats.update(pool.extra_stats())
     return results, stats
 
 

@@ -1,0 +1,138 @@
+"""Executor: one worker process of the multi-host scheduler.
+
+Runnable as ``python -m repro.scheduler.executor --connect HOST:PORT``
+on any machine that sees the shared spill directory. The process:
+
+1. connects and says hello;
+2. receives the *jobspec* — everything needed to rebuild the per-task
+   runner locally (spill location, lookup iterations, k / method /
+   sampling knobs, seed, tile budget) — note: no graph bytes; slices
+   are mmapped from the shared ``ShardStore``;
+3. pulls tasks one at a time (``ready`` → ``task``/``wait``/
+   ``shutdown``), executing each through the *same*
+   :func:`repro.scheduler.driver._make_runner` body the in-process
+   pool uses, so distributed results are bit-exact by construction;
+4. beats a background heartbeat the whole time, which is what keeps
+   its leases alive at the coordinator.
+
+There is no local retry: the coordinator owns retry, speculation, and
+reassignment. An executor that fails a task reports the error and asks
+for the next one; an executor that dies mid-task simply stops beating
+and the lease machinery takes over.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import threading
+import time
+import types
+
+from .transport import Channel, result_to_wire, task_from_wire
+
+
+def build_runner(job: dict):
+    """Rebuild the per-task execution body from a jobspec. The engine
+    shim carries exactly what the executable builders consume — a
+    fresh per-process ``ExecutableCache`` and the graph's bitset
+    lookup-iteration count — so no engine (and no graph) is needed."""
+    import jax
+
+    from ..engine.backends import ExecutableCache
+    from .driver import SchedulerConfig, _make_runner
+    from .store import ShardStore
+
+    eng = types.SimpleNamespace(
+        executables=ExecutableCache(),
+        og=types.SimpleNamespace(
+            lookup_iters=int(job["lookup_iters"])))
+    k = job["k"]
+    req = types.SimpleNamespace(
+        k=(k if k == "all" else int(k)),
+        effective_method=str(job["method"]),
+        p=float(job["p"]),
+        colors=int(job["colors"]),
+        return_per_node=bool(job["per_node"]))
+    key = (None if job.get("seed") is None
+           else jax.random.PRNGKey(int(job["seed"])))
+    store = ShardStore(root=job["spill_root"],
+                       fingerprint=job["fingerprint"],
+                       plan_sig=job["plan_sig"])
+    cfg = SchedulerConfig(
+        tile_elem_budget=int(job["tile_elem_budget"]))
+    return _make_runner(eng, store, req, key, cfg)
+
+
+def serve(chan: Channel, name: str) -> int:
+    chan.send({"type": "hello", "executor": name, "pid": os.getpid()})
+    job = chan.recv()
+    if job is None or job.get("type") != "job":
+        return 1
+    runner = build_runner(job)
+    delay = float(job.get("task_delay_s", 0.0))
+    stop = threading.Event()
+
+    def beat() -> None:
+        hb = float(job.get("heartbeat_s", 1.0))
+        while not stop.wait(hb):
+            try:
+                chan.send({"type": "heartbeat"})
+            except OSError:
+                return
+    threading.Thread(target=beat, daemon=True,
+                     name="executor-heartbeat").start()
+
+    try:
+        while True:
+            chan.send({"type": "ready"})
+            msg = chan.recv()
+            if msg is None or msg.get("type") == "shutdown":
+                break
+            if msg.get("type") == "wait":
+                time.sleep(float(msg.get("wait_s", 0.05)))
+                continue
+            if msg.get("type") != "task":
+                continue
+            task = task_from_wire(msg["task"])
+            if delay > 0:
+                time.sleep(delay)   # chaos "slow": a deterministic
+                #                     straggler for the speculation path
+            try:
+                res, loaded = runner(task)
+            except BaseException as e:  # noqa: BLE001 — reported upstream
+                chan.send({"type": "error", "task": task.task_id,
+                           "error": f"{type(e).__name__}: {e}"})
+                continue
+            out = {"type": "result", "task": task.task_id,
+                   "loaded": int(loaded)}
+            out.update(result_to_wire(res))
+            chan.send(out)
+    except OSError:
+        return 1    # coordinator went away: nothing left to report to
+    finally:
+        stop.set()
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="repro out-of-core scheduler executor")
+    ap.add_argument("--connect", required=True, metavar="HOST:PORT",
+                    help="coordinator address")
+    ap.add_argument("--id", default=None,
+                    help="executor name (default pid-derived)")
+    args = ap.parse_args(argv)
+    host, _, port = args.connect.rpartition(":")
+    sock = socket.create_connection((host, int(port)), timeout=60)
+    sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    chan = Channel(sock)
+    try:
+        return serve(chan, args.id or f"pid{os.getpid()}")
+    finally:
+        chan.close()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,6 +68,9 @@ class TaskLedger:
         # journal writes that failed at the OS layer (disk full, dead
         # volume); surfaced as ``ledger_errors`` in scheduler telemetry
         self.errors = 0
+        # replay lines abandoned as torn/malformed (including a torn
+        # header); surfaced as ``ledger_warnings`` in telemetry
+        self.replay_warnings = 0
 
     # -- replay ------------------------------------------------------------
 
@@ -84,6 +87,14 @@ class TaskLedger:
         try:
             header = json.loads(lines[0])
         except ValueError:
+            header = None   # torn header of a write killed mid-line
+        if not isinstance(header, dict):
+            # a header torn by a crash during ``open_fresh`` may fail to
+            # parse OR parse to a JSON scalar/array prefix (e.g. a bare
+            # number) — both mean nothing below it is trusted. Treat it
+            # exactly like a torn tail: fresh ledger, counted, never an
+            # exception that kills the resume.
+            self.replay_warnings += 1
             return {}
         if header.get("query_sig") != self.query_sig:
             return {}
@@ -91,16 +102,22 @@ class TaskLedger:
         for line in lines[1:]:
             try:
                 rec = json.loads(line)
-            except ValueError:
-                break       # torn tail of a killed write; stop trusting
-            res = TaskResult(task_sum=float(rec["sum"]),
-                             elapsed_s=float(rec.get("elapsed_s", 0.0)))
+                if not isinstance(rec, dict):
+                    raise ValueError("non-dict record")
+                res = TaskResult(task_sum=float(rec["sum"]),
+                                 elapsed_s=float(rec.get("elapsed_s",
+                                                         0.0)))
+                tid = rec["task"]
+            except (ValueError, TypeError, KeyError):
+                # torn tail of a killed write; stop trusting
+                self.replay_warnings += 1
+                break
             if "units" in rec:
                 res.unit_ids = np.asarray(rec["units"], np.int64)
                 res.unit_vals = np.asarray(rec["values"], np.float64)
             if "profile" in rec:
                 res.profile = np.asarray(rec["profile"], np.float64)
-            done[rec["task"]] = res
+            done[tid] = res
         return done
 
     # -- writing -----------------------------------------------------------

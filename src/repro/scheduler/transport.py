@@ -1,0 +1,142 @@
+"""Wire protocol for the coordinator/executor pair: length-prefixed
+JSON frames over a TCP socket, plus the task/result codecs.
+
+Framing is a 4-byte big-endian payload length followed by that many
+bytes of UTF-8 JSON. JSON keeps the protocol debuggable (``tcpdump``
+shows the conversation) and — crucially for bit-exactness — Python's
+``json`` round-trips ``float`` via ``repr``, so a task's f64 partial
+sum survives the socket unchanged and the distributed aggregation
+matches the in-process backends bit for bit.
+
+A truncated read (peer died mid-frame) surfaces as ``None`` from
+:func:`recv_frame`, never as a partial object: the coordinator treats
+it like any other disconnect and the lease machinery takes over.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+from typing import Optional
+
+import numpy as np
+
+from .ledger import TaskResult
+from .tasks import Task
+
+# refuse absurd frames before allocating for them; the largest real
+# frame is a per-node result (~4096 units of id+float ≈ a few hundred
+# KB), so 64 MiB is orders of magnitude of headroom, not a limit
+MAX_FRAME = 64 << 20
+_LEN = struct.Struct(">I")
+
+
+def send_frame(sock: socket.socket, obj: dict) -> None:
+    payload = json.dumps(obj, separators=(",", ":")).encode()
+    if len(payload) > MAX_FRAME:
+        raise ValueError(f"frame of {len(payload)} bytes exceeds cap")
+    sock.sendall(_LEN.pack(len(payload)) + payload)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> Optional[bytes]:
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None     # EOF mid-frame: peer is gone
+        buf += chunk
+    return bytes(buf)
+
+
+def recv_frame(sock: socket.socket) -> Optional[dict]:
+    """One frame, or ``None`` on EOF/truncation (peer disconnect)."""
+    head = _recv_exact(sock, _LEN.size)
+    if head is None:
+        return None
+    (n,) = _LEN.unpack(head)
+    if n > MAX_FRAME:
+        raise ValueError(f"frame header claims {n} bytes (cap "
+                         f"{MAX_FRAME}); refusing")
+    payload = _recv_exact(sock, n)
+    if payload is None:
+        return None
+    obj = json.loads(payload.decode())
+    if not isinstance(obj, dict):
+        raise ValueError("frame payload is not a JSON object")
+    return obj
+
+
+class Channel:
+    """A socket with a send lock: the executor's heartbeat thread and
+    its task loop (and, coordinator-side, dispatch vs shutdown) share
+    one socket, and interleaved ``sendall`` calls would tear frames."""
+
+    def __init__(self, sock: socket.socket) -> None:
+        self.sock = sock
+        self._send_lock = threading.Lock()
+
+    def send(self, obj: dict) -> None:
+        with self._send_lock:
+            send_frame(self.sock, obj)
+
+    def recv(self) -> Optional[dict]:
+        try:
+            return recv_frame(self.sock)
+        except OSError:
+            return None     # closed under us: same as a disconnect
+
+    def close(self) -> None:
+        try:
+            self.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+
+# -- task / result codecs ---------------------------------------------------
+
+def task_to_wire(task: Task) -> dict:
+    d = {"task_id": task.task_id, "kind": task.kind,
+         "capacity": int(task.capacity), "tile_repr": task.tile_repr,
+         "units": [int(u) for u in np.asarray(task.units)],
+         "cost": float(task.cost), "r": int(task.r)}
+    if task.pivots is not None:
+        d["pivots"] = [int(p) for p in np.asarray(task.pivots)]
+    return d
+
+
+def task_from_wire(d: dict) -> Task:
+    pivots = d.get("pivots")
+    return Task(task_id=d["task_id"], kind=d["kind"],
+                capacity=int(d["capacity"]), tile_repr=d["tile_repr"],
+                units=np.asarray(d["units"], np.int32),
+                pivots=(None if pivots is None
+                        else np.asarray(pivots, np.int32)),
+                cost=float(d["cost"]), r=int(d["r"]))
+
+
+def result_to_wire(res: TaskResult) -> dict:
+    # same field names as the ledger records: the wire format IS the
+    # commit format, minus the coordinator-side fsync
+    d = {"sum": res.task_sum, "elapsed_s": res.elapsed_s}
+    if res.unit_ids is not None:
+        d["units"] = [int(u) for u in res.unit_ids]
+        d["values"] = [float(v) for v in res.unit_vals]
+    if res.profile is not None:
+        d["profile"] = [float(v) for v in res.profile]
+    return d
+
+
+def result_from_wire(d: dict) -> TaskResult:
+    res = TaskResult(task_sum=float(d["sum"]),
+                     elapsed_s=float(d.get("elapsed_s", 0.0)))
+    if "units" in d:
+        res.unit_ids = np.asarray(d["units"], np.int64)
+        res.unit_vals = np.asarray(d["values"], np.float64)
+    if "profile" in d:
+        res.profile = np.asarray(d["profile"], np.float64)
+    return res

@@ -178,6 +178,7 @@ class ServingGateway:
         self.shed = 0                 # queue-depth rejections
         self.shed_tenant = 0          # tenant-quota rejections
         self.deadline_expired = 0
+        self.monitor_errors = 0       # per-ticket expiry faults survived
         self.warmed_graphs = 0
         self.warmed_sessions = 0
         if self.store is not None and warm_start:
@@ -265,7 +266,15 @@ class ServingGateway:
                            and now >= t._deadline_at and not t.done()]
                 self._prune_locked()
             for t in expired:       # outside the lock: _expire re-takes it
-                self._expire(t)
+                try:
+                    self._expire(t)
+                except Exception:   # noqa: BLE001 — monitor must outlive
+                    # a single ticket's cancel blowing up: count it and
+                    # keep enforcing the *other* deadlines. Dying here
+                    # would silently leave every later deadline
+                    # unenforced for the life of the gateway.
+                    with self._lock:
+                        self.monitor_errors += 1
 
     # -- persistence / warm start ------------------------------------------
 
@@ -329,6 +338,7 @@ class ServingGateway:
                 "shed": self.shed,
                 "shed_tenant": self.shed_tenant,
                 "deadline_expired": self.deadline_expired,
+                "monitor_errors": self.monitor_errors,
                 "warmed_graphs": self.warmed_graphs,
                 "warmed_sessions": self.warmed_sessions,
                 "closed": self._closed,

@@ -1,0 +1,548 @@
+"""The multi-host scheduler: wire protocol, leases/heartbeats,
+commit-protocol dedup, chaos schedules, and real-executor fault drills.
+
+Two layers of coverage:
+
+- **Protocol-level** (fast): a real ``Coordinator`` with
+  ``spawn_executors=False`` plus *scripted* executors — plain sockets
+  speaking the frame protocol with prescribed behavior (stall, die,
+  error, heartbeat-while-slow) — so lease expiry, reassignment,
+  first-committed-wins, retry, and cross-host speculation are pinned
+  without paying executor-process startup.
+- **Process-level** (slow-marked): real ``repro.scheduler.executor``
+  subprocesses running real counting tasks, with SIGKILL mid-run — the
+  acceptance drill: bit-exact counts vs the local backend, ≥1 lease
+  expiry, ≥1 reassignment, and a resume that re-executes nothing.
+"""
+import os
+import socket
+import struct
+import subprocess
+import sys
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.engine import CliqueEngine, CountRequest
+from repro.graphs import planted_cliques
+from repro.runtime.chaos import ChaosMonkey, parse_chaos
+from repro.scheduler import (Coordinator, SchedulerConfig, Task,
+                             TaskLedger, TaskResult)
+from repro.scheduler.transport import (Channel, recv_frame,
+                                       result_from_wire, result_to_wire,
+                                       send_frame, task_from_wire,
+                                       task_to_wire)
+
+# ---------------- transport ----------------
+
+
+def test_frame_roundtrip_and_eof():
+    a, b = socket.socketpair()
+    send_frame(a, {"x": 1, "s": "π", "f": 1 / 3})
+    got = recv_frame(b)
+    assert got == {"x": 1, "s": "π", "f": 1 / 3}
+    assert got["f"] == 1 / 3                # float repr round-trip: exact
+    a.close()
+    assert recv_frame(b) is None            # clean EOF
+    b.close()
+
+
+def test_truncated_frame_reads_as_disconnect():
+    a, b = socket.socketpair()
+    a.sendall(struct.pack(">I", 64) + b'{"half":')   # died mid-payload
+    a.close()
+    assert recv_frame(b) is None
+    b.close()
+
+
+def test_absurd_frame_header_is_refused():
+    a, b = socket.socketpair()
+    a.sendall(struct.pack(">I", 1 << 30))
+    with pytest.raises(ValueError, match="cap"):
+        recv_frame(b)
+    a.close()
+    b.close()
+
+
+def test_task_and_result_wire_roundtrip():
+    t = Task(task_id="s8-0001-abc", kind="split", capacity=8,
+             tile_repr="bits", units=np.array([3, 1, 4], np.int32),
+             pivots=np.array([0, 2, 1], np.int32), cost=7.5, r=2)
+    t2 = task_from_wire(task_to_wire(t))
+    assert t2.task_id == t.task_id and t2.kind == t.kind
+    assert t2.capacity == t.capacity and t2.tile_repr == t.tile_repr
+    np.testing.assert_array_equal(t2.units, t.units)
+    np.testing.assert_array_equal(t2.pivots, t.pivots)
+    assert t2.cost == t.cost and t2.r == t.r
+
+    res = TaskResult(task_sum=1 / 7, elapsed_s=0.25,
+                     unit_ids=np.array([5, 9], np.int64),
+                     unit_vals=np.array([0.1, 2 / 3]),
+                     profile=np.array([3.0, 1 / 9]))
+    r2 = result_from_wire(result_to_wire(res))
+    assert r2.task_sum == res.task_sum      # bit-exact through JSON
+    np.testing.assert_array_equal(r2.unit_ids, res.unit_ids)
+    np.testing.assert_array_equal(r2.unit_vals, res.unit_vals)
+    np.testing.assert_array_equal(r2.profile, res.profile)
+
+
+# ---------------- chaos schedules ----------------
+
+
+def test_chaos_spec_parsing():
+    ev = parse_chaos("kill:1@2,hang:0@3/2.0,slow:2/1.5,part:1")
+    assert [(e.action, e.executor, e.after_commits, e.seconds)
+            for e in ev] == [("kill", 1, 2, 0.0), ("hang", 0, 3, 2.0),
+                             ("slow", 2, 0, 1.5), ("part", 1, 0, 0.0)]
+    for bad in ("boom:1", "kill", "kill:x", "hang:1@2", "slow:1"):
+        with pytest.raises(ValueError):
+            parse_chaos(bad)
+
+
+def test_chaos_kill_waits_for_a_lease():
+    """kill/hang stay armed until the victim holds a lease, so the
+    smoke's lease-expiry assertion can never race an idle victim."""
+    killed = []
+    mk = ChaosMonkey(parse_chaos("kill:0@2"), kill=killed.append)
+    mk.on_commit(1, lambda i: True)         # not due yet
+    assert not killed and mk.pending()
+    mk.on_commit(2, lambda i: False)        # due, victim idle → armed
+    assert not killed and mk.pending()
+    mk.on_commit(2, lambda i: True)
+    assert killed == [0] and not mk.pending()
+    assert mk.applied == ["kill:0"]
+
+
+def test_chaos_slow_is_a_task_delay_not_an_event():
+    mk = ChaosMonkey(parse_chaos("slow:2/1.5"))
+    assert mk.task_delay(2) == 1.5 and mk.task_delay(0) == 0.0
+    assert not mk.pending()
+
+
+def test_chaos_event_fires_exactly_once_under_concurrent_commits():
+    # the coordinator pokes on_commit from every connection-handler
+    # thread and from its monitor loop; a due event must not double-fire
+    kills = []
+    mk = ChaosMonkey(parse_chaos("kill:1@1"), kill=kills.append)
+    barrier = threading.Barrier(8)
+
+    def poke():
+        barrier.wait()
+        for n in range(1, 50):
+            mk.on_commit(n, lambda idx: True)
+
+    threads = [threading.Thread(target=poke) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert kills == [1]
+    assert mk.applied == ["kill:1"]
+    assert not mk.pending()
+
+
+# ---------------- protocol-level coordinator (scripted executors) -------
+
+
+def _mk_task(tid: str, cost: float = 1.0) -> Task:
+    return Task(task_id=tid, kind="bucket", capacity=8,
+                tile_repr="dense", units=np.arange(4, dtype=np.int32),
+                pivots=None, cost=cost)
+
+
+def _cfg(**kw) -> SchedulerConfig:
+    base = dict(executors=2, spawn_executors=False, lease_s=0.25,
+                heartbeat_s=0.05, poll_s=0.005, connect_timeout_s=2.0,
+                host_backoff_s=0.02, host_backoff_cap_s=0.1,
+                retry_backoff_s=0.01, retry_backoff_cap_s=0.05,
+                max_retries=3,
+                # effectively disable speculation unless a test opts in
+                speculation_min_s=30.0)
+    base.update(kw)
+    return SchedulerConfig(**base)
+
+
+def _coordinator(tmp_path, tasks, cfg, completed=None, ledger=None):
+    store = types.SimpleNamespace(root=str(tmp_path),
+                                  fingerprint="f" * 16,
+                                  plan_sig="p" * 16)
+    req = types.SimpleNamespace(k=3, effective_method="exact", p=1.0,
+                                colors=1, return_per_node=False, seed=0)
+    if ledger is None:
+        ledger = TaskLedger(str(tmp_path / "ledger.jsonl"), "sig")
+        ledger.open_fresh()
+    coord = Coordinator(store, req, cfg, tasks, ledger,
+                        dict(completed or {}), key_seed=None,
+                        lookup_iters=4)
+    return coord, ledger
+
+
+def _scripted(addr, name, handler, committed):
+    """A fake executor: speaks the real protocol, behavior prescribed
+    by ``handler(task_wire) -> action tuple``:
+
+      ("result", sum)              — commit immediately
+      ("error", msg)               — report failure, ask for more
+      ("stall", secs, beat[, sum]) — go dark (or heartbeat) that long,
+                                     then send the (possibly stale)
+                                     result
+      ("die",)                     — close the socket abruptly
+    """
+    sock = socket.create_connection(addr, timeout=10)
+    chan = Channel(sock)
+    try:
+        chan.send({"type": "hello", "executor": name})
+        job = chan.recv()
+        assert job["type"] == "job", job
+        while True:
+            chan.send({"type": "ready"})
+            msg = chan.recv()
+            if msg is None or msg["type"] == "shutdown":
+                return
+            if msg["type"] == "wait":
+                time.sleep(float(msg.get("wait_s", 0.02)))
+                continue
+            t = msg["task"]
+            act = handler(t)
+            if act[0] == "die":
+                return
+            if act[0] == "error":
+                chan.send({"type": "error", "task": t["task_id"],
+                           "error": act[1]})
+                continue
+            elapsed, val = 0.01, 1.0
+            if act[0] == "result":
+                val = float(act[1])
+            else:   # stall
+                secs, beat = float(act[1]), bool(act[2])
+                if len(act) > 3:
+                    val = float(act[3])
+                end = time.monotonic() + secs
+                while time.monotonic() < end:
+                    if beat:
+                        chan.send({"type": "heartbeat"})
+                    time.sleep(0.02)
+                elapsed = secs
+            chan.send({"type": "result", "task": t["task_id"],
+                       "sum": val, "elapsed_s": elapsed, "loaded": 0})
+            committed.append(t["task_id"])
+    except OSError:
+        pass
+    finally:
+        chan.close()
+
+
+def _drive(coord, executors, timeout=30.0):
+    """Run the coordinator in a thread, attach scripted executors once
+    it is listening, and return {"results": ...} or {"error": ...}."""
+    box = {}
+
+    def go():
+        try:
+            box["results"] = coord.run()
+        except BaseException as e:  # noqa: BLE001 — surfaced to the test
+            box["error"] = e
+
+    th = threading.Thread(target=go, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 5
+    while coord.address is None and th.is_alive() \
+            and time.monotonic() < deadline:
+        time.sleep(0.005)
+    threads = []
+    for name, handler, committed in executors:
+        t = threading.Thread(target=_scripted,
+                             args=(coord.address, name, handler,
+                                   committed),
+                             daemon=True)
+        t.start()
+        threads.append(t)
+    th.join(timeout)
+    if th.is_alive():
+        pytest.fail("coordinator did not finish")
+    for t in threads:
+        t.join(timeout=5)
+    return box
+
+
+def test_distributes_and_steals_across_hosts(tmp_path):
+    tasks = [_mk_task(f"t{i}") for i in range(8)]
+    coord, ledger = _coordinator(tmp_path, tasks, _cfg())
+    a_done, b_done = [], []
+    box = _drive(coord, [
+        ("e0", lambda t: ("result", 1.0), a_done),
+        # e1 is slow per task: e0 drains its own queue then steals
+        ("e1", lambda t: ("stall", 0.08, True, 1.0), b_done)])
+    assert set(box["results"]) == {t.task_id for t in tasks}
+    assert a_done and sorted(a_done + b_done) == \
+        sorted(t.task_id for t in tasks)
+    assert coord.stats["run"] == 8
+    assert coord.stats["stolen"] >= 1
+    # the ledger holds one committed line per task (plus the header)
+    ledger.close()
+    with open(ledger.path) as f:
+        assert sum(1 for _ in f) == 9
+
+
+def test_silent_executor_expires_lease_and_work_is_reassigned(tmp_path):
+    """An executor that stops heartbeating mid-task (SIGSTOP-shaped)
+    loses its lease; the task moves to a live host; the thawed
+    original's stale result is discarded by first-committed-wins."""
+    tasks = [_mk_task(f"t{i}") for i in range(16)]
+    coord, ledger = _coordinator(
+        tmp_path, tasks, _cfg(lease_s=0.15))
+    a_done, b_done = [], []
+    state = {"stalled": False}
+
+    def flaky(t):
+        if not state["stalled"]:
+            state["stalled"] = True
+            return ("stall", 0.8, False, 999.0)   # dark > lease, bad sum
+        return ("result", 1.0)
+
+    def steady(t):
+        # pace e1 so the run is still going when the stale 999.0 lands
+        time.sleep(0.08)
+        return ("result", 1.0)
+
+    box = _drive(coord, [("e0", flaky, a_done), ("e1", steady, b_done)])
+    results = box["results"]
+    assert set(results) == {t.task_id for t in tasks}
+    assert coord.stats["lease_expiries"] >= 1
+    assert coord.stats["heartbeats_missed"] >= 1   # socket stayed open
+    assert coord.stats["reassigned"] >= 1
+    # first-committed-wins: the reassigned execution's sum (1.0) landed;
+    # the stale 999.0 was discarded and counted as a duplicate
+    assert all(results[tid].task_sum == 1.0 for tid in results)
+    assert coord.core.commit_dups >= 1
+    # the flapping host was penalized before re-admission
+    assert coord.expiries["e0"] >= 1
+    ledger.close()
+
+
+def test_disconnect_expires_leases_immediately(tmp_path):
+    """A closed socket (SIGKILL-shaped) needs no lease timeout: the
+    dead executor's task is reassigned at EOF and the run completes on
+    the survivor."""
+    tasks = [_mk_task(f"t{i}") for i in range(6)]
+    coord, ledger = _coordinator(
+        tmp_path, tasks, _cfg(lease_s=5.0))   # expiry can't be the clock
+    a_done, b_done = [], []
+    box = _drive(coord, [
+        ("e0", lambda t: ("die",), a_done),
+        # e1 paced so e0 is guaranteed a task before the pool drains
+        ("e1", lambda t: ("stall", 0.05, True, 1.0), b_done)])
+    assert set(box["results"]) == {t.task_id for t in tasks}
+    assert coord.stats["lease_expiries"] >= 1
+    assert coord.stats["reassigned"] >= 1
+    assert coord.stats["heartbeats_missed"] == 0   # EOF, not timeout
+    assert not coord.hosts["e0"]["alive"]
+    assert not a_done and sorted(b_done) == \
+        sorted(t.task_id for t in tasks)
+    ledger.close()
+
+
+def test_cross_host_speculation_first_commit_wins(tmp_path):
+    """A heartbeating-but-slow host keeps its lease alive, so only the
+    straggler envelope can save the run — and the duplicate must land
+    on a different host."""
+    tasks = [_mk_task(f"t{i}") for i in range(8)]
+    coord, ledger = _coordinator(
+        tmp_path, tasks,
+        _cfg(lease_s=1.0, speculation_min_s=0.05,
+             speculation_factor=1.0, speculation_min_done=3))
+    a_done, b_done = [], []
+    state = {"first": True}
+
+    def slow_once(t):
+        if state["first"]:
+            state["first"] = False
+            return ("stall", 2.0, True, 555.0)  # alive but 40× too slow
+        return ("result", 1.0)
+
+    box = _drive(coord, [
+        ("e0", slow_once, a_done),
+        ("e1", lambda t: ("result", 1.0), b_done)])
+    results = box["results"]
+    assert set(results) == {t.task_id for t in tasks}
+    assert coord.stats["speculated"] >= 1
+    assert coord.stats["speculation_wins"] >= 1
+    assert coord.stats["lease_expiries"] == 0   # heartbeats held it
+    assert all(results[tid].task_sum == 1.0 for tid in results)
+    ledger.close()
+
+
+def test_error_frames_are_retried_with_backoff(tmp_path):
+    tasks = [_mk_task(f"t{i}") for i in range(4)]
+    coord, ledger = _coordinator(tmp_path, tasks, _cfg(executors=1))
+    fails = {"left": 2}
+
+    def flaky(t):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            return ("error", "transient")
+        return ("result", 1.0)
+
+    done = []
+    box = _drive(coord, [("e0", flaky, done)])
+    assert set(box["results"]) == {t.task_id for t in tasks}
+    assert coord.stats["retried"] >= 2
+    ledger.close()
+
+
+def test_poison_task_fails_the_run_with_resume_pointer(tmp_path):
+    tasks = [_mk_task(f"t{i}") for i in range(3)]
+    coord, ledger = _coordinator(
+        tmp_path, tasks, _cfg(executors=1, max_retries=1))
+    done = []
+    box = _drive(coord, [("e0", lambda t: ("error", "poison"), done)])
+    assert "error" in box
+    assert "resume=True" in str(box["error"])
+    ledger.close()
+
+
+def test_all_executors_lost_raises_then_resumes_cleanly(tmp_path):
+    """Losing every executor fails the run loudly (pointing at the
+    ledger); a second coordinator over the same ledger replays the
+    committed prefix and only re-executes the rest — the coordinator-
+    crash recovery path uses exactly the same mechanism."""
+    tasks = [_mk_task(f"t{i}") for i in range(4)]
+    coord, ledger = _coordinator(
+        tmp_path, tasks, _cfg(executors=1, connect_timeout_s=0.4))
+    state = {"n": 0}
+
+    def one_then_die(t):
+        state["n"] += 1
+        return ("result", 2.0) if state["n"] == 1 else ("die",)
+
+    done = []
+    box = _drive(coord, [("e0", one_then_die, done)])
+    assert "error" in box
+    assert "resume=True" in str(box["error"])
+    ledger.close()
+    assert len(done) == 1
+
+    led2 = TaskLedger(ledger.path, "sig")
+    completed = led2.load()
+    assert set(completed) == set(done)
+    led2.open_append(completed)
+    coord2, _ = _coordinator(tmp_path, tasks, _cfg(executors=1),
+                             completed=completed, ledger=led2)
+    done2 = []
+    box2 = _drive(coord2, [("e0", lambda t: ("result", 1.0), done2)])
+    results = box2["results"]
+    assert set(results) == {t.task_id for t in tasks}
+    # the committed task was never re-dispatched, and its journaled
+    # value (not the fresh 1.0) is what aggregation sees
+    assert done[0] not in done2
+    assert results[done[0]].task_sum == 2.0
+    led2.close()
+
+
+def test_fully_replayed_resume_spawns_nothing(tmp_path):
+    tasks = [_mk_task(f"t{i}") for i in range(3)]
+    completed = {t.task_id: TaskResult(task_sum=1.0, elapsed_s=0.01)
+                 for t in tasks}
+    coord, ledger = _coordinator(tmp_path, tasks,
+                                 _cfg(spawn_executors=True),
+                                 completed=completed)
+    results = coord.run()       # must return without binding a port
+    assert coord.address is None and not coord._procs
+    assert set(results) == {t.task_id for t in tasks}
+    assert coord.stats["run"] == 0
+    ledger.close()
+
+
+# ---------------- process-level fault drills (real executors) -----------
+
+
+@pytest.mark.slow
+def test_distributed_run_bit_exact_including_per_node(tmp_path):
+    """Two real executor subprocesses, clean run: scalar count, per-node
+    attribution, and a sampled (seeded) estimate all bit-exact vs the
+    local backend — the wire and the per-process PRNG rebuild preserve
+    every answer-defining bit."""
+    g = planted_cliques(400, 0.02, [8, 8, 9], seed=5)
+    local = CliqueEngine(g)
+    ref = local.submit(CountRequest(k=4, return_per_node=True))
+    ref_col = local.submit(CountRequest(k=4, method="color", p=0.5,
+                                        colors=8, seed=3))
+    eng = CliqueEngine(g, ooc=SchedulerConfig(
+        executors=2, spill_dir=str(tmp_path), target_tasks=12))
+    rep = eng.submit(CountRequest(k=4, backend="ooc",
+                                  return_per_node=True))
+    assert rep.count == ref.count
+    np.testing.assert_array_equal(rep.per_node, ref.per_node)
+    tel = rep.cache["scheduler"]
+    assert tel["executors"] == 2 and tel["run"] == tel["tasks"]
+    assert sum(h["committed"] for h in tel["per_host"].values()) \
+        == tel["tasks"]
+    rep_col = eng.submit(CountRequest(k=4, backend="ooc",
+                                      method="color", p=0.5, colors=8,
+                                      seed=3))
+    assert rep_col.estimate == ref_col.estimate
+
+
+@pytest.mark.slow
+def test_executor_sigkill_recovery_bit_exact_and_resume(tmp_path):
+    """The acceptance drill: 3 real executors, one SIGKILLed mid-flight
+    by the chaos harness. The run must complete bit-exact vs the local
+    backend with ≥1 lease expiry and ≥1 reassignment, and a resume=True
+    rerun must re-execute zero committed tasks."""
+    g = planted_cliques(400, 0.02, [8, 8, 9], seed=5)
+    golden = CliqueEngine(g).submit(CountRequest(k=4)).count
+
+    eng = CliqueEngine(g, ooc=SchedulerConfig(
+        executors=3, spill_dir=str(tmp_path), target_tasks=12,
+        lease_s=1.0, task_delay_s=0.15, chaos="kill:1@1",
+        poll_s=0.005))
+    rep = eng.submit(CountRequest(k=4, backend="ooc"))
+    tel = rep.cache["scheduler"]
+    assert rep.count == golden
+    assert tel["executors"] == 3
+    assert tel["lease_expiries"] >= 1, tel
+    assert tel["reassigned"] >= 1, tel
+    assert tel["chaos"] == ["kill:1"]
+    # the survivors covered the dead host's work
+    assert sum(h["committed"] for h in tel["per_host"].values()) \
+        == tel["tasks"]
+
+    eng2 = CliqueEngine(g, ooc=SchedulerConfig(
+        executors=3, spill_dir=str(tmp_path), resume=True,
+        target_tasks=12))
+    rep2 = eng2.submit(CountRequest(k=4, backend="ooc"))
+    tel2 = rep2.cache["scheduler"]
+    assert rep2.count == golden
+    assert tel2["run"] == 0 and tel2["resumed"] == tel2["tasks"]
+    assert tel2["spawned"] == 0     # fully replayed: no processes
+
+
+@pytest.mark.slow
+def test_executor_cli_entrypoint_reports_protocol_errors():
+    """`python -m repro.scheduler.executor` against a coordinator that
+    speaks garbage exits nonzero instead of hanging."""
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    host, port = srv.getsockname()[:2]
+
+    def bad_coordinator():
+        conn, _ = srv.accept()
+        recv_frame(conn)                        # swallow the hello
+        send_frame(conn, {"type": "nonsense"})  # not a jobspec
+        conn.close()
+
+    t = threading.Thread(target=bad_coordinator, daemon=True)
+    t.start()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.scheduler.executor",
+         "--connect", f"{host}:{port}", "--id", "e9"],
+        env=env, timeout=60, capture_output=True)
+    assert proc.returncode == 1
+    srv.close()

@@ -208,6 +208,33 @@ def test_monitor_expires_without_a_waiter(graphs, monkeypatch):
     gw.shutdown()
 
 
+def test_monitor_survives_a_tickets_cancel_exploding(graphs, monkeypatch):
+    """One ticket whose cancel raises must not kill the deadline
+    monitor — before the fix the thread died on the first exception and
+    every later deadline went silently unenforced for the life of the
+    gateway."""
+    _slow_submit(monkeypatch, 0.8)
+    gw = ServingGateway(monitor_poll_s=0.01, max_queue_depth=4)
+    gw.submit(graphs[0], CountRequest(k=3))                    # occupies
+    bomb = gw.submit(graphs[0], CountRequest(k=4), deadline_s=0.05)
+
+    def exploding_cancel(exc):
+        raise RuntimeError("ticket state torn down concurrently")
+
+    monkeypatch.setattr(bomb._inner, "cancel", exploding_cancel)
+    doomed = gw.submit(graphs[1], CountRequest(k=4), deadline_s=0.1)
+    deadline = time.time() + 5.0
+    while not doomed.done() and time.time() < deadline:
+        time.sleep(0.01)
+    # the later deadline was still enforced, past the exploding one
+    assert doomed.done()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert gw.stats()["monitor_errors"] >= 1
+    assert gw._monitor.is_alive()
+    gw.shutdown()
+
+
 # ---------------- ticket cancellation (service level) ----------------
 
 def test_ticket_cancel_skips_job_without_engine_work(graphs):

@@ -359,6 +359,81 @@ def test_ledger_errors_surface_in_scheduler_telemetry(tmp_path, graph):
     tel = eng.submit(CountRequest(k=4, backend="ooc")).cache["scheduler"]
     assert tel["ledger_errors"] == 0
     assert tel["abandoned_failures"] == 0
+    assert tel["commit_dups"] == 0
+    assert tel["ledger_warnings"] == 0
+
+
+@pytest.mark.parametrize("header", [
+    '{"query_sig": "si',        # torn mid-header (crash during write)
+    '3\n{"task": "t1", "sum": 1.0, "elapsed_s": 0.1}\n',  # valid non-dict
+    '[1, 2]\n',
+    '"sig"\n'])
+def test_ledger_torn_header_is_a_fresh_ledger(tmp_path, header):
+    """A torn or non-dict first line must read as an empty ledger —
+    before the fix a *valid-JSON* non-dict header (``3``, ``[1]``)
+    raised AttributeError out of ``load()`` and killed the resume that
+    the journal exists to serve."""
+    path = str(tmp_path / "ledger.jsonl")
+    with open(path, "w") as f:
+        f.write(header)
+    led = TaskLedger(path, "sig")
+    assert led.load() == {}
+    assert led.replay_warnings >= 1
+
+
+def test_ledger_non_dict_record_keeps_trusted_prefix(tmp_path):
+    """Records after the header get the torn-tail treatment: the first
+    malformed line (non-dict JSON included) ends the trusted prefix
+    instead of raising."""
+    led = _open_ledger(tmp_path)
+    led.append("t1", TaskResult(task_sum=3.0, elapsed_s=0.1))
+    led.close()
+    with open(led.path, "a") as f:
+        f.write('[1, 2]\n'
+                '{"task": "t2", "sum": 9.0, "elapsed_s": 0.1}\n')
+    led2 = TaskLedger(led.path, "sig")
+    done = led2.load()
+    assert set(done) == {"t1"} and done["t1"].task_sum == 3.0
+    assert led2.replay_warnings == 1
+    # open_append rewrites the trusted prefix; the garbage is gone
+    led2.open_append(done)
+    led2.close()
+    led3 = TaskLedger(led.path, "sig")
+    assert set(led3.load()) == {"t1"}
+    assert led3.replay_warnings == 0
+
+
+def test_ledger_record_missing_fields_ends_replay(tmp_path):
+    led = _open_ledger(tmp_path)
+    led.append("t1", TaskResult(task_sum=3.0, elapsed_s=0.1))
+    led.close()
+    with open(led.path, "a") as f:
+        f.write('{"task": "t2"}\n')      # no "sum": half-written record
+    led2 = TaskLedger(led.path, "sig")
+    assert set(led2.load()) == {"t1"}
+    assert led2.replay_warnings == 1
+
+
+def test_completion_core_first_committed_wins(tmp_path):
+    """The distributed commit protocol in miniature: the first result
+    for a task is journaled and final; later duplicates (lease races,
+    speculation losers, zombie hosts) are counted, not applied."""
+    from repro.scheduler import CompletionCore
+    led = _open_ledger(tmp_path)
+    core = CompletionCore([_mk_task("a"), _mk_task("b")], led, {},
+                          SchedulerConfig())
+    assert core.commit("a", TaskResult(task_sum=1.0, elapsed_s=0.01))
+    assert not core.commit("a", TaskResult(task_sum=999.0,
+                                           elapsed_s=0.01))
+    assert core.commit_dups == 1
+    assert core.results["a"].task_sum == 1.0
+    assert not core.finished()
+    assert core.commit("b", TaskResult(task_sum=2.0, elapsed_s=0.01))
+    assert core.finished()
+    led.close()
+    # exactly one journal line per task: the duplicate never hit disk
+    with open(led.path) as f:
+        assert sum(1 for _ in f) == 3    # header + a + b
 
 
 def test_fixed_batches_skips_empty_input():
