@@ -10,13 +10,17 @@ same file; ``benchmarks/fig6_stragglers.py --scheduler`` appends the
 out-of-core scheduler's speculation-recovery and memory-footprint
 record to ``BENCH_scheduler.json``; ``benchmarks/gateway_load.py``
 appends the serving gateway's store-hit latency record to
-``BENCH_serving.json``. This script turns those logs into gates:
+``BENCH_serving.json``; ``benchmarks/estimator_accuracy.py`` appends
+the per-method time-vs-accuracy frontier on the degree-skewed corpus
+graph to ``BENCH_estimator.json``. This script turns those logs into
+gates:
 
   PYTHONPATH=src python scripts/check_bench.py --run     # nightly CI
   PYTHONPATH=src python scripts/check_bench.py           # compare last 2
   PYTHONPATH=src python scripts/check_bench.py --scheduler --run
   PYTHONPATH=src python scripts/check_bench.py --allk --run
   PYTHONPATH=src python scripts/check_bench.py --serving --run
+  PYTHONPATH=src python scripts/check_bench.py --estimator --run
 
 ``--run`` executes a fresh benchmark (appending the new record), then
 compares it against the latest *prior* record. Failure conditions, per
@@ -53,6 +57,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 TRAJECTORY = os.path.join(REPO, "BENCH_kernels.json")
 SCHED_TRAJECTORY = os.path.join(REPO, "BENCH_scheduler.json")
 SERVING_TRAJECTORY = os.path.join(REPO, "BENCH_serving.json")
+ESTIMATOR_TRAJECTORY = os.path.join(REPO, "BENCH_estimator.json")
 
 
 def row_key(row: dict) -> tuple:
@@ -212,6 +217,53 @@ def compare_serving(prev: dict, new: dict, ratio: float) -> list:
     return regressions
 
 
+def compare_estimator(prev: dict, new: dict, ratio: float) -> list:
+    """Estimator-trajectory gate, per (method, rel_error) row:
+
+    - ``wall_us`` may not regress past ``ratio`` — same provenance
+      rules as the kernel wall gate;
+    - ``covered`` must stay True: the benchmark asserts CI-contains-
+      truth for every seed before appending, so a False here means the
+      record was edited by hand or the contract was weakened;
+    - the auto row at the tightest target must keep ``resolved ==
+      "sampled"`` with a named ``winner`` (the portfolio race may not
+      silently degrade to exact fall-through) and ``within_best`` must
+      stay ≤ 1.5 — the race may not cost more than half again the
+      oracle single-method choice."""
+    regressions = []
+    prev_rows = {(r["method"], r["rel"]): r for r in prev["rows"]}
+    new_rows = {(r["method"], r["rel"]): r for r in new["rows"]}
+    for key in sorted(prev_rows.keys() | new_rows.keys()):
+        if key not in new_rows:
+            print(f"  note: row {key} vanished from the new run")
+            continue
+        if key not in prev_rows:
+            print(f"  note: row {key} is new in this run")
+            continue
+        p, n = prev_rows[key], new_rows[key]
+        if n["wall_us"] > ratio * p["wall_us"]:
+            regressions.append(
+                f"({key[0]}, rel={key[1]}) wall_us: "
+                f"{p['wall_us']:.0f} -> {n['wall_us']:.0f} "
+                f"({n['wall_us'] / p['wall_us']:.2f}x > {ratio}x)")
+        if not n.get("covered", True):
+            regressions.append(
+                f"({key[0]}, rel={key[1]}) covered=False "
+                f"(CI-contains-truth contract)")
+        if key[0] == "auto" and "within_best" in n:
+            if n["within_best"] > 1.5:
+                regressions.append(
+                    f"(auto, rel={key[1]}) within_best: "
+                    f"{n['within_best']:.2f}x > 1.5x (portfolio-race "
+                    f"contract)")
+            if n["resolved"] != "sampled" or not n.get("winner"):
+                regressions.append(
+                    f"(auto, rel={key[1]}) resolved={n['resolved']!r} "
+                    f"winner={n.get('winner')!r} (auto must certify via "
+                    f"a sampling lever at the tightest target)")
+    return regressions
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--run", action="store_true",
@@ -231,12 +283,19 @@ def main() -> int:
                     help="gate BENCH_serving.json (the gateway store-"
                          "hit latency trajectory) instead of the "
                          "kernel one")
+    ap.add_argument("--estimator", action="store_true",
+                    help="gate BENCH_estimator.json (the per-method "
+                         "time-vs-accuracy frontier trajectory) "
+                         "instead of the kernel one")
     args = ap.parse_args()
-    if sum((args.scheduler, args.allk, args.serving)) > 1:
-        ap.error("--scheduler/--allk/--serving are mutually exclusive")
+    if sum((args.scheduler, args.allk, args.serving,
+            args.estimator)) > 1:
+        ap.error("--scheduler/--allk/--serving/--estimator are "
+                 "mutually exclusive")
 
     trajectory = (SCHED_TRAJECTORY if args.scheduler else
-                  SERVING_TRAJECTORY if args.serving else TRAJECTORY)
+                  SERVING_TRAJECTORY if args.serving else
+                  ESTIMATOR_TRAJECTORY if args.estimator else TRAJECTORY)
     if args.run:
         env = dict(os.environ)
         env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep + \
@@ -245,6 +304,8 @@ def main() -> int:
                 "--distributed"]
                if args.scheduler else
                ["-m", "benchmarks.gateway_load"] if args.serving else
+               ["-m", "benchmarks.estimator_accuracy"]
+               if args.estimator else
                ["-m", "benchmarks.allk_profile"] if args.allk else
                ["-m", "benchmarks.kernels_bench"])
         print(f"running {cmd[1]} ...", flush=True)
@@ -257,7 +318,8 @@ def main() -> int:
     with open(trajectory) as f:
         full_history = json.load(f)
     history = full_history
-    if not args.scheduler and not args.serving:
+    if not args.scheduler and not args.serving \
+            and not args.estimator:
         # BENCH_kernels.json interleaves kernel and allk_profile
         # records; compare like against like (untagged = kernels)
         want = "allk_profile" if args.allk else "kernels"
@@ -282,6 +344,7 @@ def main() -> int:
           f"{prev.get('ran_at')} ({len(new['rows'])} rows)")
     gate = (compare_scheduler if args.scheduler else
             compare_serving if args.serving else
+            compare_estimator if args.estimator else
             compare_allk if args.allk else compare)
     regressions = gate(prev, new,
                        args.ratio if same_machine else float("inf"))

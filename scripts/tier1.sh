@@ -35,6 +35,11 @@ python -m repro.launch.count --graph corpus:planted_32_6_7 --k 3,4,5 \
 python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
     --rel-error 0.1 --assert-golden
 
+# wedge-lever smoke: the single-lever adaptive run must certify the
+# same golden-CI contract on the graph wedge sampling is built to win
+python -m repro.launch.count --graph corpus:planted_1200_12_16_40 --k 5 \
+    --method wedge --rel-error 0.1 --assert-golden
+
 # out-of-core scheduler smoke: 4 workers over spilled shard slices with
 # an injected task fault (retried) AND a forced straggler (speculated —
 # both asserted by the launcher), still reproducing the golden count

@@ -537,6 +537,9 @@ def tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
     """Extract + (optionally sample) + count one tile. Returns (B,) f32
     per-node *rescaled* estimates. Unjitted: the local backend jits it
     as ``_count_tile``; the shard_map workers fold it under lax.map."""
+    if method == "wedge":   # static → resolved at trace time
+        return wedge_tile_values(csr, nodes, key, capacity=capacity,
+                                 n_iters=n_iters, r=r, samples=c)
     A, _ = extract_adjacency(csr, nodes, capacity=capacity, n_iters=n_iters)
     deg = csr.out_deg[jnp.maximum(nodes, 0)]
     A, scale = apply_sampling(A, nodes, deg, key, method=method, r=r,
@@ -570,6 +573,9 @@ def bits_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
     uint32 bitset rows, mask in the packed domain, count with
     AND+popcount. Bit-exact vs the dense path (both count integers in
     f32); the tile it materializes is B·D²/8 bytes instead of 4·B·D²."""
+    if method == "wedge":   # representation-free: no adjacency to pack
+        return wedge_tile_values(csr, nodes, key, capacity=capacity,
+                                 n_iters=n_iters, r=r, samples=c)
     bits, _ = extract_adjacency_bits(csr, nodes, capacity=capacity,
                                      n_iters=n_iters)
     deg = csr.out_deg[jnp.maximum(nodes, 0)]
@@ -671,6 +677,63 @@ def subset_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
     w = jnp.prod(jnp.maximum(d[:, None] - i, 1.0)
                  / jnp.maximum(s[:, None] - i, 1.0), axis=1)
     return jnp.where(nodes >= 0, counts * w, 0.0)
+
+
+def wedge_tile_values(csr: DeviceCSR, nodes: jax.Array, key: jax.Array, *,
+                      capacity: int, n_iters: int, r: int,
+                      samples) -> jax.Array:
+    """Wedge sampling (Kolda et al.) generalized to r ≥ 2: per unit u,
+    draw ``samples`` uniform r-subsets of Γ⁺(u) and close each against
+    the packed adjacency — X_u = C(d_u, r) · closed/samples. A uniform
+    r-subset is a clique with probability q_{u,r}/C(d_u, r), so X_u is
+    unbiased; r = 2 is literally the paper's wedge-closure check (u is
+    the wedge center, the pair its endpoints).
+
+    Unlike every other sampled path this never materializes the (D, D)
+    adjacency — cost per unit is O(samples · (capacity + r²·n_iters)),
+    independent of d², which is exactly why it wins on degree-skewed
+    graphs where the dense tile of a few huge units dominates.
+
+    ``samples`` is traced (it rides the session's ``c`` operand), and
+    the draw loop is a ``fori_loop`` with a traced bound — so one
+    compiled executable per (capacity, r) serves the whole samples×2
+    escalation ladder, like p/c for the mask estimators.
+
+    Returns (B,) f32 rescaled per-node estimates, like ``tile_values``.
+    """
+    nb, in_row = gather_neighbors(csr, nodes, capacity=capacity)
+    B = nodes.shape[0]
+    ks = _per_node_keys(key, nodes)
+    tri = jnp.triu(jnp.ones((r, r), bool), 1)[None]
+
+    def draw(t, hits):
+        kt = jax.vmap(lambda k: jax.random.fold_in(k, t))(ks)
+        scores = jax.vmap(
+            lambda k: jax.random.uniform(k, (capacity,)))(kt)
+        scores = jnp.where(in_row, scores, jnp.inf)
+        # bottom-r scores = a uniform r-subset of the real neighbors;
+        # re-sorting the positions keeps rows rank-ordered so the
+        # pairwise check below stays strictly upper-triangular
+        _, idx = jax.lax.top_k(-scores, r)
+        idx = jnp.sort(idx, axis=1)
+        sub = jnp.take_along_axis(nb, idx, axis=1)
+        sub = jnp.where(jnp.take_along_axis(in_row, idx, axis=1),
+                        sub, -1)
+        x = jnp.broadcast_to(sub[:, :, None], (B, r, r))
+        y = jnp.broadcast_to(sub[:, None, :], (B, r, r))
+        ok = edge_lookup(csr, jnp.where(tri, x, -1), y, n_iters) | ~tri
+        closed = jnp.all(ok, axis=(1, 2)) & jnp.all(sub >= 0, axis=1)
+        return hits + closed.astype(jnp.float32)
+
+    S = jnp.asarray(samples, jnp.int32)
+    hits = jax.lax.fori_loop(0, S, draw, jnp.zeros((B,), jnp.float32))
+    d = csr.out_deg[jnp.maximum(nodes, 0)].astype(jnp.float32)
+    i = jnp.arange(r, dtype=jnp.float32)[None, :]
+    # C(d, r) = (d)_r / r!  (zero where d < r — those units hold nothing)
+    w = jnp.prod(jnp.maximum(d[:, None] - i, 0.0), axis=1) \
+        / np.float32(np.prod(np.arange(1, r + 1)))
+    est = w * hits / jnp.maximum(S.astype(jnp.float32), 1.0)
+    return jnp.where(nodes >= 0, est, 0.0)
 
 
 _TILE_STATICS = ("capacity", "n_iters", "r", "method", "engine")

@@ -34,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from ..core.compat import shard_map
+from ..core.compat import shard_map, shard_map_unchecked
 from ..core.count import (_bits_profile_tile, _bits_split_tile, _bits_tile,
                           _count_tile, _pick_tile_b, _profile_tile,
                           _split_batches, _split_tile, _tile_batches,
@@ -295,13 +295,18 @@ class ShardMapBackend(Backend):
     def n_workers(self) -> int:
         return self.mesh.shape[self.axis]
 
-    def _wrap(self, body, n_arrays: int):
+    def _wrap(self, body, n_arrays: int, check_rep: bool = True):
         """jit(shard_map(body)): csr replicated, stacked work arrays
-        sharded over the workers axis, (key, p, c) replicated."""
+        sharded over the workers axis, (key, p, c) replicated.
+        ``check_rep=False`` is for bodies carrying a ``fori_loop`` (the
+        wedge kernel's sample loop), which the static replication
+        checker cannot type — the psum'd scalar is replicated either
+        way."""
         in_specs = ((P(),) + (P(self.axis, None),) * n_arrays
                     + (P(), P(), P()))
-        return jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
-                                 out_specs=P()))
+        smap = shard_map if check_rep else shard_map_unchecked
+        return jax.jit(smap(body, mesh=self.mesh, in_specs=in_specs,
+                            out_specs=P()))
 
     def run(self, eng, entry, req, key):
         W = self.n_workers
@@ -333,7 +338,8 @@ class ShardMapBackend(Backend):
                     _worker_bucket_sum, capacity=sb.capacity,
                     n_iters=eng.og.lookup_iters, r=r, method=method,
                     tile_b=sb.tile_b, axis=self.axis,
-                    tile_repr=sb.tile_repr), n_arrays=1))
+                    tile_repr=sb.tile_repr), n_arrays=1,
+                    check_rep=method != "wedge"))
             total += float(fn(eng.csr, sb.nodes, key, p, c))
         for ss in sharded.splits:
             fn = eng.executables.get(

@@ -239,7 +239,11 @@ class CliqueEngine:
         self.estimator_policy = None   # None → estimator.DEFAULT_POLICY
         self.adaptive_stats = {"queries": 0, "sampled": 0,
                                "fallthroughs": 0, "escalations": 0,
-                               "replicates": 0}
+                               "replicates": 0, "winners": {}}
+        # sparsified child sessions, LRU-keyed (q, seed): one DOULION
+        # replicate = one exact count on a child graph, and adjacent
+        # requests (sweeps, repeated queries) reuse the child's CSR
+        self._sparsify_children: dict[tuple, "CliqueEngine"] = {}
         self._fingerprint: Optional[str] = None
         self._closed = False
         self._close_hooks: list[Callable[["CliqueEngine"], None]] = []
@@ -274,6 +278,9 @@ class CliqueEngine:
         for hook in self._close_hooks:
             hook(self)
         self._close_hooks.clear()
+        for child in self._sparsify_children.values():
+            child.close()
+        self._sparsify_children.clear()
         self._plans.clear()
         self._backends.clear()
         self.executables = ExecutableCache()
@@ -318,6 +325,50 @@ class CliqueEngine:
         self._plans[key] = entry
         return entry, False
 
+    def _sparsify_child(self, q: float, seed: int) -> "CliqueEngine":
+        """The (q, seed)-sparsified child session: each edge of the
+        session graph survives with probability q under a host-side
+        counter-based mask that depends only on (seed, q, graph) — the
+        same child on every backend, so sparsified estimates are
+        bit-identical across local/pallas/shard_map/ooc. A tiny LRU
+        keeps recent children's CSRs resident (one per replicate seed)."""
+        key = (float(q), int(seed))
+        child = self._sparsify_children.pop(key, None)
+        if child is None:
+            g = self.graph
+            rng = np.random.default_rng([int(seed), 0x5BA12F])
+            keep = rng.random(len(g.edges)) < float(q)
+            from ..graphs.formats import from_edges
+            child = CliqueEngine(
+                from_edges(g.edges[keep], n=g.n,
+                           name=f"{g.name}~sparsify(q={q:g},s={seed})"),
+                backend=self.default_backend, mesh=self._mesh,
+                axis=self._axis, local_tile_budget=self._local_budget,
+                dist_tile_budget=self._dist_budget, ooc=self._ooc_cfg)
+        self._sparsify_children[key] = child    # (re)insert most-recent
+        while len(self._sparsify_children) > 4:
+            oldest = next(iter(self._sparsify_children))
+            self._sparsify_children.pop(oldest).close()
+        return child
+
+    def _run_sparsify(self, req: CountRequest, backend: Backend
+                      ) -> tuple[float, Optional[np.ndarray], dict]:
+        """One direct DOULION estimate: exact count on the (q, seed)
+        child, rescaled by q^{−C(k,2)} (each of the C(k,2) clique edges
+        survives independently with probability q)."""
+        q = float(req.p)                   # slot-reuse: p carries q
+        child = self._sparsify_child(q, req.seed)
+        crep = child.submit(dataclasses.replace(req, method="exact",
+                                                rel_error=None))
+        scale = q ** -(req.k * (req.k - 1) / 2.0)
+        per_node = (None if crep.per_node is None
+                    else np.asarray(crep.per_node, np.float64) * scale)
+        tel = {"q": q, "seed": req.seed, "scale": scale,
+               "kept_edges": int(child.og.m),
+               "total_edges": int(self.og.m),
+               "child_count": crep.estimate}
+        return crep.estimate * scale, per_node, tel
+
     def warm_plan(self, plan: Plan,
                   splits: Sequence[SplitPlan] = ()) -> None:
         """Seed the plan cache with an externally built plan (legacy
@@ -344,7 +395,7 @@ class CliqueEngine:
 
         h0, m0 = self.executables.snapshot()
         t1 = time.perf_counter()
-        adaptive_info = None
+        adaptive_info = sparsify_tel = None
         cliques = listing_stats = None
         profile = allk_tel = None
         if req.k == "all":
@@ -358,6 +409,12 @@ class CliqueEngine:
             from ..estimator import run_adaptive
             estimate, per_node, adaptive_info = run_adaptive(
                 self, backend, entry, req, self.estimator_policy)
+        elif req.effective_method == "sparsify":
+            # DOULION: count exactly on a sparsified child session and
+            # rescale — no tile kernel involvement, so any backend
+            # (including bitset tiles and ooc) works unchanged
+            estimate, per_node, sparsify_tel = self._run_sparsify(
+                req, backend)
         else:
             key = jax.random.PRNGKey(req.seed)
             estimate, per_node = backend.run(self, entry, req, key)
@@ -393,6 +450,8 @@ class CliqueEngine:
         tel = backend.pop_telemetry()
         if tel is not None:
             report.cache["scheduler"] = tel
+        if sparsify_tel is not None:
+            report.cache["sparsify"] = sparsify_tel
         if profile is not None:
             report.profile = profile
             report.cache["allk"] = allk_tel

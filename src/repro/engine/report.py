@@ -7,18 +7,22 @@ answer to the seed API's fork into ``CountResult`` (single host) vs
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import numpy as np
 
 from ..core import mrc as mrc_mod
+from ..estimator.methods import DEPRECATED_STRINGS, from_string
 
-METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "auto")
+METHODS = ("exact", "edge", "color", "color_smooth", "ni++", "wedge",
+           "sparsify", "auto")
 BACKENDS = ("local", "pallas", "shard_map", "ooc")
 # listing streams tiles through in-memory emit kernels; the ooc backend
 # trades that residency away for bounded memory, so it only counts
 LISTING_BACKENDS = ("local", "pallas", "shard_map")
-ADAPTIVE_METHODS = ("auto", "edge", "color")   # may carry a rel_error target
+# methods that may carry a rel_error target (the portfolio controller)
+ADAPTIVE_METHODS = ("auto", "edge", "color", "wedge", "sparsify")
 TILE_ENGINES = ("auto", "dense", "bitset")     # tile representation choice
 MODES = ("count", "list")                      # scalar answer vs enumeration
 
@@ -48,9 +52,21 @@ class CountRequest:
     via ``CliqueEngine.stream`` (bounded memory) or ``submit``
     (materialized ``report.cliques``).
 
-    Accuracy-targeted queries: ``method="auto"`` (or ``"edge"``/``"color"``
-    with ``rel_error`` set) hands the query to the adaptive controller in
-    :mod:`repro.estimator`, which escalates sampling until the confidence
+    Methods: ``method`` accepts a typed spec from
+    :mod:`repro.estimator.methods` — ``Exact()``, ``EdgeSample(p=...)``,
+    ``ColorCoding(colors=...)``, ``WedgeSample(samples=...)``,
+    ``Sparsify(q=...)``, ``Auto(rel_error=..., confidence=...)`` — or a
+    method string. A spec is normalized into the legacy knob fields at
+    construction (knob slot-reuse: wedge's ``samples`` rides ``colors``,
+    sparsify's ``q`` rides ``p``), so a spec and the legacy spelling it
+    replaces produce the *same* ``query_key`` and hit the same persisted
+    store entries. Legacy strings other than ``"exact"`` and the new
+    canonical ``"wedge"``/``"sparsify"`` emit a ``DeprecationWarning``.
+
+    Accuracy-targeted queries: ``method="auto"`` (or any method in
+    ``ADAPTIVE_METHODS`` with ``rel_error`` set) hands the query to the
+    portfolio controller in :mod:`repro.estimator`, which races the
+    method portfolio and escalates the winner until the confidence
     interval half-width is within ``rel_error``·estimate at ``confidence``
     — or falls through to exact counting when the work model says exact
     is cheaper. For these requests ``p``/``colors``/``seed`` stop being
@@ -84,6 +100,28 @@ class CountRequest:
     # all-k (k="all") only: cap the profile at q_max_k (and the device
     # recursion depth at max_k − 1)
     max_k: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        # typed MethodSpec normalization: a spec collapses into its
+        # canonical method string + the knob fields it pins, so every
+        # downstream consumer (dispatch, traced operands, query_key)
+        # sees exactly what the legacy spelling produced. Duck-typed on
+        # request_kwargs() rather than isinstance to keep this module
+        # importable without the estimator package's class objects.
+        m = self.method
+        if not isinstance(m, str):
+            object.__setattr__(self, "method", m.method)
+            for field, value in m.request_kwargs().items():
+                # a None knob (e.g. Auto's rel_error default) pins
+                # nothing — it must not clobber an explicit kwarg
+                if value is not None:
+                    object.__setattr__(self, field, value)
+        elif m in DEPRECATED_STRINGS:
+            warnings.warn(
+                f"method={m!r} as a string is deprecated; pass the typed "
+                f"spec repro.estimator.{type(from_string(m)).__name__}"
+                f"(...) instead (identical query_key — persisted results "
+                f"still hit)", DeprecationWarning, stacklevel=3)
 
     def validate(self) -> None:
         if self.k == "all":
@@ -123,6 +161,20 @@ class CountRequest:
             raise ValueError(f"unknown method {self.method!r}")
         if self.method == "ni++" and self.k != 3:
             raise ValueError("NI++ is a triangle-counting baseline (k=3)")
+        if self.method == "wedge":
+            if self.colors < 1:
+                # slot-reuse: colors carries the per-unit draw count
+                raise ValueError(f"wedge sampling needs ≥ 1 draw per "
+                                 f"unit, got samples={self.colors}")
+            if self.split_threshold is not None:
+                raise ValueError(
+                    "the §6 split round has no wedge sampling path (its "
+                    "units would be counted exactly, silently mixing "
+                    "estimators) — drop split_threshold for wedge")
+        if self.method == "sparsify" and not 0.0 < self.p <= 1.0:
+            # slot-reuse: p carries the edge keep-rate q
+            raise ValueError(f"sparsify keeps each edge with probability "
+                             f"q ∈ (0, 1], got q={self.p}")
         if self.backend is not None and self.backend not in BACKENDS:
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.engine not in TILE_ENGINES:
@@ -196,9 +248,19 @@ class CountRequest:
         """True when the query is accuracy-targeted and must be driven by
         the :mod:`repro.estimator` controller rather than a single
         backend execution."""
-        return self.method == "auto" or (self.rel_error is not None
-                                         and self.method in ("edge",
-                                                             "color"))
+        return self.method == "auto" or (
+            self.rel_error is not None
+            and self.method in ("edge", "color", "wedge", "sparsify"))
+
+    @property
+    def spec(self):
+        """The typed :class:`~repro.estimator.methods.MethodSpec` this
+        request's (method, knobs) resolve to. Derived, never stored —
+        ``dataclasses.replace`` on knob fields can't leave a stale spec
+        behind."""
+        return from_string(self.method, p=self.p, colors=self.colors,
+                           rel_error=self.rel_error,
+                           confidence=self.confidence)
 
     def plan_key(self) -> tuple:
         # k-agnostic: one plan (built at the k=3 eligibility reference)
@@ -252,6 +314,14 @@ class CountRequest:
         else:
             p, colors, seed = self.p, self.colors, self.seed
             target = None
+            # slot-reuse normalization: every legacy or typed spelling of
+            # the same answer maps to one durable key. Wedge never reads
+            # p (its kernel has no pair mask) and sparsify never reads
+            # colors, so pin the dead slot to its no-op value.
+            if self.method == "wedge":
+                p = 1.0
+            elif self.method == "sparsify":
+                colors = 1
         # listing: the answer is the clique set up to (limit, predicate).
         # chunk is pure batching (same cliques at any chunk) and stays
         # out; predicates coalesce by identity — the same callable object

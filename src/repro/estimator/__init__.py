@@ -1,0 +1,42 @@
+"""Accuracy-targeted estimation: a typed method portfolio behind
+``CountRequest(method=...)``.
+
+The package splits along the controller's own seams:
+
+- :mod:`repro.estimator.methods` — the typed :class:`MethodSpec`
+  registry (``EdgeSample``, ``ColorCoding``, ``WedgeSample``,
+  ``Sparsify``, ``Auto``, …) that ``CountRequest`` normalizes into its
+  legacy knob fields, plus the deprecation shims for legacy strings;
+- :mod:`repro.estimator.bounds` — Kruskal–Katona support bounds, the
+  empirical-Bernstein interval, and the :class:`EstimatorPolicy` knobs;
+- :mod:`repro.estimator.certificates` — the per-plan r=2 density pass
+  that classifies every work unit before any sampling;
+- :mod:`repro.estimator.levers` — one escalation lever per method
+  (edge/color masks, wedge sampling, edge sparsification), all
+  pricing work in one shared flop unit;
+- :mod:`repro.estimator.controller` — the portfolio race + escalation
+  loop behind ``method="auto"`` and every ``rel_error`` contract.
+
+Everything the engine, tests, and notebooks imported from the old flat
+``repro.estimator`` module is re-exported here unchanged.
+"""
+from .bounds import (DEFAULT_POLICY, EstimatorPolicy,  # noqa: F401
+                     empirical_bernstein, kruskal_katona_bound,
+                     replicates_to_target, _falling_comb,
+                     _replicates_to_target)
+from .certificates import _Certificates, _certificates  # noqa: F401
+from .controller import run_adaptive  # noqa: F401
+from .levers import (SparsifyLever, WedgeLever, _MaskLever,  # noqa: F401
+                     _accumulate, exact_flops)
+from .methods import (DEPRECATED_STRINGS, SPECS, Auto,  # noqa: F401
+                      ColorCoding, EdgeSample, Exact, MethodSpec,
+                      NIPlusPlus, Sparsify, WedgeSample, from_string)
+
+__all__ = [
+    "run_adaptive", "EstimatorPolicy", "DEFAULT_POLICY",
+    "empirical_bernstein", "kruskal_katona_bound", "replicates_to_target",
+    "exact_flops",
+    "MethodSpec", "Exact", "NIPlusPlus", "EdgeSample", "ColorCoding",
+    "WedgeSample", "Sparsify", "Auto", "SPECS", "DEPRECATED_STRINGS",
+    "from_string",
+]

@@ -1,0 +1,93 @@
+"""Concentration / extremal machinery shared by every estimator method:
+the Kruskal–Katona support bounds and the empirical-Bernstein interval,
+plus the controller policy knobs."""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorPolicy:
+    """Controller knobs (engine-wide; requests carry only the target)."""
+    default_rel_error: float = 0.05   # when method="auto" sets no target
+    pilot_replicates: int = 2         # replicates per new operating point
+    max_replicates_per_level: int = 24  # beyond this, escalate instead
+    init_kept: int = 8                # subset lever: starting capacity
+    init_p: float = 1.0 / 16.0        # edge lever: starting rate
+    init_colors: int = 16             # color lever: starting color count
+    init_samples: int = 64            # wedge lever: starting draw count
+    init_q: float = 0.5               # sparsify lever: starting keep rate
+    # the wedge lever's replicates are nearly free (no dense tile), and
+    # its EB range term only shrinks with R — so it earns a much higher
+    # replicate ceiling before escalating its draw count
+    wedge_max_replicates: int = 256
+    max_escalations: int = 16         # hard cap → exact fall-through
+    work_slack: float = 0.9           # sampled budget vs exact work
+
+
+DEFAULT_POLICY = EstimatorPolicy()
+
+
+def _falling_comb(n: np.ndarray, r: int) -> np.ndarray:
+    """C(n, r) for float arrays via falling factorials, 0 where n < r."""
+    out = np.ones_like(n, dtype=np.float64)
+    for i in range(r):
+        out *= np.maximum(n - i, 0.0)
+    return out / math.factorial(r)
+
+
+def kruskal_katona_bound(edges: np.ndarray, r: int) -> np.ndarray:
+    """Max number of r-cliques in any graph with ``edges`` edges: the
+    colex graphs are extremal, giving C(x, r) + C(j, r−1) for
+    e = C(x, 2) + j, 0 ≤ j < x."""
+    e = np.maximum(np.asarray(edges, np.float64), 0.0)
+    x = np.floor((1.0 + np.sqrt(1.0 + 8.0 * e)) / 2.0)
+    j = e - x * (x - 1.0) / 2.0
+    return _falling_comb(x, r) + _falling_comb(j, r - 1)
+
+
+def empirical_bernstein(X: np.ndarray, confidence: float, M: float
+                        ) -> tuple[float, float, float]:
+    """(estimate, half_width, V̂) for replicate matrix X of shape (R, n):
+    R independent replicates of the n per-node estimates, with certified
+    per-node support width ≤ M.
+
+    The variance of the total is the sum of per-node variances (per-node
+    keys decorrelate nodes), so V̂ pools (R−1) degrees of freedom from
+    every node. The range term uses the *certified* width M, not the
+    observed range — R lucky all-zero replicates of a rare-clique unit
+    cannot fake a tight interval. M = 0 means every unit is certified
+    deterministic and the interval honestly collapses to a point.
+
+    Estimators whose per-node values are *correlated* (a global edge
+    mask: sparsification) must not feed per-node columns here — they
+    pass replicate totals as an (R, 1) matrix with the certified total
+    width, trading degrees of freedom for honesty.
+    """
+    R = X.shape[0]
+    est = float(X.sum(axis=1).mean())
+    V = float(X.var(axis=0, ddof=1).sum()) if R > 1 else float("inf")
+    L = math.log(3.0 / max(1.0 - confidence, 1e-12))
+    if not np.isfinite(V):
+        return est, float("inf"), V
+    hw = math.sqrt(2.0 * V * L / R) + 3.0 * M * L / max(R - 1, 1)
+    return est, hw, V
+
+
+def replicates_to_target(V: float, M: float, confidence: float,
+                         target_hw: float) -> int:
+    """Smallest R with sqrt(2VL/R) + 3ML/(R−1) ≤ target (solve the
+    quadratic in 1/sqrt(R), then pay the −1 back)."""
+    if target_hw <= 0.0 or not np.isfinite(V):
+        return 1 << 30
+    L = math.log(3.0 / max(1.0 - confidence, 1e-12))
+    a, b = math.sqrt(2.0 * V * L), 3.0 * M * L
+    root = (a + math.sqrt(a * a + 4.0 * target_hw * b)) / (2.0 * target_hw)
+    return max(1, int(math.ceil(root * root)) + 1)
+
+
+# backward-compatible private alias (pre-package name)
+_replicates_to_target = replicates_to_target

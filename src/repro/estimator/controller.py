@@ -1,0 +1,325 @@
+"""The portfolio controller behind accuracy-targeted queries.
+
+The paper's headline claim for the sampling algorithms is "very accurate
+solutions with high probability" — but SI_k/SIC_k make the *user* pick
+the operating point (``p`` / ``colors``) blind. The controller closes
+the loop the way Kolda et al. do for wedge sampling: the caller states
+an accuracy contract ("q_k within 5% relative error at 99% confidence")
+and the controller finds the cheapest method *and* operating point that
+meets it.
+
+How it works
+------------
+1. **Density certificates** — one cheap per-node edge count over the
+   cached plan (the r=2 tile, reusing the session's executables)
+   classifies every unit (complete / zero / stochastic) before any
+   sampling and prices each portfolio method upfront: a starting level
+   (prescreen), a certified support width, an analytic variance proxy,
+   and a projected work figure in one shared flop unit
+   (:func:`repro.estimator.levers.exact_flops` is the common
+   denominator).
+2. **Portfolio race** — methods are ranked by projected work; the two
+   cheapest candidates that fit the budget run a small measured pilot
+   (wall-clocked replicates). A pilot that already certifies the
+   contract wins outright; otherwise the winner is the candidate with
+   the smallest projected *remaining* wall, carrying its pilot
+   replicates forward so the race costs nothing extra.
+3. **Confidence interval** — per-node sampling keys make per-node
+   estimates independent across nodes *and* replicates, so
+   ``Var(total) = Σ_u Var(X_u)`` pools thousands of degrees of freedom
+   from a 2-replicate pilot. The half-width is empirical-Bernstein
+
+       hw = sqrt(2·V̂·L/R) + 3·M·L/max(R−1, 1),  L = ln(3/(1−confidence))
+
+   with M the *certified* support width, never the observed range.
+   Levers whose per-node values are correlated (sparsification's global
+   edge mask) declare ``ci_mode="total"`` and get the bound on replicate
+   totals instead — honest at the price of degrees of freedom.
+4. **Escalation** — while the CI misses the target, the controller adds
+   replicates up to the lever's ceiling (wedge replicates are nearly
+   free and earn a much higher one), else escalates the winner's level
+   geometrically: ``p``×2, ``colors``÷2, kept-capacity×2, draws×2,
+   keep-rate → 1.
+5. **Exact fall-through** — before every spend the controller consults
+   the shared work model; once projected sampled work passes the exact
+   plan cost it runs the exact query and reports a zero-width interval.
+   Tiny graphs and rare-count targets resolve exact — "auto" degrades
+   to correctness, never to a wrong bar.
+
+Every query reports ``ci_low``/``ci_high``/``achieved_rel_error``/
+``escalations`` plus an ``estimator`` telemetry dict whose
+``portfolio`` entry records the full decision — per-method certificates,
+pilot walls, the winner, and the escalation path — so ``gw.stats()``
+and the CLI can explain *why* a method was chosen. See
+``docs/estimator.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from .bounds import (DEFAULT_POLICY, EstimatorPolicy, empirical_bernstein,
+                     replicates_to_target)
+from .certificates import _certificates
+from .levers import (SparsifyLever, WedgeLever, _MaskLever,
+                     exact_flops)
+
+
+def _interval(lever, X: list, conf: float, M: float):
+    """EB interval respecting the lever's CI mode: per-node columns for
+    independent-unit levers, replicate totals (R, 1) for correlated
+    ones."""
+    A = np.stack(X)
+    if lever.ci_mode == "total":
+        A = A.sum(axis=1, keepdims=True)
+    return empirical_bernstein(A, conf, M)
+
+
+def _prescreen(lever, cert, rel: float, L: float,
+               policy: EstimatorPolicy):
+    """Pick the coarsest level whose EB range floor could possibly
+    certify the target, priced against the certificates' structural
+    lower bound on q_k before any replicate runs. Levers whose width
+    bound does not shrink with the level (wedge: support is C(d, r) at
+    every draw count) keep their start — their floor moves with R, not
+    the level, and escalating upfront would just burn the ladder."""
+    start = lever.start_level()
+    if cert.det_lower <= 0.0:
+        return start
+    floor_target = rel * max(cert.det_lower, 1.0)
+    last, prev_w = start, None
+    for level, _ in zip(lever.levels(start),
+                        range(policy.max_escalations + 1)):
+        if lever.is_exact(level):
+            break
+        w = lever.width_bound(level)
+        floor = 3.0 * w * L / max(policy.pilot_replicates - 1, 1)
+        if floor <= floor_target:
+            return level
+        if prev_w is not None and w >= prev_w:
+            return start
+        prev_w, last = w, level
+    return last
+
+
+def _portfolio(eng, backend, entry, req, r: int, cert,
+               policy: EstimatorPolicy) -> list:
+    """The levers competing for this request: the full portfolio for
+    "auto", the single named lever otherwise (legacy edge/color adaptive
+    behavior is exactly the one-lever race)."""
+    choice = req.engine
+    if req.method == "auto":
+        # every registered sampled method competes; the race below
+        # pilots only the cheapest candidates the budget admits
+        return [_MaskLever(eng, backend, entry, req, cert, policy,
+                           method="edge"),
+                _MaskLever(eng, backend, entry, req, cert, policy,
+                           method="color"),
+                WedgeLever(eng, backend, entry, r, cert, policy, choice),
+                SparsifyLever(eng, backend, entry, req, r, cert, policy)]
+    if req.method == "wedge":
+        return [WedgeLever(eng, backend, entry, r, cert, policy, choice)]
+    if req.method == "sparsify":
+        return [SparsifyLever(eng, backend, entry, req, r, cert, policy)]
+    return [_MaskLever(eng, backend, entry, req, cert, policy)]
+
+
+def run_adaptive(eng, backend, entry, req,
+                 policy: Optional[EstimatorPolicy] = None
+                 ) -> tuple[float, Optional[np.ndarray], dict]:
+    """Drive one accuracy-targeted query on an engine session. Returns
+    ``(estimate, per_node, info)``; ``info`` carries the CI fields and
+    controller telemetry the engine folds into the CountReport."""
+    policy = policy or DEFAULT_POLICY
+    if not isinstance(req.k, int):
+        # CountRequest.validate rejects k="all" adaptive requests before
+        # the engine dispatches here; keep the guard anyway so a caller
+        # reaching the controller directly gets an answerable error, not
+        # a type crash on r = k − 1 below
+        raise ValueError('adaptive queries target one q_k; k="all" is '
+                         "exact-only")
+    if backend.name not in ("local", "pallas"):
+        raise ValueError("adaptive (accuracy-targeted) queries need the "
+                         "per-node replicate structure; use the local or "
+                         "pallas backend")
+    rel = req.rel_error if req.rel_error is not None \
+        else policy.default_rel_error
+    conf = req.confidence
+    r = req.k - 1
+    L = math.log(3.0 / max(1.0 - conf, 1e-12))
+    cert = _certificates(eng, backend, entry, r, req.engine)
+    levers = _portfolio(eng, backend, entry, req, r, cert, policy)
+    exact_work = exact_flops(eng, entry, r)
+    budget = policy.work_slack * exact_work
+    base_key = jax.random.PRNGKey(req.seed)
+    spent, esc, reps_total = 0.0, 0, 0
+    stats = getattr(eng, "adaptive_stats", None)
+    if stats is not None:
+        stats["queries"] += 1
+
+    # -- upfront certificates: one per lever, shared flop units ---------
+    certs = []
+    for lv in levers:
+        level = _prescreen(lv, cert, rel, L, policy)
+        certs.append({
+            "lever": lv.name, "level": level,
+            "width_bound": lv.width_bound(level),
+            "var_proxy": lv.var_proxy(level),
+            "cost_per_replicate": lv.cost(level),
+            "fixed_cost": lv.fixed_cost(level),
+            "projected_replicates": replicates_to_target(
+                lv.var_proxy(level), lv.width_bound(level), conf,
+                rel * max(cert.det_lower, 1.0)),
+            "exact_at_start": lv.is_exact(level),
+        })
+        certs[-1]["projected_work"] = (
+            certs[-1]["fixed_cost"]
+            + certs[-1]["projected_replicates"]
+            * certs[-1]["cost_per_replicate"])
+    order = sorted(range(len(levers)),
+                   key=lambda i: (certs[i]["exact_at_start"],
+                                  certs[i]["projected_work"]))
+    path: list[dict] = []
+    portfolio = {"certificates": certs, "pilot": [], "winner": None,
+                 "ranking": [levers[i].name for i in order],
+                 "path": path}
+
+    def info(resolved: str, level, est: float, hw: float,
+             lv=None) -> dict:
+        achieved = hw / max(abs(est), 1.0)
+        name = lv.name if lv is not None else levers[order[0]].name
+        if stats is not None:
+            stats["escalations"] += esc
+            stats["replicates"] += reps_total
+            stats["sampled" if resolved == "sampled"
+                  else "fallthroughs"] += 1
+            if resolved == "sampled":
+                wins = stats.setdefault("winners", {})
+                wins[name] = wins.get(name, 0) + 1
+        return {
+            "resolved": resolved, "lever": name, "level": level,
+            "ci_low": est - hw, "ci_high": est + hw,
+            "achieved_rel_error": achieved, "escalations": esc,
+            "replicates": reps_total, "rel_error_target": rel,
+            "confidence": conf, "spent_work": spent,
+            "exact_work": exact_work, "portfolio": portfolio,
+        }
+
+    def fall_through() -> tuple[float, Optional[np.ndarray], dict]:
+        child = dataclasses.replace(req, method="exact", rel_error=None)
+        est, per_node = backend.run(eng, entry, child, base_key)
+        return est, per_node, info("exact", None, est, 0.0)
+
+    def run_replicate(X: list, lv, level) -> None:
+        nonlocal spent, reps_total
+        key = jax.random.fold_in(base_key, reps_total)
+        X.append(lv.replicate(level, key))
+        reps_total += 1
+        spent += lv.cost(level)
+
+    # -- pilot race: wall-clock the cheapest candidates -----------------
+    max_race = 2 if req.method == "auto" else 1
+    raced: list[tuple] = []       # (i, level, X, wall_per_rep, est, hw)
+    winner: Optional[tuple] = None
+    for i in order:
+        if len(raced) >= max_race:
+            break
+        lv, c = levers[i], certs[i]
+        if c["exact_at_start"]:
+            continue              # its ladder starts exact: no pilot
+        if spent + c["fixed_cost"] \
+                + policy.pilot_replicates * c["cost_per_replicate"] \
+                > budget:
+            portfolio["pilot"].append({"lever": lv.name,
+                                       "skipped": "budget"})
+            continue
+        spent += lv.fixed_cost(c["level"])
+        X: list[np.ndarray] = []
+        t0 = time.perf_counter()
+        for _ in range(policy.pilot_replicates):
+            run_replicate(X, lv, c["level"])
+        wall = time.perf_counter() - t0
+        M = lv.width_bound(c["level"])
+        est, hw, V = _interval(lv, X, conf, M)
+        need = replicates_to_target(V, M, conf, rel * max(abs(est), 1.0))
+        portfolio["pilot"].append({
+            "lever": lv.name, "level": c["level"], "wall": wall,
+            "estimate": est, "half_width": hw,
+            "projected_replicates": need,
+        })
+        rec = (i, c["level"], X, wall / max(policy.pilot_replicates, 1),
+               est, hw)
+        raced.append(rec)
+        if hw <= rel * max(abs(est), 1.0):
+            winner = rec          # pilot already certifies: race over
+            break
+
+    if winner is None and raced:
+        def projected_wall(rec) -> float:
+            i, level, X, wall_per_rep, est, _ = rec
+            M = levers[i].width_bound(level)
+            _, _, V = _interval(levers[i], X, conf, M)
+            need = replicates_to_target(V, M, conf,
+                                        rel * max(abs(est), 1.0))
+            return wall_per_rep * max(need - len(X), 1)
+        winner = min(raced, key=projected_wall)
+    if winner is None:
+        return fall_through()
+    lv = levers[winner[0]]
+    portfolio["winner"] = lv.name
+
+    # -- drive the winner: add replicates, escalate, or fall through ----
+    def drive(lv, start, X0):
+        nonlocal esc, spent
+        X = X0
+        for level in lv.levels(start):
+            if esc >= policy.max_escalations or lv.is_exact(level):
+                return None
+            if X is None:
+                fixed = lv.fixed_cost(level)
+                if spent + fixed \
+                        + policy.pilot_replicates * lv.cost(level) \
+                        > budget:
+                    return None
+                spent += fixed
+                X = []
+                for _ in range(policy.pilot_replicates):
+                    run_replicate(X, lv, level)
+            M = lv.width_bound(level)
+            cap = lv.max_replicates(policy)
+            while True:
+                est, hw, V = _interval(lv, X, conf, M)
+                if hw <= rel * max(abs(est), 1.0):
+                    path.append({"lever": lv.name, "level": level,
+                                 "replicates": len(X),
+                                 "half_width": hw})
+                    return level, X, est, hw
+                need = replicates_to_target(V, M, conf,
+                                            rel * max(abs(est), 1.0))
+                if need > cap:
+                    break          # cheaper to escalate the lever
+                extra = need - len(X)
+                if extra <= 0:
+                    break
+                if spent + extra * lv.cost(level) > budget:
+                    return None
+                for _ in range(extra):
+                    run_replicate(X, lv, level)
+            path.append({"lever": lv.name, "level": level,
+                         "replicates": len(X), "half_width": hw})
+            esc += 1
+            X = None
+        return None                # not reached (levels infinite)
+
+    result = drive(lv, winner[1], winner[2])
+    if result is None:
+        return fall_through()
+    level, X, est, hw = result
+    per_node = (np.mean(np.stack(X), axis=0)
+                if req.return_per_node else None)
+    return est, per_node, info("sampled", level, est, hw, lv)

@@ -1,0 +1,360 @@
+"""Escalation levers: one per portfolio method.
+
+Every lever exposes the same protocol the controller drives:
+
+- ``levels(start)`` / ``start_level()`` / ``is_exact(level)`` — the
+  escalation ladder;
+- ``width_bound(level)`` — certified support width for the
+  empirical-Bernstein range term (per-node, or per-total for
+  ``ci_mode="total"`` levers);
+- ``var_proxy(level)`` — an upfront analytic variance certificate used
+  only to *rank* methods in the portfolio race, never for the CI;
+- ``cost(level)`` / ``fixed_cost(level)`` / ``exact_work()`` — the work
+  model, in one shared flop unit so projected work is comparable
+  *across* levers (the thing the portfolio ranks on);
+- ``replicate(level, key)`` — one independent replicate, returning the
+  (n,) per-node estimate vector;
+- ``max_replicates(policy)`` — per-method replicate ceiling before the
+  controller escalates the level instead;
+- ``ci_mode`` — ``"per_node"`` (independent per-node columns feed the
+  EB bound directly) or ``"total"`` (per-node values are correlated —
+  a global edge mask — so the CI is computed on replicate totals with
+  the certified total width; honest, fewer degrees of freedom).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.count import _tile_batches, dag_count_flops
+from .bounds import EstimatorPolicy, _falling_comb
+from .certificates import _Certificates
+from .methods import ColorCoding, EdgeSample
+
+
+def _accumulate(per_node: np.ndarray, vals, tile) -> None:
+    vals = np.asarray(jax.block_until_ready(vals), np.float64)
+    sel = tile >= 0
+    np.add.at(per_node, tile[sel], vals[sel])
+
+
+def _bucket_flops(cap: int, batch: int, S: int, n_iters: int,
+                  r: int) -> float:
+    """Subset-tile flop model for one bucket at kept capacity S."""
+    S = min(cap, S)
+    return (8.0 * batch * cap                     # score + select
+            + 4.0 * batch * S * S * n_iters       # pair lookups
+            + dag_count_flops(S, batch, r))       # count
+
+
+def exact_flops(eng, entry, r: int) -> float:
+    """The session's exact tile work in the shared flop unit — the
+    common denominator of every lever's budget and the portfolio's
+    projected-work ranking."""
+    n_iters = eng.og.lookup_iters
+    return sum(_bucket_flops(b.capacity, b.batch, b.capacity, n_iters, r)
+               for b in entry.plan.buckets)
+
+
+def _plan_parts(eng, entry, cert: _Certificates, r: int) -> tuple:
+    """Per-bucket split of the work: the certified-deterministic
+    per-node contribution (computed once, numpy) and the stochastic
+    node list a replicate actually has to sample — pure functions of
+    (plan, certificates, r), cached on the entry across queries."""
+    parts = entry._aux.get(("subset_parts", r))
+    if parts is None:
+        det_parts: dict[int, np.ndarray] = {}
+        stoch_nodes: dict[int, np.ndarray] = {}
+        det_all = np.zeros(eng.og.n, np.float64)
+        det_all[cert.complete] = _falling_comb(cert.deg[cert.complete], r)
+        for bi, b in enumerate(entry.plan.buckets):
+            real = b.nodes[b.nodes >= 0]
+            det = np.zeros(eng.og.n, np.float64)
+            det[real] = det_all[real]
+            det_parts[bi] = det
+            stoch = real[cert.stochastic[real]].astype(np.int32)
+            pad = (-len(stoch)) % 8
+            stoch_nodes[bi] = np.concatenate(
+                [stoch, np.full(pad, -1, np.int32)])
+        parts = entry._aux[("subset_parts", r)] = (det_parts, stoch_nodes)
+    return parts
+
+
+class _MaskLever:
+    """method="edge"/"color" with a rel_error target: escalate the
+    method's own knob through the standard masked tile path. ``p`` and
+    ``colors`` are traced, so every escalation reuses the session's
+    compiled executables — escalation recompiles nothing. The dense tile
+    cost does not shrink with the mask, so the work model prices
+    replicates by the paper's MRC round-3 volume shrink (the quantity
+    the sampling theorems actually buy) rather than by tile FLOPs."""
+
+    ci_mode = "per_node"
+
+    def __init__(self, eng, backend, entry, req, cert: _Certificates,
+                 policy: EstimatorPolicy, method: str = None) -> None:
+        self.eng, self.backend, self.entry = eng, backend, entry
+        self.req, self.cert, self.policy = req, cert, policy
+        # ``method`` names the mask when the lever competes inside the
+        # "auto" portfolio (req.method is "auto" there)
+        self.name = method or req.method
+        self.r = req.k - 1
+        self._exact = exact_flops(eng, entry, self.r)
+
+    def levels(self, start) -> Iterator[float]:
+        if self.name == "edge":
+            p = start
+            while True:
+                yield min(1.0, p)
+                p *= 2.0
+        else:
+            c = start
+            while True:
+                yield max(1, c)
+                c //= 2
+
+    def start_level(self):
+        return (self.policy.init_p if self.name == "edge"
+                else self.policy.init_colors)
+
+    def is_exact(self, level) -> bool:
+        return level >= 1.0 if self.name == "edge" else level <= 1
+
+    def max_replicates(self, policy: EstimatorPolicy) -> int:
+        return policy.max_replicates_per_level
+
+    def _scale(self, level) -> float:
+        """Largest per-node rescale factor the mask applies."""
+        r = self.r
+        if self.name == "edge":
+            return float(level) ** -(r * (r - 1) / 2.0)
+        return float(level) ** (r - 1)
+
+    def _unit_widths(self, level) -> np.ndarray:
+        """Every non-zero-certified unit is stochastic under a mask
+        (even a clique unit), with masked count ≤ its Kruskal–Katona
+        bound and rescale ≤ the mask's scale."""
+        c = self.cert
+        live = c.stochastic | c.complete
+        if not live.any():
+            return np.zeros(0, np.float64)
+        kk = np.where(c.complete, _falling_comb(c.deg, self.r), c.kk)
+        return kk[live] * self._scale(level)
+
+    def width_bound(self, level) -> float:
+        ws = self._unit_widths(level)
+        return float(ws.max()) if len(ws) else 0.0
+
+    def var_proxy(self, level) -> float:
+        ws = self._unit_widths(level)
+        return float(((ws / 2.0) ** 2).sum())
+
+    def _factor(self, level) -> float:
+        return float(level) if self.name == "edge" else 1.0 / float(level)
+
+    def cost(self, level) -> float:
+        return self._exact * self._factor(level)
+
+    def fixed_cost(self, level) -> float:
+        return 0.0
+
+    def exact_work(self) -> float:
+        return self._exact
+
+    def replicate(self, level, key: jax.Array) -> np.ndarray:
+        # rebuild via the typed spec: pins exactly the knob this mask
+        # reads, and internal replicates never trip the legacy-string
+        # deprecation shim
+        spec = (EdgeSample(p=float(level)) if self.name == "edge" else
+                ColorCoding(colors=int(level),
+                            smooth=self.name == "color_smooth"))
+        child = dataclasses.replace(self.req, rel_error=None,
+                                    return_per_node=True, method=spec)
+        _, per_node = self.backend.run(self.eng, self.entry, child, key)
+        return per_node
+
+
+class WedgeLever:
+    """method="wedge": escalate the per-unit draw count S. The kernel
+    (:func:`repro.core.count.wedge_tile_values`) never materializes the
+    dense tile, so replicates cost O(S·capacity) per stochastic unit —
+    independent of d², which is why this lever dominates on
+    degree-skewed graphs. Certified-complete units are deterministic
+    under wedge draws too (every r-subset of a clique closes), so a
+    replicate samples only the stochastic tail.
+
+    There is no exact endpoint on this ladder (X_u has support width
+    C(d_u, r) at every S), so escalation ends via the replicate budget
+    /fall-through, and the lever earns ``policy.wedge_max_replicates``:
+    its EB range term shrinks only with R, and its replicates are nearly
+    free."""
+
+    name = "wedge"
+    ci_mode = "per_node"
+
+    def __init__(self, eng, backend, entry, r: int, cert: _Certificates,
+                 policy: EstimatorPolicy, choice: str = "auto") -> None:
+        self.eng, self.backend, self.entry, self.r = eng, backend, entry, r
+        self.kind = backend.kind
+        self.cert = cert
+        self.policy = policy
+        self.choice = choice
+        self._det_parts, self._stoch_nodes = _plan_parts(eng, entry, cert,
+                                                         r)
+        self._exact = exact_flops(eng, entry, r)
+
+    def levels(self, start: int) -> Iterator[int]:
+        S = start
+        while True:
+            yield S
+            S *= 2
+
+    def start_level(self) -> int:
+        return self.policy.init_samples
+
+    def is_exact(self, S: int) -> bool:
+        return False
+
+    def max_replicates(self, policy: EstimatorPolicy) -> int:
+        return max(policy.wedge_max_replicates,
+                   policy.max_replicates_per_level)
+
+    def _stoch_combs(self) -> np.ndarray:
+        c = self.cert
+        return _falling_comb(c.deg[c.stochastic], self.r)
+
+    def width_bound(self, S: int) -> float:
+        """X_u = C(d_u, r)·closed/S ∈ [0, C(d_u, r)] regardless of S —
+        the draw count shrinks the variance, never the support."""
+        cd = self._stoch_combs()
+        return float(cd.max()) if len(cd) else 0.0
+
+    def var_proxy(self, S: int) -> float:
+        """Var(X_u) = C(d,r)²·π(1−π)/S with π = q_{u,r}/C(d,r) ≤
+        kk_u/C(d,r), so Var ≤ C(d,r)·kk_u/S, summed over stochastic
+        units."""
+        c = self.cert
+        cd = self._stoch_combs()
+        if not len(cd):
+            return 0.0
+        return float((cd * c.kk[c.stochastic]).sum() / max(S, 1))
+
+    def _bucket_flops(self, cap: int, batch: int, S: int) -> float:
+        n_iters = self.eng.og.lookup_iters
+        return float(S) * batch * (10.0 * cap
+                                   + 4.0 * self.r * self.r * n_iters)
+
+    def cost(self, S: int) -> float:
+        return sum(self._bucket_flops(b.capacity,
+                                      len(self._stoch_nodes[bi]), S)
+                   for bi, b in enumerate(self.entry.plan.buckets))
+
+    def fixed_cost(self, S: int) -> float:
+        return 0.0
+
+    def exact_work(self) -> float:
+        return self._exact
+
+    def replicate(self, S: int, key: jax.Array) -> np.ndarray:
+        from ..engine.backends import tile_executable
+        eng, r, kind = self.eng, self.r, self.kind
+        per_node = np.zeros(eng.og.n, np.float64)
+        for bi, b in enumerate(self.entry.plan.buckets):
+            per_node += self._det_parts[bi]
+            nodes = self._stoch_nodes[bi]
+            if not len(nodes):
+                continue
+            # the representation choice is moot (no adjacency tile);
+            # "bits" keeps the cache key aligned with the backends'
+            fn = tile_executable(eng, kind, "bits", b.capacity, r,
+                                 "wedge")
+            # byte-account the gather/score transients, not a D² tile
+            for tile in _tile_batches(nodes, b.capacity,
+                                      self.backend.budget,
+                                      unit_bytes=16 * b.capacity + 64):
+                _accumulate(per_node,
+                            fn(eng.csr, jnp.asarray(tile), key, p=1.0,
+                               c=S), tile)
+        return per_node
+
+
+class SparsifyLever:
+    """method="sparsify": escalate the edge keep-rate q toward 1. Each
+    replicate counts exactly on a freshly sparsified child graph
+    (through the engine's normal pipeline) and rescales by q^{−C(k,2)}.
+
+    Honesty note: one replicate uses ONE global edge mask, so per-node
+    counts are positively associated (an FKG inequality — surviving
+    cliques share surviving edges) and the per-node EB variance would
+    understate the truth. ``ci_mode="total"`` routes the CI through
+    replicate totals with the certified total width
+    q^{−C(k,2)}·det_upper instead — honest, but with only (R−1) degrees
+    of freedom the lever usually prices itself out of the portfolio and
+    exists mostly as the *direct* ``Sparsify(q=...)`` method, whose
+    unbiasedness the calibration tier checks statistically."""
+
+    name = "sparsify"
+    ci_mode = "total"
+
+    def __init__(self, eng, backend, entry, req, r: int,
+                 cert: _Certificates, policy: EstimatorPolicy) -> None:
+        self.eng, self.backend, self.entry = eng, backend, entry
+        self.req, self.cert, self.policy = req, cert, policy
+        self.r = r
+        self.k = r + 1
+        self._exact = exact_flops(eng, entry, r)
+
+    def levels(self, start: float) -> Iterator[float]:
+        q = start
+        while True:
+            yield min(q, 1.0)
+            q = 1.0 - (1.0 - q) / 2.0
+
+    def start_level(self) -> float:
+        return self.policy.init_q
+
+    def is_exact(self, q: float) -> bool:
+        return q >= 0.999
+
+    def max_replicates(self, policy: EstimatorPolicy) -> int:
+        return policy.max_replicates_per_level
+
+    def _scale(self, q: float) -> float:
+        return float(q) ** -(self.k * (self.k - 1) / 2.0)
+
+    def width_bound(self, q: float) -> float:
+        """Certified width of the replicate TOTAL: the child count is at
+        most the certified ceiling on q_k, rescaled."""
+        return self._scale(q) * self.cert.det_upper
+
+    def var_proxy(self, q: float) -> float:
+        """Per surviving clique the rescaled indicator has variance
+        ≈ scale − 1; ≤ det_upper cliques (covariance ignored — this is
+        the DOULION ranking certificate, not the CI)."""
+        return self.cert.det_upper * max(self._scale(q) - 1.0, 0.0)
+
+    def cost(self, q: float) -> float:
+        """Exact work on the child graph: edge survival thins every
+        Γ⁺(u) by ~q (plan/CSR rebuild overhead not modeled)."""
+        return self._exact * float(q)
+
+    def fixed_cost(self, q: float) -> float:
+        return 0.0
+
+    def exact_work(self) -> float:
+        return self._exact
+
+    def replicate(self, q: float, key: jax.Array) -> np.ndarray:
+        from ..engine.report import CountRequest
+        data = np.asarray(jax.random.key_data(key)).ravel()
+        seed = int(data[-1]) & 0x7FFFFFFF
+        child = self.eng._sparsify_child(float(q), seed)
+        rep = child.submit(CountRequest(
+            k=self.k, method="exact", backend=self.backend.name,
+            engine=self.req.engine, return_per_node=True))
+        return np.asarray(rep.per_node, np.float64) * self._scale(q)

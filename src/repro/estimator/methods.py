@@ -1,0 +1,186 @@
+"""Typed method specs: the registry behind ``CountRequest(method=...)``.
+
+The legacy interface was a string plus a soup of loose knobs —
+``CountRequest(method="color", colors=10, p=0.1, rel_error=...)`` — in
+which nothing says *which* knobs the method actually reads. A
+:class:`MethodSpec` names them:
+
+    CountRequest(k=5, method=EdgeSample(p=0.5))
+    CountRequest(k=5, method=WedgeSample(samples=128))
+    CountRequest(k=4, method=Sparsify(q=0.25))
+    CountRequest(k=5, method=Auto(rel_error=0.05, confidence=0.99))
+
+``CountRequest`` normalizes a spec into its legacy knob fields at
+construction (see ``request_kwargs``), so everything downstream — the
+engine dispatch, the traced ``p``/``c`` tile operands, ``query_key`` —
+is unchanged, and a spec resolves to the *same* durable store key as
+the legacy spelling it replaces. Legacy method strings keep working via
+deprecation shims on ``CountRequest``.
+
+Knob slot-reuse (deliberate, keyed into the store contract): wedge
+sampling's ``samples`` rides the request's ``colors`` field and
+sparsification's ``q`` rides ``p`` — both travel to every backend on
+the already-traced ``c``/``p`` tile operands, so no backend (local,
+pallas, shard_map, ooc) needed a plumbing change to learn the new
+methods, and the 13-slot ``query_key`` layout (hashed by the PR 8
+result store) is untouched.
+
+This module is import-cycle free: it knows nothing about the engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+class MethodSpec:
+    """Base of every typed method spec.
+
+    Subclasses set ``method`` (the canonical engine method string) and
+    override :meth:`request_kwargs` to name the ``CountRequest`` fields
+    they pin. Specs are frozen dataclasses: hashable, comparable,
+    printable — fit for test parametrization and telemetry.
+    """
+
+    method = "exact"
+
+    def request_kwargs(self) -> dict:
+        """CountRequest field values this spec pins (knob slot-reuse
+        included: e.g. ``WedgeSample.samples`` maps to ``colors``)."""
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Exact(MethodSpec):
+    """Exact counting (the default; never deprecated as a string)."""
+
+    method = "exact"
+
+
+@dataclasses.dataclass(frozen=True)
+class NIPlusPlus(MethodSpec):
+    """The NI++ triangle baseline (k=3 only; exact tile path)."""
+
+    method = "ni++"
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSample(MethodSpec):
+    """SE_k: Bernoulli(p) pair mask, rescale p^{-C(k-1,2)}."""
+
+    p: float = 0.1
+
+    method = "edge"
+
+    def request_kwargs(self) -> dict:
+        return {"p": self.p}
+
+
+@dataclasses.dataclass(frozen=True)
+class ColorCoding(MethodSpec):
+    """SIC_k: monochromatic-pair mask with ``colors`` colors
+    (``smooth=True`` is the §5.1 degree-smoothed variant)."""
+
+    colors: int = 10
+    smooth: bool = False
+
+    @property
+    def method(self) -> str:
+        return "color_smooth" if self.smooth else "color"
+
+    def request_kwargs(self) -> dict:
+        return {"colors": self.colors}
+
+
+@dataclasses.dataclass(frozen=True)
+class WedgeSample(MethodSpec):
+    """Wedge sampling (Kolda et al.), generalized to any k: per unit u,
+    ``samples`` uniform (k−1)-subsets of Γ⁺(u) are closed against the
+    adjacency; X_u = C(d_u, k−1)·closed/samples. Never materializes the
+    dense tile, so it wins exactly where exact counting is hardest —
+    degree-skewed graphs. ``samples`` rides the request's ``colors``
+    slot (see the module docstring)."""
+
+    samples: int = 64
+
+    method = "wedge"
+
+    def request_kwargs(self) -> dict:
+        return {"colors": self.samples}
+
+
+@dataclasses.dataclass(frozen=True)
+class Sparsify(MethodSpec):
+    """DOULION-style edge sparsification (Tsourakakis et al.): keep
+    each edge with probability ``q``, count exactly on the sparsified
+    graph through the normal engine pipeline (any backend, including
+    bitset and ooc), rescale by q^{−C(k,2)}. ``q`` rides the request's
+    ``p`` slot (see the module docstring)."""
+
+    q: float = 0.5
+
+    method = "sparsify"
+
+    def request_kwargs(self) -> dict:
+        return {"p": self.q}
+
+
+@dataclasses.dataclass(frozen=True)
+class Auto(MethodSpec):
+    """Accuracy contract: the adaptive controller races the method
+    portfolio and escalates the winner until the empirical-Bernstein CI
+    half-width is within ``rel_error``·estimate at ``confidence`` (or
+    falls through to exact when that is provably cheaper).
+    ``rel_error=None`` uses the engine's :class:`EstimatorPolicy`
+    default."""
+
+    rel_error: Optional[float] = None
+    confidence: float = 0.99
+
+    method = "auto"
+
+    def request_kwargs(self) -> dict:
+        return {"rel_error": self.rel_error,
+                "confidence": self.confidence}
+
+
+# legacy method strings that still work on CountRequest but emit a
+# DeprecationWarning ("exact" stays warning-free — it is the field
+# default and would fire on every construction; "wedge"/"sparsify" are
+# new and canonical in both spellings)
+DEPRECATED_STRINGS = ("edge", "color", "color_smooth", "ni++", "auto")
+
+SPECS = {
+    "exact": Exact,
+    "ni++": NIPlusPlus,
+    "edge": EdgeSample,
+    "color": ColorCoding,
+    "color_smooth": ColorCoding,
+    "wedge": WedgeSample,
+    "sparsify": Sparsify,
+    "auto": Auto,
+}
+
+
+def from_string(method: str, *, p: float = 0.1, colors: int = 10,
+                rel_error: Optional[float] = None,
+                confidence: float = 0.99) -> MethodSpec:
+    """Build the canonical spec for a legacy (method, knobs) spelling —
+    the migration shim the CLI and ``CountRequest.spec`` use. Raises
+    ``ValueError`` on unknown names."""
+    if method not in SPECS:
+        raise ValueError(f"unknown method {method!r}; "
+                         f"one of {tuple(SPECS)}")
+    if method == "exact":
+        return Exact()
+    if method == "ni++":
+        return NIPlusPlus()
+    if method == "edge":
+        return EdgeSample(p=p)
+    if method in ("color", "color_smooth"):
+        return ColorCoding(colors=colors, smooth=method == "color_smooth")
+    if method == "wedge":
+        return WedgeSample(samples=colors)
+    if method == "sparsify":
+        return Sparsify(q=p)
+    return Auto(rel_error=rel_error, confidence=confidence)

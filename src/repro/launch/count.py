@@ -222,11 +222,17 @@ def main() -> int:
                          "recursion depth) at q_max_k")
     ap.add_argument("--method", default="exact",
                     help="exact | edge | color | color_smooth | ni++ | "
-                         "auto, or comma list (crossed with every k); "
-                         "auto picks the sampling operating point to "
-                         "meet --rel-error/--confidence")
+                         "wedge | sparsify | auto, or comma list (crossed "
+                         "with every k); auto races the method portfolio "
+                         "to meet --rel-error/--confidence")
     ap.add_argument("--p", type=float, default=0.1)
     ap.add_argument("--colors", type=int, default=10)
+    ap.add_argument("--samples", type=int, default=None,
+                    help="--method wedge: uniform (k-1)-subset draws per "
+                         "work unit (default 64)")
+    ap.add_argument("--q", type=float, default=None,
+                    help="--method sparsify: edge keep-rate in (0, 1] "
+                         "(default 0.5)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--rel-error", type=float, default=None,
                     help="accuracy target: estimate within this relative "
@@ -384,20 +390,35 @@ def main() -> int:
         listing_kw = dict(mode="list", limit=args.limit,
                           chunk=(args.chunk if args.chunk is not None
                                  else 1 << 16))
-    reqs = [CountRequest(
-        **listing_kw,
-        k=k, max_k=args.max_k if k == "all" else None,
-        method=m, p=args.p, colors=args.colors, seed=args.seed,
-        engine=tile_engine,
-        # the accuracy target rides only the methods that can adapt, so
-        # e.g. --method auto,exact --rel-error 0.05 compares the
-        # controller against the exact baseline in one sweep
-        rel_error=args.rel_error if m in ADAPTIVE_METHODS else None,
-        confidence=args.confidence,
-        split_threshold=args.split_threshold or None,
-        return_per_node=args.per_node and backend != "shard_map")
-        for k in ks for m in methods]
-    try:  # validate the whole sweep before any work runs
+
+    from ..estimator import from_string
+
+    def _spec(m: str):
+        """Typed MethodSpec for one --method entry: the CLI speaks the
+        new registry (no deprecated strings), with --samples/--q routed
+        to the methods that read them."""
+        return from_string(
+            m,
+            p=(args.q if m == "sparsify" and args.q is not None
+               else args.p),
+            colors=(args.samples if m == "wedge"
+                    and args.samples is not None else args.colors),
+            rel_error=args.rel_error, confidence=args.confidence)
+
+    try:  # resolve + validate the whole sweep before any work runs
+        reqs = [CountRequest(
+            **listing_kw,
+            k=k, max_k=args.max_k if k == "all" else None,
+            method=_spec(m), p=args.p, colors=args.colors,
+            seed=args.seed, engine=tile_engine,
+            # the accuracy target rides only the methods that can adapt,
+            # so e.g. --method auto,exact --rel-error 0.05 compares the
+            # controller against the exact baseline in one sweep
+            rel_error=args.rel_error if m in ADAPTIVE_METHODS else None,
+            confidence=args.confidence,
+            split_threshold=args.split_threshold or None,
+            return_per_node=args.per_node and backend != "shard_map")
+            for k in ks for m in methods]
         for r in reqs:
             r.validate()
     except ValueError as e:
@@ -496,6 +517,19 @@ def main() -> int:
             row["achieved_rel_error"] = rep.achieved_rel_error
             row["escalations"] = rep.escalations
             row["resolved"] = rep.params["resolved"]
+            port = (rep.estimator or {}).get("portfolio")
+            if port is not None:
+                # why this method won: certificate ranking + pilot walls
+                row["portfolio"] = {
+                    "winner": port["winner"],
+                    "ranking": port["ranking"],
+                    "lever": rep.estimator["lever"],
+                    "level": rep.estimator["level"],
+                    "pilot": port["pilot"],
+                }
+        tel_sp = rep.cache.get("sparsify")
+        if tel_sp is not None:
+            row["sparsify"] = tel_sp
         if rep.cliques is not None:
             row["listing"] = rep.listing
             row["cliques_head"] = \

@@ -171,6 +171,7 @@ class CliqueService:
         self.adaptive_executed = 0     # accuracy-targeted queries served
         self.adaptive_escalations = 0  # controller escalations across them
         self.adaptive_fallthroughs = 0  # resolved exact by the work model
+        self.adaptive_winners: dict[str, int] = {}  # portfolio lever → wins
         self.cancelled = 0             # tickets withdrawn pre-execution
         self.cancelled_jobs = 0        # jobs skipped: every waiter gone
         self.report_hook_errors = 0    # on_report raised (query unaffected)
@@ -343,6 +344,10 @@ class CliqueService:
                         self.adaptive_escalations += report.escalations
                         if report.estimator["resolved"] == "exact":
                             self.adaptive_fallthroughs += 1
+                        else:
+                            lever = report.estimator.get("lever", "?")
+                            self.adaptive_winners[lever] = \
+                                self.adaptive_winners.get(lever, 0) + 1
                 self._fulfill(job, report, session)
             except Exception as exc:
                 self._fulfill(job, None, session, exc)
@@ -469,6 +474,7 @@ class CliqueService:
                     "executed": self.adaptive_executed,
                     "escalations": self.adaptive_escalations,
                     "fallthroughs": self.adaptive_fallthroughs,
+                    "winners": dict(self.adaptive_winners),
                 },
                 "pool": self.pool.stats(),
             }

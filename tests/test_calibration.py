@@ -21,7 +21,10 @@ import os
 
 import pytest
 
+import numpy as np
+
 from repro.engine import CliqueEngine, CountRequest
+from repro.estimator import Auto, Sparsify
 from repro.graphs import conformance_corpus
 
 FIXTURE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -59,12 +62,16 @@ def engines():
     return get
 
 
-def _run_case(engines, golden, name, k, rel, conf, seeds):
+def _run_case(engines, golden, name, k, rel, conf, seeds, method="auto"):
     eng = engines(name)
     truth = golden[name]["counts"][str(k)]
     covered = honest = sampled = 0
+    # "auto" goes through the typed spec (canonical spelling); "wedge"
+    # and "sparsify" are adaptive single-lever runs via rel_error
+    spec = Auto(rel_error=rel, confidence=conf) if method == "auto" \
+        else method
     for seed in seeds:
-        rep = eng.submit(CountRequest(k=k, method="auto", rel_error=rel,
+        rep = eng.submit(CountRequest(k=k, method=spec, rel_error=rel,
                                       confidence=conf, seed=seed))
         covered += rep.ci_low <= truth <= rep.ci_high
         err = abs(rep.estimate - truth)
@@ -97,3 +104,51 @@ def test_smoke_includes_a_genuinely_sampled_case(engines, golden):
 def test_calibration_full_sweep(engines, golden, name, k, rel, conf):
     """≥200 seeds per case (disjoint from the smoke's seed range)."""
     _run_case(engines, golden, name, k, rel, conf, range(100, 300))
+
+
+# ---------------- per-method contracts (portfolio levers) ----------------
+
+# single-lever adaptive runs: the named lever must honor the same
+# coverage/honesty contract as auto (falling through to exact where it
+# cannot certify is the honest answer and counts toward both)
+METHOD_CASES = [
+    ("wedge", "planted_1200_12_16_40", 5, 0.10, 0.9),
+    ("wedge", "ba_n64_k6", 4, 0.25, 0.9),
+    ("sparsify", "er_n48_p0.25", 4, 0.50, 0.9),
+]
+
+
+@pytest.mark.parametrize("method,name,k,rel,conf", METHOD_CASES)
+def test_method_calibration_smoke_20_seeds(engines, golden, method, name,
+                                           k, rel, conf):
+    _run_case(engines, golden, name, k, rel, conf, range(20),
+              method=method)
+
+
+def test_wedge_actually_samples_on_the_planted_graph(engines, golden):
+    """Wedge must be able to *certify* (not just fall through) where it
+    is built to win — the degree-skewed planted graph."""
+    sampled = _run_case(engines, golden, "planted_1200_12_16_40", 5,
+                        0.10, 0.9, range(5), method="wedge")
+    assert sampled == 5
+
+
+def test_sparsify_direct_is_unbiased(engines, golden):
+    """E[q^{-C(k,2)}·count(G_q)] = count(G): the mean of direct (non-
+    adaptive) sparsified estimates over seeds must sit within a few
+    standard errors of the truth."""
+    eng = engines("er_n48_p0.25")
+    truth = golden["er_n48_p0.25"]["counts"]["3"]
+    ests = [eng.submit(CountRequest(k=3, method=Sparsify(q=0.7),
+                                    seed=s)).estimate
+            for s in range(40)]
+    mean, se = np.mean(ests), np.std(ests) / np.sqrt(len(ests))
+    assert abs(mean - truth) <= 6.0 * se + 1e-9, (mean, truth, se)
+
+
+@pytest.mark.stat
+@pytest.mark.parametrize("method,name,k,rel,conf", METHOD_CASES)
+def test_method_calibration_full_sweep(engines, golden, method, name, k,
+                                       rel, conf):
+    _run_case(engines, golden, name, k, rel, conf, range(100, 300),
+              method=method)

@@ -14,6 +14,8 @@ import pytest
 
 from repro.core import clique_count_bruteforce
 from repro.engine import BACKENDS, CliqueEngine, CountRequest
+from repro.estimator import (ColorCoding, EdgeSample, Sparsify,
+                             WedgeSample)
 from repro.graphs import conformance_corpus
 
 KS = (3, 4, 5)
@@ -76,12 +78,40 @@ def test_sampled_methods_agree_across_backends(corpus):
     g = corpus[1]   # the ER control
     eng = CliqueEngine(g)
     bf = clique_count_bruteforce(g, 4)
-    for method, kw in [("edge", {"p": 0.5}), ("color", {"colors": 3})]:
+    for method, kw in [(EdgeSample(p=0.5), {}),
+                       (ColorCoding(colors=3), {}),
+                       (WedgeSample(samples=32), {}),
+                       (Sparsify(q=0.7), {})]:
         ests = {b: eng.submit(CountRequest(k=4, method=method, seed=7,
                                            backend=b, **kw)).estimate
                 for b in BACKENDS}
-        assert len({round(e, 6) for e in ests.values()}) == 1, ests
-    assert eng.submit(CountRequest(k=4, method="edge", p=1.0,
+        assert len({round(e, 6) for e in ests.values()}) == 1, \
+            (method, ests)
+    assert eng.submit(CountRequest(k=4, method=EdgeSample(p=1.0),
                                    backend="shard_map")).count == bf
-    assert eng.submit(CountRequest(k=4, method="color", colors=1,
+    assert eng.submit(CountRequest(k=4, method=ColorCoding(colors=1),
                                    backend="pallas")).count == bf
+
+
+def test_sparsify_q1_is_exact_on_every_backend(corpus, oracle):
+    """q=1 keeps every edge: the sparsified child *is* the graph, so
+    the rescale is 1 and the count must equal the oracle bit-for-bit —
+    the degenerate end of the DOULION unbiasedness ladder."""
+    for g in corpus[:3]:
+        eng = CliqueEngine(g)
+        expected, _ = oracle[g.name][4]
+        for b in BACKENDS:
+            rep = eng.submit(CountRequest(k=4, method=Sparsify(q=1.0),
+                                          seed=11, backend=b))
+            assert rep.count == expected, (g.name, b)
+
+
+def test_wedge_adaptive_ci_contains_bruteforce(corpus, oracle):
+    """The wedge lever under a rel_error contract must report a CI that
+    contains the truth (or resolve exact, which trivially does)."""
+    g = corpus[0]
+    eng = CliqueEngine(g)
+    expected, _ = oracle[g.name][4]
+    rep = eng.submit(CountRequest(k=4, method=WedgeSample(samples=32),
+                                  rel_error=0.25, seed=3))
+    assert rep.ci_low <= expected <= rep.ci_high

@@ -176,19 +176,19 @@ def test_auto_never_subsamples_below_clique_size():
 
 def test_run_adaptive_reuses_certificates_and_exact_parts(big_planted):
     """Second auto query on a session recomputes neither the density
-    certificates nor the key-independent exact bucket partials."""
+    certificates nor the key-independent deterministic/stochastic node
+    split the wedge lever replicates over."""
     eng = CliqueEngine(big_planted)
     eng.submit(CountRequest(k=5, method="auto", rel_error=0.05, seed=0))
     # plans went k-agnostic in the all-k PR: keyed by plan_key() =
     # (max_capacity, split_threshold), not (k, ...)
     entry = eng._plans[(None, None)]
     assert "certificates" in entry._aux
-    n_keys = len(entry._aux["subset_exact"])
-    h0 = eng.executables.hits
+    assert ("subset_parts", 4) in entry._aux   # r = k - 1
+    m0, h0 = eng.executables.misses, eng.executables.hits
     eng.submit(CountRequest(k=5, method="auto", rel_error=0.05, seed=1))
-    assert len(entry._aux["subset_exact"]) == n_keys
     assert eng.executables.hits > h0          # compiled tiles reused
-    assert eng.executables.misses <= len(eng.executables)
+    assert eng.executables.misses == m0       # ... with nothing rebuilt
 
 
 # -- report / service plumbing --------------------------------------------

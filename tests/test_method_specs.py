@@ -1,0 +1,206 @@
+"""The typed MethodSpec registry and the API-redesign compatibility
+contract.
+
+Three promises are pinned here:
+
+- **Spec ↔ string equivalence** — every typed spec and its legacy
+  string spelling resolve to the *same* ``query_key``, so coalescing
+  and the persistent :class:`~repro.serving.store.ResultStore` treat
+  them as one answer. A literal key tuple is pinned for the slot-reuse
+  methods (wedge rides the ``colors`` slot, sparsify rides ``p``) so a
+  layout drift fails loudly instead of silently orphaning every stored
+  entry.
+- **Deprecation shims** — legacy strings still work but warn; typed
+  specs and the non-deprecated strings ("exact", "wedge", "sparsify")
+  stay silent.
+- **Store hit across the redesign** — an entry persisted by a
+  pre-portfolio client (legacy string + kwargs) must still be *hit* by
+  a typed-spec request after the redesign, byte-identical.
+"""
+import warnings
+
+import pytest
+
+from repro.engine import (CliqueEngine, CountRequest, graph_fingerprint)
+from repro.estimator import (Auto, ColorCoding, DEPRECATED_STRINGS,
+                             EdgeSample, Exact, NIPlusPlus, Sparsify,
+                             WedgeSample, from_string)
+from repro.graphs import barabasi_albert
+from repro.serving.store import ResultStore
+
+
+def _legacy(method, k=4, **kw):
+    """Build a legacy-string request with the shim warning silenced."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return CountRequest(k=k, method=method, **kw)
+
+
+# ---------------- spec <-> legacy string equivalence ----------------
+
+EQUIV = [
+    (Exact(), _legacy("exact"), {}),
+    (NIPlusPlus(), _legacy("ni++"), {}),
+    (EdgeSample(p=0.25), _legacy("edge", p=0.25), {}),
+    (ColorCoding(colors=5), _legacy("color", colors=5), {}),
+    (ColorCoding(colors=5, smooth=True),
+     _legacy("color_smooth", colors=5), {}),
+    (WedgeSample(samples=96), _legacy("wedge", colors=96), {}),
+    (Sparsify(q=0.4), _legacy("sparsify", p=0.4), {}),
+    (Auto(), _legacy("auto", rel_error=0.1), {"rel_error": 0.1}),
+    (Auto(rel_error=0.1, confidence=0.95),
+     _legacy("auto", rel_error=0.1, confidence=0.95), {}),
+]
+
+
+@pytest.mark.parametrize("spec,legacy,extra",
+                         EQUIV, ids=[type(s).__name__ + str(i)
+                                     for i, (s, _, _) in enumerate(EQUIV)])
+def test_spec_and_string_share_a_query_key(spec, legacy, extra):
+    typed = CountRequest(k=4, method=spec, **extra)
+    assert typed.query_key() == legacy.query_key()
+    assert typed.method == legacy.method
+
+
+def test_spec_roundtrips_through_request():
+    req = CountRequest(k=4, method=WedgeSample(samples=96))
+    assert isinstance(req.spec, WedgeSample)
+    assert req.spec.samples == 96
+    assert isinstance(CountRequest(k=4, method=Sparsify(q=0.4)).spec,
+                      Sparsify)
+
+
+def test_from_string_matches_specs_and_rejects_unknown():
+    assert from_string("wedge", colors=32) == WedgeSample(samples=32)
+    assert from_string("sparsify", p=0.3) == Sparsify(q=0.3)
+    with pytest.raises(ValueError, match="unknown method"):
+        from_string("frobnicate")
+
+
+def test_wedge_key_normalization_is_pinned():
+    """Every spelling of the same wedge query — typed, legacy colors
+    kwarg — lands on one literal durable key. The ``p`` slot is pinned
+    to its no-op value 1.0 (wedge has no pair mask), ``seed`` is kept.
+    Changing this tuple invalidates persisted stores: do it knowingly."""
+    pinned = (4, "wedge", 1.0, 64, 0, "local", "auto", False,
+              None, None, None, None, None)
+    assert CountRequest(k=4, method=WedgeSample(samples=64)).query_key() \
+        == pinned
+    assert _legacy("wedge", k=4, colors=64).query_key() == pinned
+    # p is a dead knob for wedge: it must not fork the key
+    assert _legacy("wedge", k=4, colors=64, p=0.125).query_key() == pinned
+
+
+def test_sparsify_key_normalization_pins_dead_colors_slot():
+    a = CountRequest(k=4, method=Sparsify(q=0.5)).query_key()
+    b = _legacy("sparsify", k=4, p=0.5, colors=999).query_key()
+    assert a == b and a[3] == 1     # colors slot pinned to no-op
+
+
+# ---------------- deprecation shims ----------------
+
+@pytest.mark.parametrize("name", DEPRECATED_STRINGS)
+def test_legacy_strings_warn(name):
+    kw = {"rel_error": 0.1} if name == "auto" else {}
+    with pytest.warns(DeprecationWarning, match="typed spec"):
+        CountRequest(k=4, method=name, **kw)
+
+
+@pytest.mark.parametrize("method", ["exact", "wedge", "sparsify",
+                                    EdgeSample(p=0.5), Auto()])
+def test_non_deprecated_spellings_stay_silent(method):
+    kw = ({"rel_error": 0.1}
+          if isinstance(method, Auto) or method in ("wedge", "sparsify")
+          else {})
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        CountRequest(k=4, method=method, **kw)
+
+
+# ---------------- validation of the new methods ----------------
+
+def test_wedge_rejects_split_threshold():
+    with pytest.raises(ValueError, match="wedge"):
+        CountRequest(k=4, method=WedgeSample(samples=8),
+                     split_threshold=8).validate()
+
+
+def test_sparsify_rejects_bad_q():
+    for q in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            CountRequest(k=4, method="sparsify", p=q).validate()
+
+
+# ---------------- store hit across the redesign ----------------
+
+@pytest.fixture(scope="module")
+def graph():
+    return barabasi_albert(80, 5, seed=2)
+
+
+@pytest.fixture(scope="module")
+def engine(graph):
+    return CliqueEngine(graph)
+
+
+def test_store_entry_written_with_legacy_kwargs_still_hits(tmp_path,
+                                                           engine, graph):
+    """The PR 8 compatibility promise: a ResultStore entry persisted by
+    a legacy-string client is *hit* by the typed-spec request after the
+    redesign — same durable key, same bytes back."""
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graph)
+    old = _legacy("color", k=3, colors=3, seed=7)     # pre-redesign client
+    rep = engine.submit(old)
+    assert store.put(fp, old, rep)
+    new = CountRequest(k=3, method=ColorCoding(colors=3), seed=7)
+    back = store.get(fp, new)
+    assert back is not None, "typed-spec request missed a legacy entry"
+    assert back.estimate == rep.estimate
+    assert store.stats()["hits"] == 1
+
+
+def test_store_hit_for_wedge_across_spellings(tmp_path, engine, graph):
+    store = ResultStore(str(tmp_path))
+    fp = graph_fingerprint(graph)
+    old = _legacy("wedge", k=3, colors=32, seed=5)
+    rep = engine.submit(old)
+    store.put(fp, old, rep)
+    back = store.get(fp, CountRequest(k=3, method=WedgeSample(samples=32),
+                                      seed=5))
+    assert back is not None and back.estimate == rep.estimate
+
+
+# ---------------- portfolio telemetry ----------------
+
+def test_auto_report_carries_the_portfolio_decision(engine):
+    """satellite (b): ``CountReport.estimator`` must explain the method
+    choice — per-lever certificates, pilot walls, ranking, winner, and
+    the escalation path — not just the resolved method."""
+    rep = engine.submit(CountRequest(k=4, method=Auto(), rel_error=0.5,
+                                     seed=3))
+    port = rep.estimator["portfolio"]
+    assert set(port) >= {"certificates", "pilot", "winner", "ranking",
+                         "path"}
+    names = {c["lever"] for c in port["certificates"]}
+    assert names >= {"edge", "color", "wedge", "sparsify"}
+    for cert in port["certificates"]:
+        assert {"level", "width_bound", "var_proxy", "cost_per_replicate",
+                "projected_work"} <= set(cert)
+    if rep.estimator["resolved"] == "sampled":
+        assert port["winner"] in names
+        assert any("wall" in p for p in port["pilot"])
+    stats = engine.session_stats()["estimator"]
+    assert isinstance(stats["winners"], dict)
+
+
+def test_adaptive_wedge_and_sparsify_accept_rel_error(engine):
+    """The controller races only the named lever for a non-auto method
+    (single-lever portfolio) and still honors the CI contract fields."""
+    for method in ("wedge", "sparsify"):
+        rep = engine.submit(CountRequest(k=3, method=method,
+                                         rel_error=0.5, seed=1))
+        assert rep.ci_low is not None and rep.ci_high is not None
+        assert rep.ci_low <= rep.estimate <= rep.ci_high
+        rank = rep.estimator["portfolio"]["ranking"]
+        assert method in rank or rep.estimator["resolved"] == "exact"
